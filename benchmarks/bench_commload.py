@@ -1,0 +1,56 @@
+"""Paper eq. (14)-(16): communication load of decentralized SSFN vs
+decentralized gradient descent, eta = n_l * I / (Q * K) >> 1.
+
+Also evaluates the ratio for each assigned architecture's readout
+dimensions (the framework-level generalization in repro.core.readout).
+"""
+from __future__ import annotations
+
+from benchmarks.common import ADMM_ITERS, csv_row
+
+# Paper-representative constants: gradient descent needs I iterations,
+# ADMM needs K; B cancels in the ratio (eq. 16).
+GD_ITERS = 5000      # "I is in order of thousands"
+K = ADMM_ITERS       # "K in order of hundreds" (paper uses 100)
+
+
+def eta(n_l: int, q: int, i_iters: int = GD_ITERS, k_iters: int = K) -> float:
+    return (n_l * i_iters) / (q * k_iters)
+
+
+def run(verbose: bool = True) -> list[str]:
+    rows = []
+    # Paper settings: n = 2Q + 1000.
+    for name, q in [("vowel", 11), ("satimage", 6), ("letter", 26), ("mnist", 10)]:
+        n = 2 * q + 1000
+        gd = n * n * GD_ITERS           # n_l * n_{l-1} * B * I  (per B)
+        dssfn = q * n * K               # Q * n_{l-1} * B * K    (per B)
+        rows.append(
+            csv_row(
+                f"eq16_{name}", 0.0,
+                f"n={n};Q={q};eta={eta(n, q):.0f};gd_scalars={gd};dssfn_scalars={dssfn}",
+            )
+        )
+        if verbose:
+            print(rows[-1], flush=True)
+    # Assigned architectures: readout (Q=vocab is the LM head — use the
+    # layer-wise readout of d_model features to #classes=32 probe tasks).
+    from repro.configs import ARCHS, get_config
+
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        n = cfg.d_model
+        q = 32  # probe-classification readout
+        rows.append(
+            csv_row(
+                f"eq16_{arch}", 0.0,
+                f"n={n};Q={q};eta={eta(n, q):.0f}",
+            )
+        )
+        if verbose:
+            print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

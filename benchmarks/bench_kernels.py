@@ -1,0 +1,70 @@
+"""Kernel microbenchmarks.
+
+On CPU the Pallas kernels execute in interpret mode (Python-level), so
+wall-times are NOT hardware-representative; what these benches establish
+is (a) the kernels run end-to-end under jit and (b) the pure-jnp oracle
+throughput baseline on this host.  On a TPU host the same harness times
+the compiled kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, timed
+from repro.kernels import (
+    flash_attention_ref, gram, gram_ref, matmul_relu_ref, ssm_scan_ref,
+)
+
+
+def _bench(fn, *args, repeat=3):
+    fn(*args)  # compile
+    best = float("inf")
+    for _ in range(repeat):
+        _, t = timed(fn, *args)
+        best = min(best, t)
+    return best * 1e6
+
+
+def run(verbose: bool = True) -> list[str]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # gram: oracle vs pallas-interpret (correctness-path timing)
+    y = jax.random.normal(key, (256, 1024), jnp.float32)
+    t_ref = _bench(jax.jit(lambda y: gram_ref(y, mu=0.1)), y)
+    flops = 2 * 256 * 256 * 1024
+    rows.append(csv_row("gram_ref_256x1024", t_ref, f"gflops={flops / t_ref / 1e3:.2f}"))
+    t_pal = _bench(lambda y: jax.block_until_ready(gram(y, mu=0.1)), y)
+    rows.append(csv_row("gram_pallas_interpret", t_pal, "interpret-mode,not-perf"))
+
+    # matmul_relu oracle
+    w = jax.random.normal(key, (512, 512), jnp.float32)
+    x = jax.random.normal(key, (512, 512), jnp.float32)
+    t = _bench(jax.jit(matmul_relu_ref), w, x)
+    rows.append(csv_row("matmul_relu_ref_512", t, f"gflops={2 * 512**3 / t / 1e3:.2f}"))
+
+    # flash attention oracle
+    q = jax.random.normal(key, (1, 4, 512, 64), jnp.float32)
+    t = _bench(jax.jit(lambda q: flash_attention_ref(q, q, q)), q)
+    rows.append(csv_row("flash_attn_ref_s512", t, "causal"))
+
+    # ssm scan oracle
+    b, s, h, dh, ds = 2, 512, 4, 32, 16
+    ks = jax.random.split(key, 5)
+    xs = jax.random.normal(ks[0], (b, s, h, dh))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bm = jax.random.normal(ks[3], (b, s, ds))
+    cm = jax.random.normal(ks[4], (b, s, ds))
+    t = _bench(jax.jit(lambda *a_: ssm_scan_ref(*a_, chunk=128)), xs, dt, a, bm, cm)
+    rows.append(csv_row("ssm_scan_ref_s512", t, "chunk=128"))
+
+    if verbose:
+        for r in rows:
+            print(r, flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv_row
+
+COLS = (
+    "arch,shape,mesh,status,compute_s,memory_s,collective_s,dominant,"
+    "model_flops,useful_ratio,peak_gb"
+)
+
+
+def load_results(path: str = "experiments/dryrun") -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def table(results: list[dict]) -> list[str]:
+    lines = [COLS]
+    for r in results:
+        if r.get("status", "").startswith("SKIP") or "roofline" not in r:
+            lines.append(
+                f"{r['arch']},{r['shape']},{r['mesh']},{r.get('status','?')},,,,,,,"
+            )
+            continue
+        ro = r["roofline"]
+        peak = r.get("memory", {}).get("peak_bytes_per_device", 0) / 1e9
+        lines.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},OK,"
+            f"{ro['compute_s']:.3e},{ro['memory_s']:.3e},{ro['collective_s']:.3e},"
+            f"{ro['dominant'].replace('_s','')},{ro['model_flops_per_device']:.3e},"
+            f"{ro['useful_flops_ratio']:.2f},{peak:.2f}"
+        )
+    return lines
+
+
+def run(verbose: bool = True) -> list[str]:
+    results = load_results()
+    lines = table(results)
+    ok = sum(1 for r in results if r.get("status") == "OK")
+    skip = sum(1 for r in results if str(r.get("status", "")).startswith("SKIP"))
+    fail = len(results) - ok - skip
+    rows = [csv_row("roofline_table", 0.0, f"ok={ok};skip={skip};fail={fail}")]
+    if verbose:
+        for line in lines:
+            print(line)
+        print(rows[0], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

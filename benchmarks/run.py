@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  - bench_equivalence : Table II  (centralized vs decentralized SSFN)
+  - bench_convergence : Fig. 3    (objective vs total ADMM iterations)
+  - bench_degree      : Fig. 4    (training time vs network degree)
+  - bench_commload    : eq. 14-16 (communication-load ratio eta)
+  - bench_robust      : beyond-paper: quantized/lossy/async consensus sweeps
+  - bench_kernels     : kernel micro-benches (oracle throughput on host)
+  - roofline          : aggregates the dry-run §Roofline table
+"""
+from __future__ import annotations
+
+import os
+
+
+def main() -> None:
+    os.makedirs("experiments", exist_ok=True)
+    from benchmarks import (
+        bench_commload,
+        bench_convergence,
+        bench_degree,
+        bench_equivalence,
+        bench_kernels,
+        bench_robust,
+        roofline,
+    )
+
+    print("name,us_per_call,derived")
+    for mod in (
+        bench_commload,
+        bench_kernels,
+        bench_equivalence,
+        bench_convergence,
+        bench_degree,
+        bench_robust,
+        roofline,
+    ):
+        mod.run(verbose=True)
+
+
+if __name__ == "__main__":
+    main()

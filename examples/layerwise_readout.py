@@ -1,0 +1,77 @@
+"""The paper's technique applied to a modern backbone: layer-wise convex
+readout learning (dSSFN's ADMM) over a FROZEN random transformer — no
+backpropagation anywhere, distributed across data-parallel workers.
+
+This is the framework-level generalization described in DESIGN.md §5:
+the transformer plays the role of SSFN's random matrices {R_l}; each
+layer's features get a convex readout solved by consensus ADMM.
+
+    PYTHONPATH=src python examples/layerwise_readout.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import admm
+from repro.core.readout import layerwise_backbone_fit
+from repro.models import build_model
+from repro.nn.layers import embed_lookup, rms_norm
+from repro.models import blocks
+
+
+def tap_layer_features(model, params, tokens):
+    """Per-layer hidden states of the frozen backbone."""
+    cfg = model.cfg
+    x = embed_lookup(params["embed"], tokens)
+    feats = [x]
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, layer_p):
+        x, _, _ = blocks.apply_transformer_layer(layer_p, x, positions, cfg, None)
+        return x, x
+
+    _, xs = jax.lax.scan(body, x, params["layers"])
+    feats.extend(xs[i] for i in range(xs.shape[0]))
+    return feats  # list of (B, S, d)
+
+
+def main():
+    cfg = get_config("stablelm_3b").reduced(layers=4, d_model=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))  # FROZEN random backbone
+
+    # Synthetic sequence-classification task: label = planted function of
+    # the token stream.
+    rng = np.random.default_rng(0)
+    b, s, q = 64, 32, 6
+    tokens = rng.integers(0, cfg.vocab_size, (b, s)).astype(np.int32)
+    labels = (tokens.sum(axis=1) + tokens[:, 0]) % q
+    t_onehot = jax.nn.one_hot(jnp.asarray(labels), q).T          # (Q, B)
+
+    feats = tap_layer_features(model, params, jnp.asarray(tokens))
+    # Mean-pool over the sequence -> one feature vector per example.
+    pooled = [f.mean(axis=1).T.astype(jnp.float32) for f in feats]  # (d, B)
+
+    fit = layerwise_backbone_fit(pooled, t_onehot, mu=1e-2, num_iters=80)
+    print("layer-wise readout costs (deeper taps should help):")
+    for i, c in enumerate(np.asarray(fit.layer_costs)):
+        pred = jnp.argmax(fit.readouts[i] @ pooled[i], axis=0)
+        acc = float((pred == jnp.asarray(labels)).mean())
+        print(f"  tap {i}: cost {float(c):8.2f}  train-acc {acc:.3f}")
+
+    # The same solve, decentralized over 4 workers with exact consensus —
+    # verifying centralized equivalence at the framework level.
+    y = pooled[-1]
+    m = 4
+    yw = y.reshape(y.shape[0], m, b // m).transpose(1, 0, 2)
+    tw = t_onehot.reshape(q, m, b // m).transpose(1, 0, 2)
+    res = admm.admm_ridge_consensus(yw, tw, mu=1e-2, eps_radius=2.0 * q, num_iters=200)
+    gap = float(jnp.linalg.norm(res.o_star - fit.readouts[-1])
+                / jnp.linalg.norm(fit.readouts[-1]))
+    print(f"decentralized(M=4) vs centralized readout gap: {gap:.2e}")
+    assert gap < 1e-2
+
+
+if __name__ == "__main__":
+    main()

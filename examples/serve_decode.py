@@ -1,0 +1,15 @@
+"""Serve a small model with batched requests: prefill + greedy decode for
+three architecture families (dense/SWA, xLSTM recurrent, Mamba2 hybrid).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch.serve import serve
+
+
+def main():
+    for arch in ("h2o_danube3_4b", "xlstm_350m", "zamba2_2_7b"):
+        serve(arch, batch=4, prompt_len=48, gen_len=16, reduced=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Minimal sharding-aware pytree checkpointing (npz-based).
+
+Arrays are gathered to host (fine at the example scale; a production
+deployment would swap in tensorstore/orbax behind the same interface).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves_with_paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    arrays = {}
+    meta = {}
+    for k, v in flat.items():
+        a = np.asarray(jax.device_get(v))
+        meta[k] = {"dtype": str(a.dtype), "shape": list(a.shape)}
+        if a.dtype.name == "bfloat16":  # npz has no bf16: store the bits
+            a = a.view(np.uint16)
+        arrays[k] = a
+    np.savez(path, **arrays)
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta, f)
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    npz_path = path if path.endswith(".npz") else path + ".npz"
+    data = np.load(npz_path)
+    with open(npz_path.removesuffix(".npz") + ".npz.meta.json") as f:
+        meta = json.load(f)
+    flat_like = _flatten_with_paths(like)
+    restored = {}
+    for key, leaf in flat_like.items():
+        arr = data[key]
+        if meta.get(key, {}).get("dtype") == "bfloat16":
+            import ml_dtypes
+
+            arr = arr.view(ml_dtypes.bfloat16)
+        restored[key] = jnp.asarray(arr, dtype=leaf.dtype)
+    # Rebuild in the structure of `like`.
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    keys = [
+        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        for path, _ in leaves_with_paths
+    ]
+    return jax.tree_util.tree_unflatten(treedef, [restored[k] for k in keys])

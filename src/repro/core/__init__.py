@@ -1,0 +1,12 @@
+"""Paper core: SSFN architecture + decentralized layer-wise ADMM learning."""
+from repro.core import admm, consensus, equivalence, layerwise, readout, ssfn, topology
+
+__all__ = [
+    "admm",
+    "consensus",
+    "equivalence",
+    "layerwise",
+    "readout",
+    "ssfn",
+    "topology",
+]

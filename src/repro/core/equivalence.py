@@ -1,0 +1,42 @@
+"""Centralized-equivalence metrics (the paper's headline claim).
+
+dSSFN with exact (or converged-gossip) consensus solves the *same* convex
+problem per layer as centralized SSFN, so — given the same shared random
+matrices {R_l} — the learned parameters and predictions must coincide up
+to ADMM convergence tolerance.  These helpers quantify that.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import ssfn as ssfn_lib
+
+
+class EquivalenceReport(NamedTuple):
+    max_readout_gap: float      # max_l ||O_l^cen - O_l^dec||_F / ||O_l^cen||_F
+    prediction_gap: float       # ||T_hat_cen - T_hat_dec||_F / ||T_hat_cen||_F
+    agreement: float            # fraction of identical argmax decisions
+
+
+def compare(
+    params_cen: ssfn_lib.SSFNParams,
+    params_dec: ssfn_lib.SSFNParams,
+    x: jnp.ndarray,
+    q: int,
+) -> EquivalenceReport:
+    gaps = []
+    for oc, od in zip(params_cen.o, params_dec.o):
+        gaps.append(
+            float(jnp.linalg.norm(oc - od) / jnp.maximum(jnp.linalg.norm(oc), 1e-12))
+        )
+    pred_c = ssfn_lib.predict(params_cen, x, q)
+    pred_d = ssfn_lib.predict(params_dec, x, q)
+    pgap = float(
+        jnp.linalg.norm(pred_c - pred_d) / jnp.maximum(jnp.linalg.norm(pred_c), 1e-12)
+    )
+    agree = float(
+        jnp.mean((jnp.argmax(pred_c, 0) == jnp.argmax(pred_d, 0)).astype(jnp.float32))
+    )
+    return EquivalenceReport(max(gaps), pgap, agree)

@@ -1,0 +1,140 @@
+"""Layer-wise training of SSFN: centralized and decentralized (Algorithm 1).
+
+Both trainers share the same progressive-growth loop (paper §II-B):
+  for l = 0..L:
+    1. compute layer features Y_l (per worker in the decentralized case)
+    2. solve the convex readout problem (6) for O_l
+         - centralized: ADMM with M=1 (as in the SSFN paper [1])
+         - decentralized: consensus ADMM (eq. 11) over M workers
+    3. form W_{l+1} = [V_Q O_l ; R_{l+1}] and continue
+
+The *only* difference between the two is where the data lives and how the
+consensus mean in the Z-update is computed — which is the paper's central
+claim of centralized equivalence.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import admm as admm_lib
+from repro.core import ssfn as ssfn_lib
+
+Array = jax.Array
+
+
+@dataclass
+class LayerwiseLog:
+    layer_costs: list[float]            # objective after each layer solve
+    admm_objective: np.ndarray          # (L+1, K) full trace (paper Fig. 3)
+    admm_primal: np.ndarray
+    admm_dual: np.ndarray
+    consensus_error: np.ndarray
+    wall_time_s: float
+    comm_scalars: int                   # total scalars exchanged (eq. 15)
+
+
+def _mu_for_layer(cfg: ssfn_lib.SSFNConfig, layer: int) -> float:
+    return cfg.mu0 if layer == 0 else cfg.mul
+
+
+def train_decentralized_ssfn(
+    x_workers: Array,
+    t_workers: Array,
+    cfg: ssfn_lib.SSFNConfig,
+    key: jax.Array,
+    *,
+    consensus_fn: Callable[[Array], Array] | None = None,
+    gossip_rounds: int = 1,
+    size_estimation_tol: float | None = None,
+) -> tuple[ssfn_lib.SSFNParams, LayerwiseLog]:
+    """Train dSSFN on M workers.
+
+    x_workers: (M, P, J_m) column-stacked inputs per worker (disjoint shards).
+    t_workers: (M, Q, J_m) one-hot targets per worker.
+    consensus_fn: consensus primitive for the Z-update; None = exact mean.
+    gossip_rounds: B, used only for the communication-load accounting when a
+        gossip consensus_fn is supplied (B=1 for exact all-reduce).
+    size_estimation_tol: the SELF-SIZE-estimating behaviour (paper §I: "a
+        decentralized estimation of the size of SSFN is possible"): stop
+        growing layers once the relative cost improvement drops below this
+        tolerance.  The decision uses the consensus objective every worker
+        already tracks, so all workers stop at the same depth with NO extra
+        communication.  None = fixed size (cfg.num_layers, paper §II).
+    """
+    q = cfg.num_classes
+    t0 = time.perf_counter()
+    r_list = ssfn_lib.init_random_matrices(key, cfg)
+
+    o_list: list[Array] = []
+    y_workers = x_workers                      # y_0 = x
+    layer_costs: list[float] = []
+    traces = {"obj": [], "primal": [], "dual": [], "cerr": []}
+    comm = 0
+
+    for layer in range(cfg.num_layers + 1):
+        res = admm_lib.admm_ridge_consensus(
+            y_workers,
+            t_workers,
+            mu=_mu_for_layer(cfg, layer),
+            eps_radius=cfg.eps_radius,
+            num_iters=cfg.admm_iters,
+            consensus_fn=consensus_fn,
+        )
+        o_l = res.o_star
+        o_list.append(o_l)
+        layer_costs.append(float(res.trace.objective[-1]))
+        traces["obj"].append(np.asarray(res.trace.objective))
+        traces["primal"].append(np.asarray(res.trace.primal_residual))
+        traces["dual"].append(np.asarray(res.trace.dual_residual))
+        traces["cerr"].append(np.asarray(res.trace.consensus_error))
+        # Communication accounting, eq. 15: Q * n_{l-1} scalars per exchange,
+        # B exchanges per consensus, K consensus rounds per layer.
+        comm += q * y_workers.shape[1] * gossip_rounds * cfg.admm_iters
+
+        # Self-size estimation: every worker sees the same consensus
+        # objective, so this stop decision is itself consensual.
+        if (
+            size_estimation_tol is not None
+            and len(layer_costs) >= 2
+            and layer_costs[-2] - layer_costs[-1]
+            < size_estimation_tol * max(layer_costs[-2], 1e-12)
+        ):
+            break
+
+        if layer < cfg.num_layers:
+            w_next = ssfn_lib.build_weight(o_l, r_list[layer], q)
+            y_workers = jax.vmap(lambda ym: jax.nn.relu(w_next @ ym))(y_workers)
+
+    # Early size-estimation stop leaves fewer readouts than random matrices.
+    params = ssfn_lib.SSFNParams(o=tuple(o_list), r=r_list[: len(o_list) - 1])
+    log = LayerwiseLog(
+        layer_costs=layer_costs,
+        admm_objective=np.stack(traces["obj"]),
+        admm_primal=np.stack(traces["primal"]),
+        admm_dual=np.stack(traces["dual"]),
+        consensus_error=np.stack(traces["cerr"]),
+        wall_time_s=time.perf_counter() - t0,
+        comm_scalars=comm,
+    )
+    return params, log
+
+
+def train_centralized_ssfn(
+    x: Array,
+    t: Array,
+    cfg: ssfn_lib.SSFNConfig,
+    key: jax.Array,
+) -> tuple[ssfn_lib.SSFNParams, LayerwiseLog]:
+    """Centralized SSFN = the same loop with all data on one worker (M=1)."""
+    return train_decentralized_ssfn(x[None], t[None], cfg, key)
+
+
+def accuracy(params: ssfn_lib.SSFNParams, x: Array, labels: Array, q: int) -> float:
+    pred = ssfn_lib.classify(params, x, q)
+    return float(jnp.mean((pred == labels).astype(jnp.float32)))

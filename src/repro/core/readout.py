@@ -1,0 +1,199 @@
+"""dSSFN's layer-wise convex readout learning as a first-class framework
+feature, applicable to ANY backbone in the framework (transformer / MoE /
+SSM / xLSTM / hybrid).
+
+Generalization of the paper: SSFN's W = [V_Q O ; R] structure assumes
+stacked same-width dense layers; arbitrary backbones do not admit that
+rewrite.  The transferable core — *per-layer convex readout solved by
+decentralized consensus-ADMM with centralized equivalence* — is exactly
+what this module provides:
+
+- ``admm_solve_sharded``: the eq.-11 iteration written for SPMD execution
+  under shard_map: the worker index m is the device's position on the
+  ("pod","data") mesh axes, the Z-update consensus is ``jax.lax.pmean``
+  (one all-reduce of Q*n floats per iteration — the paper's B*K*Q*n
+  communication-load accounting with B=1 torus hop).
+- ``layerwise_backbone_fit``: progressive layer-by-layer readout fitting
+  over a frozen (random) backbone, i.e. dSSFN with the backbone playing
+  the role of the R-matrices.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import admm as admm_lib
+
+Array = jax.Array
+
+
+class ShardedADMMResult(NamedTuple):
+    z: Array            # (Q, n) consensus readout (identical on all devices)
+    objective: Array    # (K,) global objective trace (psum'd)
+
+
+def admm_solve_sharded(
+    y_local: Array,
+    t_local: Array,
+    *,
+    mu: float,
+    eps_radius: float,
+    num_iters: int,
+    axis_names: str | tuple[str, ...],
+) -> ShardedADMMResult:
+    """Consensus-ADMM ridge solve, one worker per device, under shard_map.
+
+    y_local: (n, J_local) this worker's features; t_local: (Q, J_local).
+    The returned Z is replicated (pmean makes every device agree), which is
+    the SPMD form of the paper's "every node learns the same SSFN".
+    """
+    n = y_local.shape[0]
+    q = t_local.shape[0]
+    dtype = y_local.dtype
+
+    gram = y_local @ y_local.T + (1.0 / mu) * jnp.eye(n, dtype=dtype)
+    chol = jnp.linalg.cholesky(gram)
+    a = t_local @ y_local.T
+
+    def step(carry, _):
+        z, lam = carry
+        rhs = a + (z - lam) / mu
+        o = jax.scipy.linalg.cho_solve((chol, True), rhs.T).T
+        avg = jax.lax.pmean(o + lam, axis_name=axis_names)   # consensus
+        z_new = admm_lib.project_frobenius(avg, eps_radius)
+        lam_new = lam + o - z_new
+        local_obj = jnp.sum((t_local - z_new @ y_local) ** 2)
+        obj = jax.lax.psum(local_obj, axis_name=axis_names)
+        return (z_new, lam_new), obj
+
+    init = (jnp.zeros((q, n), dtype), jnp.zeros((q, n), dtype))
+    (z, _), objs = jax.lax.scan(step, init, None, length=num_iters)
+    return ShardedADMMResult(z=z, objective=objs)
+
+
+def gram_share_solve_sharded(
+    y_local: Array,
+    t_local: Array,
+    *,
+    eps_radius: float,
+    axis_names: str | tuple[str, ...],
+    ridge: float = 1e-6,
+) -> Array:
+    """BEYOND-PAPER alternative to the per-iteration consensus ADMM: psum
+    the Gram statistics once and solve the global least-squares locally.
+
+    One psum of n^2 + Q*n floats instead of K psums of Q*n.  ``ridge`` is a
+    small numerical jitter only — unlike ADMM's mu (a penalty parameter
+    that does not bias the fixed point), any large ridge here would change
+    the solution.  The eps ball is enforced by projection, exact whenever
+    the constraint is inactive at the LS solution (the common case with
+    the paper's eps = 2Q); an active constraint would need the secular
+    equation (admm.exact_constrained_ridge) on the shared statistics.
+    Communication crossover vs ADMM (shared (g-1)/g factor elided):
+    2*K*Q*n vs 2*(n^2 + Q*n) — gram-sharing wins when n < ~K*Q
+    (EXPERIMENTS.md §Perf hillclimb 3).  Privacy trade-off vs the paper:
+    workers expose second-order statistics (Y Y^T, T Y^T) instead of
+    readout iterates.
+    """
+    n = y_local.shape[0]
+    dtype = y_local.dtype
+    gram_l = y_local @ y_local.T
+    rhs_l = t_local @ y_local.T
+    gram = jax.lax.psum(gram_l, axis_name=axis_names)
+    rhs = jax.lax.psum(rhs_l, axis_name=axis_names)
+    scale = jnp.trace(gram) / n
+    gram = gram + (ridge * scale) * jnp.eye(n, dtype=dtype)
+    chol = jnp.linalg.cholesky(gram)
+    o = jax.scipy.linalg.cho_solve((chol, True), rhs.T).T
+    return admm_lib.project_frobenius(o, eps_radius)
+
+
+def fit_readout(
+    y: Array,
+    t: Array,
+    *,
+    mu: float,
+    eps_radius: float,
+    num_iters: int,
+) -> Array:
+    """Single-worker convenience wrapper (centralized layer solve)."""
+    res = admm_lib.centralized_ridge_admm(
+        y, t, mu=mu, eps_radius=eps_radius, num_iters=num_iters
+    )
+    return res.o_star
+
+
+class BackboneFit(NamedTuple):
+    readouts: tuple[Array, ...]    # one (Q, n_l) readout per tapped layer
+    layer_costs: Array             # (num_layers,) final objective per layer
+
+
+def layerwise_backbone_fit(
+    layer_features: Sequence[Array],
+    targets: Array,
+    *,
+    mu: float = 1e-1,
+    eps_scale: float = 1.0,
+    num_iters: int = 50,
+) -> BackboneFit:
+    """Fit a convex readout to every layer of a frozen backbone.
+
+    layer_features: sequence of (n_l, J) feature matrices (layer taps of any
+        backbone, computed with frozen/random weights — the generalized "R").
+    targets: (Q, J).
+
+    Returns per-layer readouts; the SSFN monotone-cost property does not
+    bind here (no V_Q feedthrough between arbitrary blocks), so layer_costs
+    is reported for inspection rather than asserted monotone.
+    """
+    q = targets.shape[0]
+    eps_radius = eps_scale * 2.0 * q
+    readouts, costs = [], []
+    for y in layer_features:
+        o = fit_readout(
+            y, targets, mu=mu, eps_radius=eps_radius, num_iters=num_iters
+        )
+        readouts.append(o)
+        costs.append(jnp.sum((targets - o @ y) ** 2))
+    return BackboneFit(readouts=tuple(readouts), layer_costs=jnp.stack(costs))
+
+
+def make_sharded_layer_solver(
+    mesh: jax.sharding.Mesh,
+    data_axes: tuple[str, ...],
+    *,
+    mu: float,
+    eps_radius: float,
+    num_iters: int,
+):
+    """Build a pjit-able distributed layer solver over a production mesh.
+
+    Features/targets are sharded over the data axes (J dimension); the
+    solve runs one ADMM worker per data-slice and returns the replicated
+    consensus readout.  Model-axis sharding of Y's feature dim is handled
+    outside (features are gathered along n before the solve: Q*n is small).
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    def solver(y: Array, t: Array) -> ShardedADMMResult:
+        # y: (n, J) sharded J over data axes; t: (Q, J) likewise.
+        fn = functools.partial(
+            admm_solve_sharded,
+            mu=mu,
+            eps_radius=eps_radius,
+            num_iters=num_iters,
+            axis_names=data_axes,
+        )
+        return shard_map(
+            fn,
+            mesh=mesh,
+            in_specs=(P(None, data_axes), P(None, data_axes)),
+            out_specs=ShardedADMMResult(z=P(), objective=P()),
+            check_rep=False,
+        )(y, t)
+
+    return solver

@@ -1,0 +1,114 @@
+"""SSFN: Self Size-estimating Feed-forward Network (paper [1], §II-B).
+
+Architecture:  y_{l+1} = g(W_{l+1} y_l),  g = ReLU,  y_0 = x,
+with the structured weight
+
+    W_{l+1} = [ V_Q @ O_l ; R_{l+1} ],      V_Q = [I_Q ; -I_Q]  (2Q x Q)
+
+where O_l (Q x n_{l-1}) is the layer-l readout learned by the convex
+problem (6) and R_{l+1} ((n-2Q) x n_{l-1}) is a frozen random matrix.
+Only the readouts are ever learned.  The V_Q block gives the *lossless
+flow property*: g(V_Q u) = [relu(u); relu(-u)] retains u exactly
+(u = relu(u) - relu(-u)), so the next layer can always reproduce the
+previous layer's prediction with the fixed readout [I_Q, -I_Q, 0] whose
+Frobenius norm is sqrt(2Q) <= eps = 2Q — hence the monotone cost.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class SSFNConfig:
+    input_dim: int                  # P
+    num_classes: int                # Q
+    num_layers: int = 20            # L (paper §III-B)
+    hidden: int | None = None       # n; paper default n = 2Q + 1000
+    mu0: float = 1e-3               # ADMM Lagrangian parameter, layer 0
+    mul: float = 1.0                # ADMM Lagrangian parameter, layers >= 1
+    admm_iters: int = 100           # K (paper §III-B)
+    eps_scale: float = 1.0          # eps_radius = eps_scale * 2Q
+    dtype: jnp.dtype = jnp.float32
+
+    @property
+    def n(self) -> int:
+        return self.hidden if self.hidden is not None else 2 * self.num_classes + 1000
+
+    @property
+    def eps_radius(self) -> float:
+        return self.eps_scale * 2.0 * self.num_classes
+
+    def __post_init__(self):
+        if self.hidden is not None and self.hidden <= 2 * self.num_classes:
+            raise ValueError("hidden n must exceed 2Q to leave room for R")
+
+
+class SSFNParams(NamedTuple):
+    """o[l] is the layer-l readout; r[l] the frozen random part of W_{l+1}."""
+    o: tuple[Array, ...]   # O_0 (Q,P), O_1..O_L (Q,n)
+    r: tuple[Array, ...]   # R_1 ((n-2Q),P), R_2..R_L ((n-2Q),n)
+
+
+def v_q(q: int, dtype=jnp.float32) -> Array:
+    eye = jnp.eye(q, dtype=dtype)
+    return jnp.concatenate([eye, -eye], axis=0)
+
+
+def init_random_matrices(key: jax.Array, cfg: SSFNConfig) -> tuple[Array, ...]:
+    """R_1..R_L, shared across all workers (Algorithm 1, input line 3)."""
+    n, p, q = cfg.n, cfg.input_dim, cfg.num_classes
+    rows = n - 2 * q
+    keys = jax.random.split(key, cfg.num_layers)
+    rs = []
+    for l, k in enumerate(keys):
+        fan_in = p if l == 0 else n
+        rs.append(
+            jax.random.normal(k, (rows, fan_in), dtype=cfg.dtype)
+            / jnp.sqrt(jnp.asarray(fan_in, cfg.dtype))
+        )
+    return tuple(rs)
+
+
+def build_weight(o_l: Array, r_next: Array, q: int) -> Array:
+    """W_{l+1} = [V_Q O_l ; R_{l+1}]   (paper eq. 7)."""
+    return jnp.concatenate([v_q(q, o_l.dtype) @ o_l, r_next], axis=0)
+
+
+def forward_features(
+    weights: Sequence[Array], x: Array, *, upto: int | None = None
+) -> Array:
+    """y_l = g(W_l ... g(W_1 x)) for column-stacked inputs x: (P, J)."""
+    y = x
+    ws = weights if upto is None else weights[:upto]
+    for w in ws:
+        y = jax.nn.relu(w @ y)
+    return y
+
+
+def assemble_weights(params: SSFNParams, q: int) -> tuple[Array, ...]:
+    """All W_1..W_L from (O_0..O_{L-1}, R_1..R_L)."""
+    return tuple(
+        build_weight(params.o[l], params.r[l], q) for l in range(len(params.r))
+    )
+
+
+def predict(params: SSFNParams, x: Array, q: int) -> Array:
+    """t_hat = O_L y_L for inputs x: (P, J)."""
+    weights = assemble_weights(params, q)
+    y = forward_features(weights, x)
+    return params.o[-1] @ y
+
+
+def classify(params: SSFNParams, x: Array, q: int) -> Array:
+    return jnp.argmax(predict(params, x, q), axis=0)
+
+
+def layer_cost(o_l: Array, y: Array, t: Array) -> Array:
+    """C_l = sum_j ||t_j - O_l y_j||^2 (paper eq. 5)."""
+    return jnp.sum((t - o_l @ y) ** 2)

@@ -1,0 +1,90 @@
+"""Communication-network topologies and doubly-stochastic mixing matrices.
+
+The paper models the synchronous worker network as a doubly-stochastic
+matrix H (no master node).  Experiments use a circular topology with
+degree ``d``: every node talks to its ``d`` nearest neighbours on each
+side, with equal weights ``h_ij = 1/|N_i|`` (paper §III, eq. for H).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def circular_neighbors(m: int, num_nodes: int, degree: int) -> list[int]:
+    """Neighbour set N_m of node ``m`` in a degree-``d`` circular graph.
+
+    Includes ``m`` itself (the paper has i ∈ N_i).
+    """
+    d_max = (num_nodes - 1) // 2 + ((num_nodes - 1) % 2)
+    if degree >= d_max and num_nodes > 1:
+        return list(range(num_nodes))
+    out = {m}
+    for k in range(1, degree + 1):
+        out.add((m + k) % num_nodes)
+        out.add((m - k) % num_nodes)
+    return sorted(out)
+
+
+def circular_mixing_matrix(num_nodes: int, degree: int) -> np.ndarray:
+    """Doubly-stochastic H for a circular topology of given degree.
+
+    Equal-weight rule from the paper: h_ij = 1/|N_i| for j in N_i, else 0.
+    For a circulant graph every node has the same |N_i| so this H is
+    symmetric and doubly stochastic.
+    """
+    if num_nodes < 1:
+        raise ValueError("num_nodes must be >= 1")
+    if degree < 1 and num_nodes > 1:
+        raise ValueError("degree must be >= 1 for connectivity")
+    h = np.zeros((num_nodes, num_nodes), dtype=np.float64)
+    for i in range(num_nodes):
+        nbrs = circular_neighbors(i, num_nodes, degree)
+        for j in nbrs:
+            h[i, j] = 1.0 / len(nbrs)
+    # Sanity: doubly stochastic.
+    assert np.allclose(h.sum(axis=0), 1.0) and np.allclose(h.sum(axis=1), 1.0)
+    return h
+
+
+def fully_connected_mixing_matrix(num_nodes: int) -> np.ndarray:
+    return np.full((num_nodes, num_nodes), 1.0 / num_nodes)
+
+
+def random_geometric_mixing_matrix(
+    num_nodes: int, radius: float, seed: int = 0
+) -> np.ndarray:
+    """Metropolis-Hastings doubly-stochastic weights on a random geometric
+    graph (one of the alternative topologies mentioned in paper §III)."""
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(size=(num_nodes, 2))
+    dist = np.linalg.norm(pts[:, None] - pts[None, :], axis=-1)
+    adj = (dist <= radius) & ~np.eye(num_nodes, dtype=bool)
+    # Ensure connectivity by adding a ring.
+    for i in range(num_nodes):
+        adj[i, (i + 1) % num_nodes] = adj[(i + 1) % num_nodes, i] = True
+    deg = adj.sum(axis=1)
+    h = np.zeros((num_nodes, num_nodes))
+    for i in range(num_nodes):
+        for j in range(num_nodes):
+            if adj[i, j]:
+                h[i, j] = 1.0 / (1 + max(deg[i], deg[j]))
+        h[i, i] = 1.0 - h[i].sum()
+    assert np.allclose(h.sum(axis=0), 1.0) and np.allclose(h.sum(axis=1), 1.0)
+    return h
+
+
+def spectral_gap(h: np.ndarray) -> float:
+    """1 - |lambda_2(H)|: governs gossip convergence speed (Boyd et al.)."""
+    eig = np.sort(np.abs(np.linalg.eigvals(h)))[::-1]
+    return float(1.0 - eig[1]) if len(eig) > 1 else 1.0
+
+
+def gossip_rounds_for_tolerance(h: np.ndarray, tol: float = 1e-6) -> int:
+    """Number of synchronous gossip rounds B so that ||H^B - (1/M)11^T|| <= tol."""
+    gap = spectral_gap(h)
+    if gap <= 0:
+        raise ValueError("mixing matrix is not ergodic (spectral gap 0)")
+    lam2 = 1.0 - gap
+    if lam2 <= 0:
+        return 1
+    return max(1, int(np.ceil(np.log(tol) / np.log(lam2))))

@@ -1,0 +1,19 @@
+from repro.data.synthetic import (
+    PAPER_DATASETS,
+    Dataset,
+    make_classification,
+    paper_dataset,
+    partition_workers,
+    partition_workers_noniid,
+)
+from repro.data.tokens import TokenStream
+
+__all__ = [
+    "PAPER_DATASETS",
+    "Dataset",
+    "make_classification",
+    "paper_dataset",
+    "partition_workers",
+    "partition_workers_noniid",
+    "TokenStream",
+]

@@ -1,0 +1,125 @@
+"""Synthetic datasets with the exact tensor geometry of the paper's Table I.
+
+No network access in this container, so the UCI/MNIST/NORB datasets are
+replaced by planted-teacher classification problems with identical
+(P, Q, J) shapes.  Numerical equivalence claims (dSSFN == centralized
+SSFN) are data-independent; absolute accuracies are for the synthetic
+tasks only (see DESIGN.md §8).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# (name, train, test, P, Q) — paper Table I.
+PAPER_DATASETS = {
+    "vowel": (528, 462, 10, 11),
+    "satimage": (4435, 2000, 36, 6),
+    "caltech101": (6000, 3000, 3000, 102),
+    "letter": (13333, 6667, 16, 26),
+    "norb": (24300, 24300, 2048, 5),
+    "mnist": (60000, 10000, 784, 10),
+}
+
+
+class Dataset(NamedTuple):
+    x_train: Array   # (P, J) column-stacked, standardized
+    t_train: Array   # (Q, J) one-hot
+    y_train: Array   # (J,) labels
+    x_test: Array
+    t_test: Array
+    y_test: Array
+
+    @property
+    def input_dim(self) -> int:
+        return self.x_train.shape[0]
+
+    @property
+    def num_classes(self) -> int:
+        return self.t_train.shape[0]
+
+
+def make_classification(
+    key: jax.Array,
+    *,
+    num_train: int,
+    num_test: int,
+    input_dim: int,
+    num_classes: int,
+    teacher_layers: int = 2,
+    teacher_width: int = 64,
+    label_noise: float = 0.05,
+) -> Dataset:
+    """Planted nonlinear-teacher classification problem."""
+    kx, kt, kw, kn = jax.random.split(key, 4)
+    j = num_train + num_test
+    x = jax.random.normal(kx, (input_dim, j))
+    h = x
+    wkeys = jax.random.split(kw, teacher_layers + 1)
+    dim = input_dim
+    for i in range(teacher_layers):
+        w = jax.random.normal(wkeys[i], (teacher_width, dim)) / jnp.sqrt(dim)
+        h = jnp.tanh(w @ h)
+        dim = teacher_width
+    w_out = jax.random.normal(wkeys[-1], (num_classes, dim)) / jnp.sqrt(dim)
+    logits = w_out @ h + label_noise * jax.random.normal(kn, (num_classes, j))
+    labels = jnp.argmax(logits, axis=0)
+    t = jax.nn.one_hot(labels, num_classes).T
+    # Standardize features (as the paper's Matlab pipeline does).
+    mu = x[:, :num_train].mean(axis=1, keepdims=True)
+    sd = x[:, :num_train].std(axis=1, keepdims=True) + 1e-6
+    x = (x - mu) / sd
+    return Dataset(
+        x_train=x[:, :num_train],
+        t_train=t[:, :num_train],
+        y_train=labels[:num_train],
+        x_test=x[:, num_train:],
+        t_test=t[:, num_train:],
+        y_test=labels[num_train:],
+    )
+
+
+def paper_dataset(name: str, key: jax.Array, *, scale: float = 1.0) -> Dataset:
+    """Synthetic stand-in with the paper's Table I geometry (optionally
+    scaled down for CI-speed runs)."""
+    ntr, nte, p, q = PAPER_DATASETS[name]
+    return make_classification(
+        key,
+        num_train=max(q * 4, int(ntr * scale)),
+        num_test=max(q * 4, int(nte * scale)),
+        input_dim=p,
+        num_classes=q,
+    )
+
+
+def partition_workers(x: Array, t: Array, num_workers: int) -> tuple[Array, Array]:
+    """Uniformly divide column-stacked data over M disjoint workers
+    (paper §III-B: 'uniformly divide the training dataset')."""
+    j = x.shape[1]
+    per = j // num_workers
+    x = x[:, : per * num_workers]
+    t = t[:, : per * num_workers]
+    xw = x.reshape(x.shape[0], num_workers, per).transpose(1, 0, 2)
+    tw = t.reshape(t.shape[0], num_workers, per).transpose(1, 0, 2)
+    return xw, tw
+
+
+def partition_workers_noniid(
+    x: Array, t: Array, num_workers: int
+) -> tuple[Array, Array]:
+    """Pathologically non-IID split: samples sorted by class label before
+    sharding, so each worker sees only a few classes.
+
+    Consensus ADMM solves the GLOBAL problem exactly regardless of how the
+    data is distributed (the objective is a sum over samples — unlike
+    FedAvg-style local-steps methods, shard skew changes nothing at the
+    fixed point).  Used to demonstrate that dSSFN's centralized
+    equivalence is distribution-free."""
+    labels = jnp.argmax(t, axis=0)
+    order = jnp.argsort(labels, stable=True)
+    return partition_workers(x[:, order], t[:, order], num_workers)

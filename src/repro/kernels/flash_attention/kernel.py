@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: causal (optionally sliding-window) flash attention.
+
+Online-softmax over KV blocks with (m, l, acc) carried in VMEM scratch;
+fully-masked KV blocks short-circuit (causal upper triangle / outside the
+sliding window) so the effective compute is ~half the dense score matrix
+for causal and O(S * window) for SWA.
+
+Grid: (batch, heads, Sq/bq, Sk/bk) with the KV axis innermost ("arbitrary"
+semantics — sequential accumulation), q/k/v blocks in VMEM.
+Layout: (B, H, S, hd) head-major so blocks are 2D MXU tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import default_interpret
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, nk: int, block_q: int, block_k: int, window: int | None, scale: float,
+):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    # Skip compute when the whole KV block is masked out.
+    block_needed = k_start <= q_start + block_q - 1
+    if window is not None:
+        block_needed &= (q_start - (k_start + block_k - 1)) < window
+
+    @pl.when(block_needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )                                                    # (bq, bk)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = q_pos >= k_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Causal flash attention.  q/k/v: (B, H, S, hd) -> (B, H, S, hd)."""
+    b, h, s, hd = q.shape
+    assert k.shape == v.shape == (b, h, s, hd)
+    assert s % block_q == 0 and s % block_k == 0
+    if interpret is None:
+        interpret = default_interpret()
+    nk = s // block_k
+    scale = 1.0 / (hd ** 0.5)
+    kernel = functools.partial(
+        _flash_kernel,
+        nk=nk,
+        block_q=block_q,
+        block_k=block_k,
+        window=window,
+        scale=scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, s // block_q, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda bb, hh, i, j: (bb, hh, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda bb, hh, i, j: (bb, hh, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda bb, hh, i, j: (bb, hh, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda bb, hh, i, j: (bb, hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,19 @@
+"""Public jit'd wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_q", "block_k"))
+def flash_attention(q, k, v, *, window=None, block_q: int = 128, block_k: int = 128):
+    s = q.shape[2]
+    if s % block_q == 0 and s % block_k == 0 and s >= block_q:
+        return flash_attention_pallas(
+            q, k, v, window=window, block_q=block_q, block_k=block_k
+        )
+    return flash_attention_ref(q, k, v, window=window)

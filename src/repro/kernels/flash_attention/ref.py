@@ -1,0 +1,21 @@
+"""Pure-jnp oracle: dense causal (sliding-window) attention."""
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, window: int | None = None):
+    """q/k/v: (B, H, S, hd)."""
+    s = q.shape[2]
+    hd = q.shape[3]
+    scale = 1.0 / (hd ** 0.5)
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, k.astype(jnp.float32)
+    )
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = qp >= kp
+    if window is not None:
+        mask &= (qp - kp) < window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.gram.ops import gram
+from repro.kernels.gram.ref import gram_ref
+
+__all__ = ["gram", "gram_ref"]

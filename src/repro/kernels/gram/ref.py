@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the gram kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def gram_ref(y: jax.Array, *, mu: float) -> jax.Array:
+    n = y.shape[0]
+    yf = y.astype(jnp.float32)
+    return yf @ yf.T + (1.0 / mu) * jnp.eye(n, dtype=jnp.float32)

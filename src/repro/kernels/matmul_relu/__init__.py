@@ -1,0 +1,4 @@
+from repro.kernels.matmul_relu.ops import matmul_relu
+from repro.kernels.matmul_relu.ref import matmul_relu_ref
+
+__all__ = ["matmul_relu", "matmul_relu_ref"]

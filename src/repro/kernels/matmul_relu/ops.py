@@ -1,0 +1,18 @@
+"""Public jit'd wrapper for the fused LT+NLT step."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.matmul_relu.kernel import matmul_relu_pallas
+from repro.kernels.matmul_relu.ref import matmul_relu_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def matmul_relu(w, x, *, block_m: int = 128, block_n: int = 128, block_k: int = 128):
+    m, k = w.shape
+    _, n = x.shape
+    if m % block_m == 0 and n % block_n == 0 and k % block_k == 0:
+        return matmul_relu_pallas(w, x, block_m=block_m, block_n=block_n, block_k=block_k)
+    return matmul_relu_ref(w, x)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for matmul_relu."""
+import jax
+import jax.numpy as jnp
+
+
+def matmul_relu_ref(w: jax.Array, x: jax.Array) -> jax.Array:
+    y = jnp.dot(w.astype(jnp.float32), x.astype(jnp.float32))
+    return jnp.maximum(y, 0.0).astype(w.dtype)

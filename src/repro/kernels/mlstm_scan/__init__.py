@@ -1,0 +1,4 @@
+from repro.kernels.mlstm_scan.ops import mlstm_scan
+from repro.kernels.mlstm_scan.ref import mlstm_scan_ref
+
+__all__ = ["mlstm_scan", "mlstm_scan_ref"]

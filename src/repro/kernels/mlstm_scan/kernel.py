@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: chunked stabilized mLSTM (xLSTM matrix memory).
+
+Same blocking scheme as ssm_scan: one grid step = one (batch, head, chunk)
+tile; the (dk x dv) matrix memory, (dk,) normalizer and log-space
+stabilizer m are carried across the (sequential) chunk axis in VMEM
+scratch.  Within a chunk the output is the stabilized quadratic form of
+repro.nn.xlstm.chunked_mlstm.
+
+Grid: (B, H, S/chunk), chunk axis "arbitrary".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import default_interpret
+
+NEG_BIG = -1e30
+
+
+def _mlstm_kernel(
+    q_ref, k_ref, v_ref, i_ref, f_ref,
+    y_ref, c_out_ref, n_out_ref, m_out_ref,
+    c_ref, n_ref, m_ref,
+    *, nc: int, chunk: int, scale: float,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_BIG)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale    # (c, dk)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # (c, dk)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)            # (c, dv)
+    li = i_ref[0, :, 0].astype(jnp.float32)              # (c,)
+    lf = jax.nn.log_sigmoid(f_ref[0, :, 0].astype(jnp.float32))
+    c_prev, n_prev, m_prev = c_ref[...], n_ref[...], m_ref[0, 0]
+
+    fcum = jnp.cumsum(lf)                                # (c,) inclusive
+    idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jdx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    d_log = fcum[:, None] - fcum[None, :] + li[None, :]
+    d_log = jnp.where(idx >= jdx, d_log, -jnp.inf)
+    inter_log = fcum + m_prev                            # (c,)
+    m_t = jnp.maximum(jnp.max(d_log, axis=1), inter_log)
+    m_t = jnp.maximum(m_t, NEG_BIG)
+    w_intra = jnp.exp(d_log - m_t[:, None])              # (c, c)
+    w_inter = jnp.exp(inter_log - m_t)                   # (c,)
+
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * w_intra
+    num = jnp.dot(scores, v, preferred_element_type=jnp.float32)
+    num += w_inter[:, None] * jnp.dot(q, c_prev, preferred_element_type=jnp.float32)
+    den = jnp.sum(scores, axis=1) + w_inter * jnp.dot(
+        q, n_prev[:, 0], preferred_element_type=jnp.float32
+    )
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+    y_ref[0, :, 0, :] = (num / den[:, None]).astype(y_ref.dtype)
+
+    # State to end of chunk.
+    f_total = fcum[-1]
+    s_log = f_total - fcum + li                          # (c,)
+    m_new = jnp.maximum(m_prev + f_total, jnp.max(s_log))
+    w_state = jnp.exp(s_log - m_new)                     # (c,)
+    carry = jnp.exp(m_prev + f_total - m_new)
+    c_ref[...] = carry * c_prev + jnp.dot(
+        (k * w_state[:, None]).T, v, preferred_element_type=jnp.float32
+    )
+    n_ref[...] = carry * n_prev + jnp.sum(
+        k * w_state[:, None], axis=0
+    )[:, None]
+    m_ref[0, 0] = m_new
+
+    @pl.when(ic == nc - 1)
+    def _final():
+        c_out_ref[0, 0] = c_ref[...]
+        n_out_ref[0, 0] = n_ref[:, 0]
+        m_out_ref[0, 0] = m_ref[0, 0]
+
+
+def mlstm_scan_pallas(
+    q: jax.Array,      # (B, S, H, dk)
+    k: jax.Array,
+    v: jax.Array,      # (B, S, H, dv)
+    i_pre: jax.Array,  # (B, S, H)
+    f_pre: jax.Array,  # (B, S, H)
+    *,
+    chunk: int = 256,
+    interpret: bool | None = None,
+):
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    assert s % chunk == 0
+    if interpret is None:
+        interpret = default_interpret()
+    nc = s // chunk
+    kernel = functools.partial(
+        _mlstm_kernel, nc=nc, chunk=chunk, scale=1.0 / (dk ** 0.5)
+    )
+    y, c_f, n_f, m_f = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, dk), lambda bb, hh, c: (bb, c, hh, 0)),
+            pl.BlockSpec((1, chunk, 1, dk), lambda bb, hh, c: (bb, c, hh, 0)),
+            pl.BlockSpec((1, chunk, 1, dv), lambda bb, hh, c: (bb, c, hh, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bb, hh, c: (bb, c, hh)),
+            pl.BlockSpec((1, chunk, 1), lambda bb, hh, c: (bb, c, hh)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, dv), lambda bb, hh, c: (bb, c, hh, 0)),
+            pl.BlockSpec((1, 1, dk, dv), lambda bb, hh, c: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, dk), lambda bb, hh, c: (bb, hh, 0)),
+            pl.BlockSpec((1, 1), lambda bb, hh, c: (bb, hh)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, dv), q.dtype),
+            jax.ShapeDtypeStruct((b, h, dk, dv), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, dk), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((dk, dv), jnp.float32),
+            pltpu.VMEM((dk, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(q, k, v, i_pre, f_pre)
+    return y, (c_f, n_f, m_f)

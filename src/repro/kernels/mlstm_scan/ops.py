@@ -1,0 +1,17 @@
+"""Public jit'd wrapper for the chunked mLSTM kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mlstm_scan.kernel import mlstm_scan_pallas
+from repro.kernels.mlstm_scan.ref import mlstm_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def mlstm_scan(q, k, v, i_pre, f_pre, *, chunk: int = 256):
+    s = q.shape[1]
+    if s % chunk == 0:
+        return mlstm_scan_pallas(q, k, v, i_pre, f_pre, chunk=chunk)
+    return mlstm_scan_ref(q, k, v, i_pre, f_pre, chunk=max(1, s))

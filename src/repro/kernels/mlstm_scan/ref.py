@@ -1,0 +1,13 @@
+"""Oracle: the chunked mLSTM from repro.nn.xlstm (itself validated against
+the sequential recurrence)."""
+import jax
+
+from repro.nn.xlstm import chunked_mlstm, init_mlstm_state
+
+
+def mlstm_scan_ref(q, k, v, i_pre, f_pre, *, chunk: int = 256):
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    st = init_mlstm_state(b, h, dk, dv)
+    y, state = chunked_mlstm(q, k, v, i_pre, f_pre, st, chunk=chunk)
+    return y, (state.c, state.n, state.m)

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: Mamba2-style chunked selective-state-space scan.
+
+Implements the chunked dual form used by repro.nn.ssm: within a chunk the
+output is a causal quadratic product; the (dh x ds) per-head state is
+carried across chunks in VMEM scratch (the grid's chunk axis is
+sequential).  One grid step processes one (batch, head, chunk) tile:
+
+    y_intra[t] = sum_{s<=t} (C_t.B_s) exp(la_t - la_s) dt_s x_s
+    y_inter[t] = exp(la_t) C_t . h_prev
+    h_new      = exp(la_last) h_prev + sum_s exp(la_last - la_s) dt_s B_s (x) x_s
+
+Grid: (B, H, S/chunk) — chunk axis innermost and "arbitrary" (sequential);
+state scratch persists across the chunk axis for a fixed (b, h).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import default_interpret
+
+
+def _ssm_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_out_ref, h_ref,
+    *, nc: int, chunk: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (c, dh)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (c,)
+    a = a_ref[0].astype(jnp.float32)                 # ()
+    bm = b_ref[0].astype(jnp.float32)                # (c, ds)
+    cm = c_ref[0].astype(jnp.float32)                # (c, ds)
+    h_prev = h_ref[...]                              # (dh, ds)
+
+    la = jnp.cumsum(a * dt)                          # (c,) inclusive
+    idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jdx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = idx >= jdx
+    decay = jnp.exp(jnp.clip(la[:, None] - la[None, :], -60.0, 0.0))
+    cb = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)     # (c, c)
+    scores = jnp.where(causal, cb * decay * dt[None, :], 0.0)
+    y = jnp.dot(scores, x, preferred_element_type=jnp.float32)     # intra
+    y += jnp.exp(jnp.clip(la, -60.0, 0.0))[:, None] * jnp.dot(
+        cm, h_prev.T, preferred_element_type=jnp.float32
+    )                                                              # inter
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    la_last = la[-1]
+    w = jnp.exp(jnp.clip(la_last - la, -60.0, 0.0)) * dt           # (c,)
+    h_new = jnp.exp(jnp.clip(la_last, -60.0, 0.0)) * h_prev + jnp.dot(
+        (x * w[:, None]).T, bm, preferred_element_type=jnp.float32
+    )                                                              # (dh, ds)
+    h_ref[...] = h_new
+
+    @pl.when(ic == nc - 1)
+    def _final():
+        h_out_ref[0, 0] = h_new
+
+
+def ssm_scan_pallas(
+    x: jax.Array,     # (B, S, H, dh)
+    dt: jax.Array,    # (B, S, H)
+    a: jax.Array,     # (H,)
+    b_mat: jax.Array, # (B, S, ds)
+    c_mat: jax.Array, # (B, S, ds)
+    *,
+    chunk: int = 256,
+    interpret: bool | None = None,
+):
+    bsz, s, h, dh = x.shape
+    ds = b_mat.shape[-1]
+    assert s % chunk == 0
+    if interpret is None:
+        interpret = default_interpret()
+    nc = s // chunk
+    kernel = functools.partial(_ssm_kernel, nc=nc, chunk=chunk)
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, dh), lambda b, hh, c: (b, c, hh, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, hh, c: (b, c, hh)),
+            pl.BlockSpec((1,), lambda b, hh, c: (hh,)),
+            pl.BlockSpec((1, chunk, ds), lambda b, hh, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda b, hh, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, dh), lambda b, hh, c: (b, c, hh, 0)),
+            pl.BlockSpec((1, 1, dh, ds), lambda b, hh, c: (b, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, h, dh), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, dh, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dh, ds), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(x, dt, a, b_mat, c_mat)
+    return y, h_final

@@ -1,0 +1,17 @@
+"""Public jit'd wrapper for the chunked SSM scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssm_scan.kernel import ssm_scan_pallas
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssm_scan(x, dt, a, b_mat, c_mat, *, chunk: int = 256):
+    s = x.shape[1]
+    if s % chunk == 0:
+        return ssm_scan_pallas(x, dt, a, b_mat, c_mat, chunk=chunk)
+    return ssm_scan_ref(x, dt, a, b_mat, c_mat, chunk=max(1, s))

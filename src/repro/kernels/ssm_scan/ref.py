@@ -1,0 +1,13 @@
+"""Pure-jnp oracle: the chunked scan from repro.nn.ssm (itself validated
+against the sequential recurrence in tests)."""
+import jax
+import jax.numpy as jnp
+
+from repro.nn.ssm import chunked_ssm_scan
+
+
+def ssm_scan_ref(x, dt, a, b_mat, c_mat, *, chunk: int = 256):
+    b, s, h, dh = x.shape
+    ds = b_mat.shape[-1]
+    h0 = jnp.zeros((b, h, dh, ds), jnp.float32)
+    return chunked_ssm_scan(x, dt, a, b_mat, c_mat, h0, chunk=chunk)

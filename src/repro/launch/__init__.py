@@ -1,0 +1,4 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve entry points."""
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

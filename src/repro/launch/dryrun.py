@@ -1,0 +1,259 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production mesh, record memory/cost analysis and the roofline terms.
+
+MUST be run as its own process (``python -m repro.launch.dryrun``): the
+XLA_FLAGS below create 512 placeholder host devices and must be set before
+jax initializes.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.launch import specs as specs_lib
+from repro.launch.hlo_analysis import analyze_module
+from repro.launch.mesh import HARDWARE, data_axes_for, make_production_mesh
+from repro.models import build_model
+from repro.models.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.optim import AdamW
+from repro.sharding.rules import AxisRules, use_rules
+
+
+def roofline_terms(flops, hbm_bytes, wire_bytes):
+    return {
+        "compute_s": flops / HARDWARE["peak_flops_bf16"],
+        "memory_s": hbm_bytes / HARDWARE["hbm_bandwidth"],
+        "collective_s": wire_bytes / HARDWARE["ici_link_bandwidth"],
+    }
+
+
+def model_flops_per_device(cfg, shape_name: str, num_devices: int) -> float:
+    info = specs_lib.INPUT_SHAPES[shape_name]
+    tokens = info["batch"] * (info["seq"] if info["kind"] != "decode" else 1)
+    n_active = cfg.active_param_count()
+    mult = 6.0 if info["kind"] == "train" else 2.0
+    return mult * n_active * tokens / num_devices
+
+
+def dryrun_one(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    overrides: dict | None = None,
+    fsdp: bool = True,
+    layout: str = "2d",
+    save_hlo: str | None = None,
+) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    info = specs_lib.INPUT_SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": info["kind"], "status": "OK",
+    }
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        result["status"] = "SKIP(full-attention)"
+        return result
+
+    t0 = time.perf_counter()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    num_devices = mesh.devices.size
+    if layout == "2d":
+        # Baseline: batch/FSDP over ("pod","data"), tensor over "model".
+        rules = AxisRules(
+            mesh=mesh, data_axes=data_axes_for(mesh), model_axis="model", fsdp=fsdp
+        )
+    elif layout == "fsdp":
+        # Pure data-parallel + FSDP over ALL mesh axes, no tensor parallelism
+        # (same physical mesh, different logical mapping — §Perf).
+        rules = AxisRules(
+            mesh=mesh,
+            data_axes=data_axes_for(mesh) + ("model",),
+            model_axis=None,
+            fsdp=fsdp,
+        )
+    elif layout == "tp2d":
+        # Weight-stationary 2-D TP (decode): batch replicated, weights 2-D
+        # sharded over (data x model); GSPMD keeps activations partial
+        # instead of gathering weights every token (§Perf decode bonus).
+        rules = AxisRules(
+            mesh=mesh,
+            data_axes=(),
+            fsdp_axes=data_axes_for(mesh),
+            model_axis="model",
+            fsdp=True,
+        )
+    else:
+        raise ValueError(f"unknown layout {layout!r}")
+    result["layout"] = layout
+    model = build_model(cfg)
+    batch_shapes = specs_lib.batch_specs(cfg, shape_name)
+
+    with mesh, use_rules(rules):
+        params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        pspec = specs_lib.param_spec_tree(params_shapes, rules, mesh)
+        pshard = specs_lib.to_shardings(pspec, mesh)
+        bspec = specs_lib.batch_spec_tree(batch_shapes, rules, mesh, info["batch"])
+        bshard = specs_lib.to_shardings(bspec, mesh)
+
+        if info["kind"] == "train":
+            opt = AdamW(lr=1e-4)
+            opt_shapes = jax.eval_shape(opt.init, params_shapes)
+            ospec = specs_lib.opt_state_spec_tree(opt_shapes, pspec)
+            oshard = specs_lib.to_shardings(ospec, mesh)
+            step = make_train_step(model, opt)
+            jitted = jax.jit(
+                step,
+                in_shardings=(pshard, oshard, bshard),
+                out_shardings=(pshard, oshard, None),
+            )
+            lowered = jitted.lower(params_shapes, opt_shapes, batch_shapes)
+        elif info["kind"] == "prefill":
+            step = make_prefill_step(model)
+            jitted = jax.jit(step, in_shardings=(pshard, bshard))
+            lowered = jitted.lower(params_shapes, batch_shapes)
+        else:  # decode
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(info["batch"], info["seq"])
+            )
+            cspec = specs_lib.cache_spec_tree(cache_shapes, cfg, info["batch"], rules, mesh)
+            cshard = specs_lib.to_shardings(cspec, mesh)
+            step = make_serve_step(model)
+            jitted = jax.jit(
+                step, in_shardings=(pshard, bshard, cshard),
+                out_shardings=(None, None, cshard),
+            )
+            lowered = jitted.lower(params_shapes, batch_shapes, cache_shapes)
+
+        compiled = lowered.compile()
+
+    result["lower_compile_s"] = round(time.perf_counter() - t0, 1)
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        result["memory"] = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes_per_device": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes,
+        }
+    ca = compiled.cost_analysis() or {}
+    analysis = analyze_module(compiled.as_text())
+    # HLO-text-derived numbers include while-loop trip counts (XLA's
+    # cost_analysis counts loop bodies once — verified on this backend);
+    # raw cost_analysis values are kept for cross-checking.
+    flops = analysis.flops
+    hbm_bytes = analysis.traffic_bytes
+    wire = analysis.collective_wire_bytes
+    result["cost"] = {
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": hbm_bytes,
+        "xla_cost_analysis_flops_1iter": float(ca.get("flops", 0.0)),
+        "xla_cost_analysis_bytes_1iter": float(ca.get("bytes accessed", 0.0)),
+    }
+    result["collectives"] = {
+        "wire_bytes_per_device": wire,
+        "by_type": analysis.collective_by_type(),
+        "counts": analysis.collective_counts(),
+    }
+    terms = roofline_terms(flops, hbm_bytes, wire)
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(cfg, shape_name, num_devices)
+    result["roofline"] = {
+        **terms,
+        "dominant": dominant,
+        "model_flops_per_device": mf,
+        "useful_flops_ratio": (mf / flops) if flops else 0.0,
+    }
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(compiled.as_text())
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None, help="input shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--layout", default="2d", choices=["2d", "fsdp", "tp2d"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg overrides key=value (e.g. attn_chunk=512)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    archs = [args.arch] if args.arch else ARCHS
+    shapes = [args.shape] if args.shape else list(specs_lib.INPUT_SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}"
+                if args.layout != "2d":
+                    tag += f"_{args.layout}"
+                if overrides:
+                    tag += "_" + "_".join(f"{k}-{v}" for k, v in overrides.items())
+                try:
+                    res = dryrun_one(
+                        arch, shape, multi_pod=mp, overrides=overrides or None,
+                        fsdp=not args.no_fsdp, layout=args.layout,
+                        save_hlo=args.save_hlo,
+                    )
+                except Exception as e:  # noqa: BLE001 — record & continue sweep
+                    res = {
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": f"FAIL: {type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc(),
+                    }
+                    failures += 1
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(res, f, indent=2, default=str)
+                r = res.get("roofline", {})
+                print(
+                    f"{tag}: {res['status']}"
+                    + (
+                        f" compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s"
+                        f" coll={r['collective_s']:.3e}s dom={r['dominant']}"
+                        f" useful={r['useful_flops_ratio']:.2f}"
+                        if r
+                        else ""
+                    ),
+                    flush=True,
+                )
+    if failures:
+        raise SystemExit(f"{failures} dry-run combination(s) failed")
+
+
+if __name__ == "__main__":
+    main()

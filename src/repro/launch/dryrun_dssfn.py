@@ -1,0 +1,125 @@
+"""Dry-run for the PAPER'S TECHNIQUE on the production mesh: the dSSFN
+layer-wise readout solve, distributed over all 256/512 chips.
+
+Two schedules are lowered and compared (§Perf hillclimb 3):
+  - admm:  the paper's consensus-ADMM (eq. 11) — K psums of (Q, n)
+  - gram:  beyond-paper one-shot Gram-sharing — one psum of (n^2 + Q*n)
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun_dssfn \
+        [--n 4096] [--q 32] [--iters 100] [--multi-pod]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+import argparse
+import functools
+import json
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.readout import admm_solve_sharded, gram_share_solve_sharded
+from repro.launch.hlo_analysis import analyze_module
+from repro.launch.mesh import HARDWARE, data_axes_for, make_production_mesh
+
+
+def lower_solver(mode: str, *, n: int, q: int, j_total: int, iters: int,
+                 multi_pod: bool, save_hlo: str | None = None) -> dict:
+    from jax.experimental.shard_map import shard_map
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = tuple(mesh.axis_names)          # ADMM workers = every chip
+    num = mesh.devices.size
+
+    if mode == "admm":
+        fn = functools.partial(
+            admm_solve_sharded, mu=1e-2, eps_radius=2.0 * q,
+            num_iters=iters, axis_names=axes,
+        )
+    else:
+        fn = functools.partial(
+            gram_share_solve_sharded, eps_radius=2.0 * q, axis_names=axes,
+        )
+
+    sharded = shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(P(None, axes), P(None, axes)),
+        out_specs=jax.tree.map(lambda _: P(), _out_struct(mode)),
+        check_rep=False,
+    )
+    y = jax.ShapeDtypeStruct((n, j_total), jnp.float32)
+    t = jax.ShapeDtypeStruct((q, j_total), jnp.float32)
+    with mesh:
+        lowered = jax.jit(
+            sharded,
+            in_shardings=(NamedSharding(mesh, P(None, axes)),
+                          NamedSharding(mesh, P(None, axes))),
+        ).lower(y, t)
+        compiled = lowered.compile()
+    a = analyze_module(compiled.as_text())
+    mem = compiled.memory_analysis()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(compiled.as_text())
+    terms = {
+        "compute_s": a.flops / HARDWARE["peak_flops_bf16"],
+        "memory_s": a.traffic_bytes / HARDWARE["hbm_bandwidth"],
+        "collective_s": a.collective_wire_bytes / HARDWARE["ici_link_bandwidth"],
+    }
+    return {
+        "mode": mode, "n": n, "q": q, "j_total": j_total, "iters": iters,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "flops_per_device": a.flops,
+        "hbm_bytes_per_device": a.traffic_bytes,
+        "collective_wire_bytes": a.collective_wire_bytes,
+        "collective_by_type": a.collective_by_type(),
+        "peak_bytes_per_device": (mem.argument_size_in_bytes + mem.temp_size_in_bytes)
+        if mem else None,
+        "roofline": {**terms, "dominant": max(terms, key=terms.get)},
+    }
+
+
+def _out_struct(mode):
+    if mode == "admm":
+        from repro.core.readout import ShardedADMMResult
+
+        return ShardedADMMResult(z=0, objective=0)
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--q", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=1048576)
+    ap.add_argument("--iters", type=int, default=100)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default=None, choices=[None, "admm", "gram"])
+    ap.add_argument("--out", default="experiments/dssfn")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for mode in ([args.mode] if args.mode else ["admm", "gram"]):
+        res = lower_solver(
+            mode, n=args.n, q=args.q, j_total=args.tokens, iters=args.iters,
+            multi_pod=args.multi_pod,
+        )
+        tag = f"{mode}_n{args.n}_q{args.q}_K{args.iters}_{res['mesh']}"
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(res, f, indent=2)
+        r = res["roofline"]
+        print(
+            f"{tag}: compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+            f"coll={r['collective_s']:.3e}s dom={r['dominant']} "
+            f"wire={res['collective_wire_bytes']:.3e}B",
+            flush=True,
+        )
+
+
+if __name__ == "__main__":
+    main()

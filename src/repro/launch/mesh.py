@@ -1,0 +1,41 @@
+"""Production meshes.
+
+Single pod: v5e-256 as (data=16, model=16).
+Multi-pod:  2 pods = 512 chips as (pod=2, data=16, model=16) — the "pod"
+axis is an extra data-parallel dim over DCN/ICI (batch shards over
+("pod", "data")).
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=axis_types)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    dp = max(1, n // model_parallel)
+    axis_types = (jax.sharding.AxisType.Auto,) * 2
+    return jax.make_mesh((dp, model_parallel), ("data", "model"), axis_types=axis_types)
+
+
+def data_axes_for(mesh) -> tuple[str, ...]:
+    names = mesh.axis_names
+    return tuple(a for a in names if a in ("pod", "data"))
+
+
+HARDWARE = {
+    # TPU v5e per chip.
+    "peak_flops_bf16": 197e12,      # FLOP/s
+    "hbm_bandwidth": 819e9,         # B/s
+    "ici_link_bandwidth": 50e9,     # B/s per link
+}

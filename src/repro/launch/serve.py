@@ -1,0 +1,93 @@
+"""Serving launcher: batched prefill + greedy decode loop."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import data_axes_for, make_host_mesh
+from repro.models import build_model
+from repro.models.steps import make_serve_step
+from repro.sharding.rules import AxisRules, use_rules
+
+
+def serve(
+    arch: str,
+    *,
+    batch: int = 4,
+    prompt_len: int = 64,
+    gen_len: int = 32,
+    reduced: bool = True,
+    model_parallel: int = 1,
+    seed: int = 0,
+):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh(model_parallel)
+    rules = AxisRules(mesh=mesh, data_axes=data_axes_for(mesh), model_axis="model")
+    model = build_model(cfg)
+    rng = np.random.default_rng(seed)
+
+    with mesh, use_rules(rules):
+        params = model.init(jax.random.PRNGKey(0))
+        tok_shape = (
+            (batch, prompt_len, cfg.num_codebooks)
+            if cfg.family == "audio"
+            else (batch, prompt_len)
+        )
+        prompt = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, tok_shape), jnp.int32)}
+        if cfg.family == "vlm":
+            prompt["patch_embeds"] = jnp.asarray(
+                rng.normal(size=(batch, cfg.num_patches, cfg.patch_dim)), jnp.float32
+            )
+        t0 = time.perf_counter()
+        prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len=prompt_len + gen_len))
+        logits, cache = prefill(params, prompt)
+        t_prefill = time.perf_counter() - t0
+
+        step_fn = jax.jit(make_serve_step(model))
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        generated = []
+        t0 = time.perf_counter()
+        for _ in range(gen_len):
+            if cfg.family == "audio":
+                tok = next_tok.reshape(batch, 1, cfg.num_codebooks)
+            else:
+                tok = next_tok.reshape(batch, 1)
+            next_tok, logits, cache = step_fn(params, {"tokens": tok}, cache)
+            generated.append(np.asarray(next_tok))
+        t_decode = time.perf_counter() - t0
+        toks = np.stack(generated, axis=1)
+        print(
+            f"{arch}: prefill {prompt_len} tok in {t_prefill:.2f}s; "
+            f"decoded {gen_len} tok/seq x {batch} seqs in {t_decode:.2f}s "
+            f"({batch * gen_len / max(t_decode, 1e-9):.1f} tok/s)"
+        )
+        return toks
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCHS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+    toks = serve(
+        args.arch,
+        batch=args.batch,
+        prompt_len=args.prompt_len,
+        gen_len=args.gen_len,
+        model_parallel=args.model_parallel,
+    )
+    print("sample tokens:", toks[0].ravel()[:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

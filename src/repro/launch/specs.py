@@ -1,0 +1,210 @@
+"""Input ShapeDtypeStructs and sharding specs for the dry-run / launchers.
+
+``input_specs(cfg, shape_name)`` returns weak-type-correct ShapeDtypeStruct
+stand-ins for every model input (no device allocation).  Param/cache specs
+are name-based PartitionSpec rules resolved against the mesh axes.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# ---------------------------------------------------------------- shapes
+
+INPUT_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str) -> dict[str, jax.ShapeDtypeStruct]:
+    info = INPUT_SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    kind = info["kind"]
+    i32 = jnp.int32
+    if kind == "decode":
+        tok_shape = (b, 1, cfg.num_codebooks) if cfg.family == "audio" else (b, 1)
+        return {"tokens": jax.ShapeDtypeStruct(tok_shape, i32)}
+    out: dict[str, Any] = {}
+    if cfg.family == "audio":
+        out["tokens"] = jax.ShapeDtypeStruct((b, s, cfg.num_codebooks), i32)
+        if kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((b, s, cfg.num_codebooks), i32)
+        return out
+    s_text = s - cfg.num_patches if cfg.family == "vlm" else s
+    out["tokens"] = jax.ShapeDtypeStruct((b, s_text), i32)
+    if cfg.family == "vlm":
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patches, cfg.patch_dim), jnp.bfloat16
+        )
+    if kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, s_text), i32)
+    return out
+
+
+# ------------------------------------------------------------ param specs
+
+# Trailing-dims PartitionSpec per leaf name; leading stacked-layer dims get
+# None automatically.  "F" = fsdp (data axes), "T" = tensor (model axis).
+# Single source of truth lives in repro.sharding.rules (the models re-assert
+# these specs on per-layer slices inside their scan bodies).
+from repro.sharding.rules import PARAM_RULES as _PARAM_RULES  # noqa: E402
+
+
+def _resolve_axis(tag, rules):
+    if tag == "F":
+        if not rules.fsdp or not rules.weight_axes:
+            return None
+        w = rules.weight_axes
+        return w if len(w) > 1 else w[0]
+    if tag == "T":
+        return rules.model_axis
+    return None
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        key = getattr(p, "key", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+def _divisible(shape, spec, mesh) -> bool:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, names in zip(shape, spec):
+        if names is None:
+            continue
+        ns = names if isinstance(names, tuple) else (names,)
+        total = 1
+        for n in ns:
+            total *= sizes[n]
+        if dim % total != 0:
+            return False
+    return True
+
+
+def param_spec_tree(params_shapes, rules, mesh):
+    """PartitionSpec pytree matching params (shapes from eval_shape)."""
+
+    def assign(path, leaf):
+        name = _leaf_name(path)
+        rule = _PARAM_RULES.get(name)
+        if rule is None or leaf.ndim < len(rule):
+            return P()
+        lead = leaf.ndim - len(rule)
+        spec = [None] * lead + [_resolve_axis(t, rules) for t in rule]
+        # Drop shardings that do not divide (GSPMD would pad; for weights we
+        # prefer exactness — activations may still use padded sharding).
+        if not _divisible(leaf.shape, spec, mesh):
+            spec2 = []
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            for dim, names in zip(leaf.shape, spec):
+                if names is None:
+                    spec2.append(None)
+                    continue
+                ns = names if isinstance(names, tuple) else (names,)
+                total = 1
+                for n in ns:
+                    total *= sizes[n]
+                spec2.append(names if dim % total == 0 else None)
+            spec = spec2
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(assign, params_shapes)
+
+
+def opt_state_spec_tree(opt_shapes, param_specs):
+    """Adam m/v mirror the param specs; counters replicate."""
+
+    def assign(leaf_path, leaf):
+        # opt state dict: {"step": ..., "m": <params tree>, "v": <params tree>}
+        key0 = getattr(leaf_path[0], "key", "")
+        if key0 in ("m", "v"):
+            sub_path = leaf_path[1:]
+            spec = param_specs
+            for p in sub_path:
+                k = getattr(p, "key", getattr(p, "idx", None))
+                if isinstance(spec, (dict,)):
+                    spec = spec[k]
+                elif isinstance(spec, (list, tuple)):
+                    spec = spec[int(k)]
+                else:
+                    break
+            return spec if isinstance(spec, P) else P()
+        return P()
+
+    return jax.tree_util.tree_map_with_path(assign, opt_shapes)
+
+
+# ------------------------------------------------------------ cache specs
+
+def _bspec(batch: int, rules, mesh) -> Any:
+    if not rules.data_axes:
+        return None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 1
+    for a in rules.data_axes:
+        total *= sizes[a]
+    if batch % total == 0:
+        return rules.data_axes if len(rules.data_axes) > 1 else rules.data_axes[0]
+    return None
+
+
+def _tspec(dim: int, rules, mesh) -> Any:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if rules.model_axis and dim % sizes[rules.model_axis] == 0:
+        return rules.model_axis
+    return None
+
+
+def cache_spec_tree(cache_shapes, cfg: ModelConfig, batch: int, rules, mesh):
+    """Specs for decode caches: batch over data axes, heads/features over
+    the model axis when divisible, stacked-layer dims replicated.
+
+    Cache pytrees are NamedTuples (no string keys), so assignment is
+    shape-based: the first dim equal to the global batch is the batch dim;
+    a very large following dim (> 512) is a KV slot dim (kept unsharded —
+    decode writes a dynamic slice there); the first divisible head/feature
+    dim after that shards over the model axis.
+    """
+    b = _bspec(batch, rules, mesh)
+
+    def assign(path, leaf):
+        shape = leaf.shape
+        spec: list[Any] = [None] * leaf.ndim
+        for i, d in enumerate(shape):
+            if d == batch:
+                spec[i] = b
+                start = i + 1
+                if start < leaf.ndim and shape[start] > 512:
+                    start += 1  # slot dim of a KV cache: never sharded
+                for jdim in range(start, leaf.ndim):
+                    t = _tspec(shape[jdim], rules, mesh)
+                    if t is not None and shape[jdim] > 1:
+                        spec[jdim] = t
+                        break
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shapes)
+
+
+def batch_spec_tree(specs: dict, rules, mesh, batch: int):
+    b = _bspec(batch, rules, mesh)
+    return {k: P(b, *([None] * (v.ndim - 1))) for k, v in specs.items()}
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )

@@ -1,0 +1,117 @@
+"""Training launcher.
+
+On real hardware this runs the production mesh; on CPU it runs reduced
+configs on a host mesh (used by the e2e examples and integration tests).
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm_3b \
+        --reduced --steps 20 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.data import TokenStream
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import data_axes_for, make_host_mesh, make_production_mesh
+from repro.models import build_model
+from repro.models.steps import make_train_step
+from repro.optim import AdamW
+from repro.sharding.rules import AxisRules, use_rules
+
+
+def train(
+    arch: str,
+    *,
+    steps: int = 20,
+    batch: int = 8,
+    seq: int = 128,
+    reduced: bool = True,
+    lr: float = 3e-4,
+    model_parallel: int = 1,
+    production_mesh: bool = False,
+    log_every: int = 5,
+    checkpoint_path: str | None = None,
+):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    mesh = (
+        make_production_mesh() if production_mesh else make_host_mesh(model_parallel)
+    )
+    rules = AxisRules(mesh=mesh, data_axes=data_axes_for(mesh), model_axis="model")
+    model = build_model(cfg)
+    opt = AdamW(lr=lr)
+    stream = TokenStream(
+        vocab_size=cfg.vocab_size,
+        seq_len=seq - (cfg.num_patches if cfg.family == "vlm" else 0),
+        batch_size=batch,
+        num_codebooks=cfg.num_codebooks,
+    )
+
+    with mesh, use_rules(rules):
+        params = model.init(jax.random.PRNGKey(0))
+        opt_state = opt.init(params)
+        step_fn = jax.jit(make_train_step(model, opt))
+        losses = []
+        it = iter(stream)
+        t0 = time.perf_counter()
+        rng = np.random.default_rng(0)
+        for i in range(steps):
+            b = next(it)
+            batch_dev = {k: jnp.asarray(v) for k, v in b.items()}
+            if cfg.family == "vlm":
+                batch_dev["patch_embeds"] = jnp.asarray(
+                    rng.normal(size=(batch, cfg.num_patches, cfg.patch_dim)),
+                    jnp.float32,
+                )
+            params, opt_state, metrics = step_fn(params, opt_state, batch_dev)
+            losses.append(float(metrics["loss"]))
+            if i % log_every == 0 or i == steps - 1:
+                print(
+                    f"step {i:4d} loss {losses[-1]:.4f} "
+                    f"gnorm {float(metrics['grad_norm']):.3f} "
+                    f"({time.perf_counter() - t0:.1f}s)",
+                    flush=True,
+                )
+        if checkpoint_path:
+            from repro.checkpoint import save_pytree
+
+            save_pytree(checkpoint_path, params)
+            print(f"saved checkpoint to {checkpoint_path}")
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCHS)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full", action="store_true", help="full (non-reduced) config")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args()
+    losses = train(
+        args.arch,
+        steps=args.steps,
+        batch=args.batch,
+        seq=args.seq,
+        reduced=not args.full,
+        lr=args.lr,
+        model_parallel=args.model_parallel,
+        production_mesh=args.production_mesh,
+        checkpoint_path=args.checkpoint,
+    )
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.api import build_model
+from repro.models.config import ModelConfig
+
+__all__ = ["build_model", "ModelConfig"]

@@ -1,0 +1,17 @@
+"""Model factory: family -> model class."""
+from __future__ import annotations
+
+from repro.models.config import ModelConfig
+from repro.models.hybrid_model import HybridModel
+from repro.models.transformer import TransformerModel
+from repro.models.xlstm_model import XLSTMModel
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return XLSTMModel(cfg)
+    if cfg.family == "hybrid":
+        return HybridModel(cfg)
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        return TransformerModel(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

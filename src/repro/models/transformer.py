@@ -1,0 +1,210 @@
+"""Scan-over-layers decoder-only transformer covering the dense, MoE, SWA,
+VLM-backbone and audio-decoder families."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.config import ModelConfig
+from repro.nn import attention as attn_lib
+from repro.nn.layers import dense_init, embed_init, embed_lookup, rms_norm
+from repro.sharding.rules import shard, shard_params_by_name
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+class TransformerModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- params
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        v, d = cfg.padded_vocab, cfg.d_model
+        k_embed, k_layers, k_head, k_extra = jax.random.split(key, 4)
+        layer_keys = jax.random.split(k_layers, cfg.num_layers)
+        layers = jax.vmap(lambda k: blocks.init_transformer_layer(k, cfg))(layer_keys)
+        params: Params = {
+            "layers": layers,
+            "ln_f": jnp.ones((d,), cfg.jnp_dtype),
+        }
+        if cfg.family == "audio":
+            keys = jax.random.split(k_embed, cfg.num_codebooks)
+            params["embed"] = jnp.stack([embed_init(k, v, d, cfg.jnp_dtype) for k in keys])
+            params["head"] = dense_init(k_head, (d, cfg.num_codebooks * v), cfg.jnp_dtype)
+        else:
+            params["embed"] = embed_init(k_embed, v, d, cfg.jnp_dtype)
+            params["head"] = dense_init(k_head, (d, v), cfg.jnp_dtype)
+        if cfg.family == "vlm":
+            params["patch_proj"] = dense_init(k_extra, (cfg.patch_dim, d), cfg.jnp_dtype)
+        return params
+
+    # -------------------------------------------------------------- embed
+    def _embed(self, params: Params, batch: dict) -> Array:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        if cfg.family == "audio":
+            # tokens: (B, S, num_codebooks); sum codebook embeddings.
+            parts = [
+                embed_lookup(params["embed"][c], tokens[..., c])
+                for c in range(cfg.num_codebooks)
+            ]
+            x = sum(parts)
+        else:
+            x = embed_lookup(params["embed"], tokens)
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            patches = batch["patch_embeds"].astype(x.dtype) @ params["patch_proj"]
+            x = jnp.concatenate([patches, x], axis=1)
+        return shard(x, "batch", None, None)
+
+    def _head(self, params: Params, x: Array) -> Array:
+        cfg = self.cfg
+        x = rms_norm(x, params["ln_f"])
+        logits = x @ params["head"]
+        if cfg.family == "audio":
+            b, s, _ = logits.shape
+            logits = logits.reshape(b, s, cfg.num_codebooks, cfg.padded_vocab)
+            return shard(logits, "batch", None, None, "tensor")
+        return shard(logits, "batch", None, "tensor")
+
+    # ------------------------------------------------------------ forward
+    def forward(self, params: Params, batch: dict) -> tuple[Array, Array]:
+        """Full-sequence forward (training). Returns (logits, moe_aux)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        positions = jnp.arange(x.shape[1])
+
+        def body(x, layer_p):
+            layer_p = shard_params_by_name(layer_p)
+            x, _, aux = blocks.apply_transformer_layer(layer_p, x, positions, cfg, None)
+            return x, aux
+
+        blk = cfg.remat_block
+        if blk and cfg.num_layers % blk == 0 and cfg.num_layers > blk:
+            # Block remat: residuals saved only at group boundaries
+            # (L/blk saves instead of L); each group of blk layers is
+            # recomputed whole in the backward pass.
+            groups = cfg.num_layers // blk
+            grouped = jax.tree.map(
+                lambda a: a.reshape((groups, blk) + a.shape[1:]), params["layers"]
+            )
+
+            inner_body = jax.checkpoint(body) if cfg.remat else body
+
+            def group_body(x, gp):
+                return jax.lax.scan(inner_body, x, gp)
+
+            if cfg.remat:
+                # Two-level (recursive) remat: only group-boundary residuals
+                # survive the forward pass; the group re-runs during its
+                # backward with per-layer remat inside.
+                group_body = jax.checkpoint(group_body)
+            x, auxs = jax.lax.scan(group_body, x, grouped)
+            return self._head(params, x), jnp.mean(auxs)
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, auxs = jax.lax.scan(body, x, params["layers"])
+        return self._head(params, x), jnp.mean(auxs)
+
+    # ------------------------------------------------------------ prefill
+    def prefill(self, params: Params, batch: dict, max_len: int | None = None):
+        """Forward + collect the rotated KV into a decode cache sized for
+        ``max_len`` total positions (defaults to the prompt length)."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        s = x.shape[1]
+        positions = jnp.arange(s)
+
+        def body(x, layer_p):
+            layer_p = shard_params_by_name(layer_p)
+            window = cfg.window if cfg.attention == "swa" else None
+            h, kv = _attention_collect_kv(layer_p, x, positions, cfg, window)
+            x = x + h
+            f, _ = blocks.apply_ffn(layer_p["ffn"], rms_norm(x, layer_p["ln2"]), cfg)
+            if cfg.d_ff or cfg.num_experts:
+                x = x + f
+            return shard(x, "batch", None, None), kv
+
+        x, kv_stack = jax.lax.scan(body, x, params["layers"])
+        cache = _kv_to_cache(kv_stack, s, cfg, max_len=max_len)
+        return self._head(params, x[:, -1:, :]), cache
+
+    def init_cache(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        slots = min(max_len, cfg.window) if cfg.attention == "swa" else max_len
+        one = attn_lib.init_kv_cache(
+            batch_size, slots, cfg.num_kv_heads, cfg.hd, cfg.jnp_dtype
+        )
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), one
+        )
+
+    def decode_step(self, params: Params, batch: dict, cache) -> tuple[Array, Any]:
+        """One-token step. batch['tokens']: (B, 1) (audio: (B, 1, nc));
+        position taken from the cache index."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        positions = cache.index[:1]  # (1,), same for all layers
+
+        def body(x, inp):
+            layer_p, cache_l = inp
+            layer_p = shard_params_by_name(layer_p)
+            x, new_cache, _ = blocks.apply_transformer_layer(
+                layer_p, x, positions, cfg, cache_l
+            )
+            return x, new_cache
+
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], cache))
+        return self._head(params, x), new_caches
+
+
+def _attention_collect_kv(layer_p, x, positions, cfg, window):
+    """Attention that also returns the rotated (k, v) for cache building."""
+    p = layer_p["attn"]
+    b, s, _ = x.shape
+    hd = cfg.hd
+    xn = rms_norm(x, layer_p["ln1"])
+    from repro.nn.rope import apply_rope
+
+    q = (xn @ p["wq"]).reshape(b, s, cfg.num_heads, hd)
+    k = (xn @ p["wk"]).reshape(b, s, cfg.num_kv_heads, hd)
+    v = (xn @ p["wv"]).reshape(b, s, cfg.num_kv_heads, hd)
+    q = shard(apply_rope(q, positions, cfg.rope_theta), "batch", None, "tensor", None)
+    k = shard(apply_rope(k, positions, cfg.rope_theta), "batch", None, "tensor", None)
+    out = attn_lib.chunked_causal_attention(
+        q,
+        attn_lib.repeat_kv(k, cfg.num_heads),
+        attn_lib.repeat_kv(v, cfg.num_heads),
+        chunk_size=min(cfg.attn_chunk, s),
+        window=window,
+    )
+    y = out.reshape(b, s, cfg.num_heads * hd) @ p["wo"]
+    return shard(y, "batch", None, None), (k, v)
+
+
+def _kv_to_cache(kv_stack, seq_len: int, cfg: ModelConfig, max_len: int | None = None):
+    """(L, B, S, KVH, hd) k/v -> ring-ordered decode cache with room for
+    ``max_len`` total positions."""
+    k, v = kv_stack
+    total = max(max_len or seq_len, seq_len)
+    slots = min(total, cfg.window) if cfg.attention == "swa" else total
+    if slots < seq_len:
+        # Keep the last `slots` tokens, placed at slot (pos % slots).
+        last = jax.lax.dynamic_slice_in_dim(k, seq_len - slots, slots, axis=2)
+        lastv = jax.lax.dynamic_slice_in_dim(v, seq_len - slots, slots, axis=2)
+        pos = jnp.arange(seq_len - slots, seq_len)
+        slot_idx = jnp.mod(pos, slots)
+        k = jnp.zeros_like(last).at[:, :, slot_idx].set(last)
+        v = jnp.zeros_like(lastv).at[:, :, slot_idx].set(lastv)
+    elif slots > seq_len:
+        pad = [(0, 0), (0, 0), (0, slots - seq_len), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    num_stack = k.shape[0]
+    index = jnp.full((num_stack,), seq_len, jnp.int32)
+    return attn_lib.KVCache(k=k, v=v, index=index)

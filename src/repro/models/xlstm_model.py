@@ -1,0 +1,125 @@
+"""xLSTM language model: periods of (slstm_period-1) mLSTM layers followed
+by one sLSTM layer, scanned over periods (arXiv:2405.04517)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.models.config import ModelConfig
+from repro.nn import xlstm as xlstm_lib
+from repro.nn.layers import dense_init, embed_init, embed_lookup, rms_norm
+from repro.sharding.rules import shard, shard_params_by_name
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+class XLSTMCache(NamedTuple):
+    mlstm: xlstm_lib.MLSTMState   # leading dims (P, mlstm_per_period)
+    slstm: xlstm_lib.SLSTMState   # leading dim (P,)
+
+
+class XLSTMModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        period = cfg.slstm_period or 1
+        assert cfg.num_layers % period == 0, "num_layers must divide by slstm_period"
+        self.num_periods = cfg.num_layers // period
+        self.has_slstm = cfg.slstm_period > 1
+        self.mlstm_per_period = period - 1 if self.has_slstm else 1
+
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        v, d = cfg.padded_vocab, cfg.d_model
+        k_embed, k_m, k_s, k_head = jax.random.split(key, 4)
+        m_keys = jax.random.split(k_m, self.num_periods * self.mlstm_per_period)
+        mlstm = jax.vmap(lambda k: blocks.init_mlstm_layer(k, cfg))(m_keys)
+        mlstm = jax.tree.map(
+            lambda a: a.reshape((self.num_periods, self.mlstm_per_period) + a.shape[1:]),
+            mlstm,
+        )
+        s_keys = jax.random.split(k_s, self.num_periods)
+        params: Params = {
+            "embed": embed_init(k_embed, v, d, cfg.jnp_dtype),
+            "mlstm": mlstm,
+            # sLSTM params are always allocated so the scan structure is
+            # static; they are applied only when has_slstm.
+            "slstm": jax.vmap(lambda k: blocks.init_slstm_layer(k, cfg))(s_keys),
+            "ln_f": jnp.ones((d,), cfg.jnp_dtype),
+            "head": dense_init(k_head, (d, v), cfg.jnp_dtype),
+        }
+        return params
+
+    def _run(self, params: Params, x: Array, cache: XLSTMCache | None):
+        cfg = self.cfg
+        stateful = cache is not None
+        if not stateful:
+            # Dummy states threaded through the scan for a uniform body;
+            # full-sequence runs start every layer from the zero state.
+            cache = self.init_cache(x.shape[0], 0)
+
+        def inner(x, inp):
+            mp, st = inp
+            mp = shard_params_by_name(mp)
+            x, st_new = blocks.apply_mlstm_layer(mp, x, cfg, st if stateful else None)
+            return x, st_new if stateful else st
+
+        def period_body(x, inp):
+            mp, sp, m_st, s_st = inp
+            x, m_new = jax.lax.scan(inner, x, (mp, m_st))
+            if self.has_slstm:
+                x, s_new = blocks.apply_slstm_layer(
+                    shard_params_by_name(sp), x, cfg, s_st if stateful else None
+                )
+                if not stateful:
+                    s_new = s_st
+            else:
+                s_new = s_st
+            return x, (m_new, s_new)
+
+        if cfg.remat and not stateful:
+            period_body = jax.checkpoint(period_body)
+
+        xs = (params["mlstm"], params["slstm"], cache.mlstm, cache.slstm)
+        x, (m_new, s_new) = jax.lax.scan(period_body, x, xs)
+        new_cache = XLSTMCache(mlstm=m_new, slstm=s_new) if stateful else None
+        return x, new_cache
+
+    def _logits(self, params: Params, x: Array) -> Array:
+        logits = rms_norm(x, params["ln_f"]) @ params["head"]
+        return shard(logits, "batch", None, "tensor")
+
+    def forward(self, params: Params, batch: dict) -> tuple[Array, Array]:
+        x = shard(embed_lookup(params["embed"], batch["tokens"]), "batch", None, None)
+        x, _ = self._run(params, x, None)
+        return self._logits(params, x), jnp.zeros((), jnp.float32)
+
+    def init_cache(self, batch_size: int, max_len: int) -> XLSTMCache:
+        cfg = self.cfg
+        h, hd = cfg.num_heads, cfg.hd
+        m_one = xlstm_lib.init_mlstm_state(batch_size, h, hd, hd)
+        s_one = xlstm_lib.init_slstm_state(batch_size, cfg.d_model)
+        pm = (self.num_periods, self.mlstm_per_period)
+        return XLSTMCache(
+            mlstm=jax.tree.map(
+                lambda a: jnp.broadcast_to(a, pm + a.shape).astype(a.dtype), m_one
+            ),
+            slstm=jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (self.num_periods,) + a.shape), s_one
+            ),
+        )
+
+    def prefill(self, params: Params, batch: dict, max_len: int | None = None):
+        del max_len  # recurrent state: no per-position cache to size
+        x = shard(embed_lookup(params["embed"], batch["tokens"]), "batch", None, None)
+        cache = self.init_cache(x.shape[0], x.shape[1])
+        x, cache = self._run(params, x, cache)
+        return self._logits(params, x[:, -1:]), cache
+
+    def decode_step(self, params: Params, batch: dict, cache: XLSTMCache):
+        x = shard(embed_lookup(params["embed"], batch["tokens"]), "batch", None, None)
+        x, cache = self._run(params, x, cache)
+        return self._logits(params, x), cache

@@ -1,0 +1,16 @@
+"""Gated MLP (SwiGLU) block."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import shard
+
+Array = jax.Array
+
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    """x: (..., d); w_gate/w_up: (d, f); w_down: (f, d)."""
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = shard(h, "batch", None, "tensor")
+    return h @ w_down

@@ -1,0 +1,116 @@
+"""Mamba2-style selective SSM with chunked (block-parallel) scan.
+
+State-space recurrence per head:  h_t = a_t h_{t-1} + dt_t * (B_t (x) x_t),
+y_t = C_t . h_t,  with a_t = exp(A * dt_t) (A < 0 per head).
+
+Training/prefill uses the Mamba2 chunked dual form: within a chunk the
+output is a masked quadratic ("attention-like") product, across chunks a
+sequential ``lax.scan`` carries the (H, dh, ds) state.  This is also the
+blocking scheme of the ``ssm_scan`` Pallas kernel.  Decode is the O(1)
+recurrence.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class SSMState(NamedTuple):
+    h: Array           # (B, H, dh, ds)
+    conv: Array        # (B, kernel-1, conv_dim) rolling conv inputs
+
+
+def chunked_ssm_scan(
+    x: Array,       # (B, S, H, dh)  pre-scaled inputs (dt applied by caller? no: raw)
+    dt: Array,      # (B, S, H)      positive (softplus'd)
+    a: Array,       # (H,)           negative decay rates
+    b_mat: Array,   # (B, S, ds)
+    c_mat: Array,   # (B, S, ds)
+    h0: Array,      # (B, H, dh, ds)
+    *,
+    chunk: int = 256,
+) -> tuple[Array, Array]:
+    """Returns (y: (B, S, H, dh), h_final: (B, H, dh, ds))."""
+    bsz, s, h, dh = x.shape
+    ds = b_mat.shape[-1]
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    nc = s // chunk
+
+    xf = x.astype(jnp.float32)
+    log_a = a.astype(jnp.float32)[None, None, :] * dt.astype(jnp.float32)  # (B,S,H)
+
+    xc = xf.reshape(bsz, nc, chunk, h, dh)
+    dtc = dt.astype(jnp.float32).reshape(bsz, nc, chunk, h)
+    lac = log_a.reshape(bsz, nc, chunk, h)
+    bc = b_mat.astype(jnp.float32).reshape(bsz, nc, chunk, ds)
+    cc = c_mat.astype(jnp.float32).reshape(bsz, nc, chunk, ds)
+
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]
+
+    def body(h_prev, inp):
+        xk, dtk, lak, bk, ck = inp
+        la_cum = jnp.cumsum(lak, axis=1)
+        cb = jnp.einsum("btd,bsd->bts", ck, bk)
+        decay = jnp.exp(
+            jnp.clip(la_cum[:, :, None, :] - la_cum[:, None, :, :], -60.0, 0.0)
+        )
+        scores = cb[..., None] * decay * dtk[:, None, :, :]
+        scores = jnp.where(causal[None, :, :, None], scores, 0.0)
+        y_intra = jnp.einsum("btsh,bshd->bthd", scores, xk)
+        c_scaled = ck[:, :, None, :] * jnp.exp(jnp.clip(la_cum, -60.0, 0.0))[..., None]
+        y_inter = jnp.einsum("bthp,bhdp->bthd", c_scaled, h_prev)
+        la_last = la_cum[:, -1:, :]
+        w = jnp.exp(jnp.clip(la_last - la_cum, -60.0, 0.0)) * dtk
+        h_new = (
+            jnp.exp(jnp.clip(la_last[:, 0, :], -60.0, 0.0))[:, :, None, None] * h_prev
+            + jnp.einsum("bsh,bshd,bsp->bhdp", w, xk, bk)
+        )
+        return h_new, y_intra + y_inter
+
+    swap = lambda t: jnp.swapaxes(t, 0, 1)  # scan over chunk axis
+    h_final, yc = jax.lax.scan(
+        body, h0.astype(jnp.float32), (swap(xc), swap(dtc), swap(lac), swap(bc), swap(cc))
+    )
+    y = jnp.swapaxes(yc, 0, 1).reshape(bsz, s, h, dh)
+    return y.astype(x.dtype), h_final
+
+
+def ssm_decode_step(
+    x: Array,       # (B, H, dh)
+    dt: Array,      # (B, H)
+    a: Array,       # (H,)
+    b_mat: Array,   # (B, ds)
+    c_mat: Array,   # (B, ds)
+    h: Array,       # (B, H, dh, ds)
+) -> tuple[Array, Array]:
+    """One recurrence step; returns (y: (B, H, dh), h_new)."""
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    a_t = jnp.exp(jnp.clip(a[None] * dtf, -60.0, 0.0))                # (B,H)
+    contrib = jnp.einsum("bh,bhd,bp->bhdp", dtf, xf, b_mat.astype(jnp.float32))
+    h_new = a_t[..., None, None] * h + contrib
+    y = jnp.einsum("bp,bhdp->bhd", c_mat.astype(jnp.float32), h_new)
+    return y.astype(x.dtype), h_new
+
+
+def causal_conv1d(x: Array, w: Array, b: Array, prev: Array | None = None):
+    """Depthwise causal conv.  x: (B, S, C); w: (ker, C); b: (C,).
+
+    prev: (B, ker-1, C) history for decode/chunked use; returns
+    (y: (B, S, C), new_prev).
+    """
+    ker = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], ker - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)           # (B, S+ker-1, C)
+    # Sliding window sum: y_t = sum_k w_k * xp[t+k]
+    y = sum(
+        xp[:, k : k + x.shape[1], :] * w[k][None, None, :] for k in range(ker)
+    )
+    y = jax.nn.silu(y + b[None, None, :])
+    new_prev = xp[:, x.shape[1] :, :] if ker > 1 else prev
+    return y.astype(x.dtype), new_prev

@@ -1,0 +1,172 @@
+"""xLSTM primitives: mLSTM (matrix memory, chunked-parallel) and sLSTM
+(scalar memory, sequential) — arXiv:2405.04517.
+
+mLSTM recurrence per head (stabilized, states scaled by exp(-m)):
+    C_t = f_t C_{t-1} + i_t k_t v_t^T          (dk x dv matrix memory)
+    n_t = f_t n_{t-1} + i_t k_t
+    y_t = (C_t^T q_t) / max(|n_t^T q_t|, exp(-m_t))
+with log-space gates lf = logsigmoid(f_pre), li = i_pre and running
+stabilizer m.  Training/prefill uses a chunkwise dual form (quadratic
+within chunks, scanned state across chunks) mirroring the Mamba2 scheme.
+
+sLSTM: per-unit scalar memory with block-diagonal recurrent weights,
+necessarily sequential (lax.scan over time).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class MLSTMState(NamedTuple):
+    c: Array    # (B, H, dk, dv) scaled by exp(-m)
+    n: Array    # (B, H, dk)
+    m: Array    # (B, H) log-space stabilizer
+
+
+def init_mlstm_state(batch: int, heads: int, dk: int, dv: int) -> MLSTMState:
+    return MLSTMState(
+        c=jnp.zeros((batch, heads, dk, dv), jnp.float32),
+        n=jnp.zeros((batch, heads, dk), jnp.float32),
+        m=jnp.full((batch, heads), -1e30, jnp.float32),
+    )
+
+
+def chunked_mlstm(
+    q: Array,       # (B, S, H, dk)
+    k: Array,       # (B, S, H, dk)
+    v: Array,       # (B, S, H, dv)
+    i_pre: Array,   # (B, S, H) input-gate preactivations
+    f_pre: Array,   # (B, S, H) forget-gate preactivations
+    state: MLSTMState,
+    *,
+    chunk: int = 256,
+) -> tuple[Array, MLSTMState]:
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dk, jnp.float32))
+
+    f32 = lambda t: t.astype(jnp.float32)
+    qc = f32(q).reshape(b, nc, chunk, h, dk) * scale
+    kc = f32(k).reshape(b, nc, chunk, h, dk)
+    vc = f32(v).reshape(b, nc, chunk, h, dv)
+    ic = f32(i_pre).reshape(b, nc, chunk, h)
+    lf = jax.nn.log_sigmoid(f32(f_pre)).reshape(b, nc, chunk, h)
+
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]
+
+    def body(carry, inp):
+        c_prev, n_prev, m_prev = carry
+        qk_, kk_, vk_, ik_, lfk = inp
+        fcum = jnp.cumsum(lfk, axis=1)                         # (B,c,H) inclusive
+        # log weights: D[t,s] = F_t - F_s + i_s   (s <= t)
+        d_log = fcum[:, :, None, :] - fcum[:, None, :, :] + ik_[:, None, :, :]
+        d_log = jnp.where(causal[None, :, :, None], d_log, -jnp.inf)
+        inter_log = fcum + m_prev[:, None, :]                  # (B,c,H)
+        m_t = jnp.maximum(jnp.max(d_log, axis=2), inter_log)   # (B,c,H)
+        m_t = jnp.maximum(m_t, -1e30)
+        w_intra = jnp.exp(d_log - m_t[:, :, None, :])          # (B,t,s,H)
+        w_inter = jnp.exp(inter_log - m_t)                     # (B,c,H)
+        scores = jnp.einsum("bthd,bshd->btsh", qk_, kk_) * w_intra
+        num = jnp.einsum("btsh,bshv->bthv", scores, vk_)
+        num += w_inter[..., None] * jnp.einsum("bthd,bhdv->bthv", qk_, c_prev)
+        den = jnp.einsum("btsh->bth", scores) + w_inter * jnp.einsum(
+            "bthd,bhd->bth", qk_, n_prev
+        )
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        y = num / den[..., None]
+        # State update to end of chunk.
+        f_total = fcum[:, -1, :]                                # (B,H)
+        s_log = f_total[:, None, :] - fcum + ik_                # (B,c,H)
+        m_new = jnp.maximum(m_prev + f_total, jnp.max(s_log, axis=1))
+        w_state = jnp.exp(s_log - m_new[:, None, :])
+        c_new = jnp.exp(m_prev + f_total - m_new)[:, :, None, None] * c_prev + jnp.einsum(
+            "bsh,bshd,bshv->bhdv", w_state, kk_, vk_
+        )
+        n_new = jnp.exp(m_prev + f_total - m_new)[:, :, None] * n_prev + jnp.einsum(
+            "bsh,bshd->bhd", w_state, kk_
+        )
+        return (c_new, n_new, m_new), y
+
+    swap = lambda t: jnp.swapaxes(t, 0, 1)
+    (c, n, m), yc = jax.lax.scan(
+        body,
+        (state.c, state.n, state.m),
+        (swap(qc), swap(kc), swap(vc), swap(ic), swap(lf)),
+    )
+    y = jnp.swapaxes(yc, 0, 1).reshape(b, s, h, dv).astype(q.dtype)
+    return y, MLSTMState(c=c, n=n, m=m)
+
+
+def mlstm_decode_step(
+    q: Array, k: Array, v: Array, i_pre: Array, f_pre: Array, state: MLSTMState
+) -> tuple[Array, MLSTMState]:
+    """One token: q/k: (B, H, dk), v: (B, H, dv), gates: (B, H)."""
+    dk = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dk, jnp.float32))
+    qf = q.astype(jnp.float32) * scale
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    li = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(lf + state.m, li)
+    a = jnp.exp(lf + state.m - m_new)
+    bq = jnp.exp(li - m_new)
+    c = a[..., None, None] * state.c + bq[..., None, None] * jnp.einsum(
+        "bhd,bhv->bhdv", kf, vf
+    )
+    n = a[..., None] * state.n + bq[..., None] * kf
+    num = jnp.einsum("bhd,bhdv->bhv", qf, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), jnp.exp(-m_new))
+    y = (num / den[..., None]).astype(q.dtype)
+    return y, MLSTMState(c=c, n=n, m=m_new)
+
+
+class SLSTMState(NamedTuple):
+    c: Array   # (B, d)
+    n: Array   # (B, d)
+    h: Array   # (B, d)
+    m: Array   # (B, d)
+
+
+def init_slstm_state(batch: int, d: int) -> SLSTMState:
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((batch, d), -1e30, jnp.float32))
+
+
+def _slstm_cell(x_gates: Array, r_w: Array, state: SLSTMState, num_heads: int):
+    """x_gates: (B, 4d) precomputed input contributions [z,i,f,o];
+    r_w: (4, H, dh, dh) block-diagonal recurrent weights."""
+    b, d4 = x_gates.shape
+    d = d4 // 4
+    dh = d // num_heads
+    h_heads = state.h.reshape(b, num_heads, dh)
+    rec = jnp.einsum("bhd,ghde->gbhe", h_heads, r_w).reshape(4, b, d)
+    zx, ix, fx, ox = jnp.split(x_gates, 4, axis=-1)
+    z = jnp.tanh(zx + rec[0])
+    li = ix + rec[1]                                  # exp input gate (log space)
+    lf = jax.nn.log_sigmoid(fx + rec[2])              # sigmoid forget gate
+    o = jax.nn.sigmoid(ox + rec[3])
+    m_new = jnp.maximum(lf + state.m, li)
+    c = jnp.exp(lf + state.m - m_new) * state.c + jnp.exp(li - m_new) * z
+    n = jnp.exp(lf + state.m - m_new) * state.n + jnp.exp(li - m_new)
+    h = o * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c=c, n=n, h=h, m=m_new)
+
+
+def slstm_scan(
+    x_gates: Array, r_w: Array, state: SLSTMState, num_heads: int
+) -> tuple[Array, SLSTMState]:
+    """Sequential sLSTM over time. x_gates: (B, S, 4d) -> h: (B, S, d)."""
+    def step(st, xg):
+        st_new = _slstm_cell(xg, r_w, st, num_heads)
+        return st_new, st_new.h
+
+    state, hs = jax.lax.scan(step, state, jnp.swapaxes(x_gates, 0, 1).astype(jnp.float32))
+    return jnp.swapaxes(hs, 0, 1).astype(x_gates.dtype), state

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import AdamW, Optimizer, Sgd
+
+__all__ = ["AdamW", "Optimizer", "Sgd"]

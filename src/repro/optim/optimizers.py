@@ -1,0 +1,94 @@
+"""Pure-JAX optimizers (no optax in this environment).
+
+Moment states mirror the parameter pytree (and inherit its sharding specs
+under pjit), master copies stay in the parameter dtype; moments in f32.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer:
+    def init(self, params) -> Any:
+        raise NotImplementedError
+
+    def update(self, params, grads, state):
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class Sgd(Optimizer):
+    lr: float = 1e-2
+    momentum: float = 0.0
+
+    def init(self, params):
+        if self.momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+
+    def update(self, params, grads, state):
+        if self.momentum == 0.0:
+            new_params = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32) - self.lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads,
+            )
+            return new_params, {"step": state["step"] + 1}
+        m = jax.tree.map(
+            lambda m_, g: self.momentum * m_ + g.astype(jnp.float32), state["m"], grads
+        )
+        new_params = jax.tree.map(
+            lambda p, m_: (p.astype(jnp.float32) - self.lr * m_).astype(p.dtype),
+            params, m,
+        )
+        return new_params, {"step": state["step"] + 1, "m": m}
+
+
+@dataclass(frozen=True)
+class AdamW(Optimizer):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(self, params, grads, state):
+        step = state["step"] + 1
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_new = self.b1 * m + (1 - self.b1) * g32
+            v_new = self.b2 * v + (1 - self.b2) * g32 * g32
+            mh = m_new / b1c
+            vh = v_new / b2c
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            p32 = p.astype(jnp.float32)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p32
+            return (p32 - self.lr * delta).astype(p.dtype), m_new, v_new
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+        return new_p, {"step": step, "m": new_m, "v": new_v}

@@ -1,0 +1,3 @@
+from repro.sharding.rules import AxisRules, current_rules, shard, spec, use_rules
+
+__all__ = ["AxisRules", "current_rules", "shard", "spec", "use_rules"]

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the single real CPU device (the dry-run process sets its own
+# XLA_FLAGS; never set device-count flags here).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

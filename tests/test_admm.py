@@ -1,0 +1,104 @@
+"""ADMM solver tests: centralized equivalence is THE paper claim."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import admm, consensus, topology
+
+
+def _problem(key, n, q, j, m):
+    ky, kt = jax.random.split(key)
+    y = jax.random.normal(ky, (n, j))
+    t = jax.random.normal(kt, (q, j))
+    yw = y.reshape(n, m, j // m).transpose(1, 0, 2)
+    tw = t.reshape(q, m, j // m).transpose(1, 0, 2)
+    return y, t, yw, tw
+
+
+def test_decentralized_matches_exact_oracle():
+    y, t, yw, tw = _problem(jax.random.PRNGKey(0), 32, 5, 400, 4)
+    eps = 10.0
+    oracle = admm.exact_constrained_ridge(y, t, eps_radius=eps)
+    res = admm.admm_ridge_consensus(yw, tw, mu=1e-2, eps_radius=eps, num_iters=300)
+    rel = float(jnp.linalg.norm(res.o_star - oracle) / jnp.linalg.norm(oracle))
+    assert rel < 1e-4, rel
+
+
+def test_centralized_equals_decentralized_at_convergence():
+    y, t, yw, tw = _problem(jax.random.PRNGKey(1), 24, 4, 240, 6)
+    eps = 8.0
+    cen = admm.centralized_ridge_admm(y, t, mu=1e-2, eps_radius=eps, num_iters=400)
+    dec = admm.admm_ridge_consensus(yw, tw, mu=1e-2, eps_radius=eps, num_iters=400)
+    rel = float(
+        jnp.linalg.norm(cen.o_star - dec.o_star) / jnp.linalg.norm(cen.o_star)
+    )
+    assert rel < 1e-4, rel
+
+
+def test_gossip_consensus_preserves_equivalence():
+    """dSSFN over a sparse circular graph (paper topology) still converges
+    to the centralized solution once gossip rounds are sufficient."""
+    y, t, yw, tw = _problem(jax.random.PRNGKey(2), 16, 3, 160, 8)
+    eps = 6.0
+    h = topology.circular_mixing_matrix(8, 2)
+    rounds = topology.gossip_rounds_for_tolerance(h, 1e-9)
+    cfn = consensus.make_consensus_fn("gossip", h=h, num_rounds=rounds)
+    dec = admm.admm_ridge_consensus(
+        yw, tw, mu=1e-2, eps_radius=eps, num_iters=200, consensus_fn=cfn
+    )
+    oracle = admm.exact_constrained_ridge(y, t, eps_radius=eps)
+    rel = float(jnp.linalg.norm(dec.o_star - oracle) / jnp.linalg.norm(oracle))
+    assert rel < 1e-3, rel
+
+
+def test_projection_feasibility():
+    """Z iterates always satisfy the Frobenius constraint."""
+    _, _, yw, tw = _problem(jax.random.PRNGKey(3), 16, 3, 160, 4)
+    eps = 0.5  # tight ball: projection active
+    res = admm.admm_ridge_consensus(yw, tw, mu=1e-1, eps_radius=eps, num_iters=50)
+    assert float(jnp.linalg.norm(res.o_star)) <= eps * (1 + 1e-5)
+
+
+def test_objective_decreases_overall():
+    _, _, yw, tw = _problem(jax.random.PRNGKey(4), 16, 3, 160, 4)
+    res = admm.admm_ridge_consensus(yw, tw, mu=1e-2, eps_radius=10.0, num_iters=100)
+    obj = np.asarray(res.trace.objective)
+    assert obj[-1] < obj[0]
+    # primal residual shrinks
+    assert res.trace.primal_residual[-1] < res.trace.primal_residual[0]
+
+
+@given(
+    n=st.sampled_from([8, 16, 24]),
+    q=st.sampled_from([2, 3, 5]),
+    m=st.sampled_from([1, 2, 4]),
+    mu=st.sampled_from([1e-3, 1e-2, 1e-1]),
+)
+@settings(max_examples=12, deadline=None)
+def test_admm_solution_feasible_and_finite(n, q, m, mu):
+    j = 40 * m
+    _, _, yw, tw = _problem(jax.random.PRNGKey(n * q * m), n, q, j, m)
+    eps = 2.0 * q
+    res = admm.admm_ridge_consensus(yw, tw, mu=mu, eps_radius=eps, num_iters=60)
+    assert bool(jnp.all(jnp.isfinite(res.o_star)))
+    assert float(jnp.linalg.norm(res.o_star)) <= eps * (1 + 1e-4)
+
+
+def test_projection_operator():
+    z = jnp.ones((3, 4))
+    out = admm.project_frobenius(z, 1.0)
+    assert abs(float(jnp.linalg.norm(out)) - 1.0) < 1e-6
+    z_small = 0.01 * jnp.ones((3, 4))
+    assert jnp.allclose(admm.project_frobenius(z_small, 1.0), z_small)
+
+
+def test_pallas_gram_path_matches_default():
+    """ADMM with the Pallas gram kernel == einsum path."""
+    _, _, yw, tw = _problem(jax.random.PRNGKey(5), 128, 3, 512, 2)
+    kw = dict(mu=1e-2, eps_radius=6.0, num_iters=30)
+    a = admm.admm_ridge_consensus(yw, tw, **kw)
+    b = admm.admm_ridge_consensus(yw, tw, use_kernels=True, **kw)
+    rel = float(jnp.linalg.norm(a.o_star - b.o_star) / jnp.linalg.norm(a.o_star))
+    assert rel < 1e-4, rel

@@ -1,0 +1,83 @@
+"""Structural tests for the dry-run machinery: every (arch x shape)
+combination produces consistent input/cache/param shape trees (no mesh,
+no compilation — pure eval_shape, fast)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.launch import specs as specs_lib
+from repro.models import build_model
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("shape_name", list(specs_lib.INPUT_SHAPES))
+def test_input_specs_consistent(arch, shape_name):
+    cfg = get_config(arch)
+    info = specs_lib.INPUT_SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        pytest.skip("full-attention arch skips long_500k (DESIGN.md §5)")
+    batch = specs_lib.batch_specs(cfg, shape_name)
+    b = info["batch"]
+    assert batch["tokens"].shape[0] == b
+    assert batch["tokens"].dtype == jnp.int32
+    if info["kind"] == "decode":
+        assert batch["tokens"].shape[1] == 1
+    else:
+        seq_dims = batch["tokens"].shape[1]
+        if cfg.family == "vlm":
+            assert seq_dims + cfg.num_patches == info["seq"]
+            assert batch["patch_embeds"].shape == (b, cfg.num_patches, cfg.patch_dim)
+        else:
+            assert seq_dims == info["seq"]
+    if cfg.family == "audio":
+        assert batch["tokens"].shape[-1] == cfg.num_codebooks
+    if info["kind"] == "train":
+        assert "labels" in batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_param_shapes(arch):
+    """eval_shape of the FULL production config (no allocation)."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    import math
+
+    total = sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+    analytic = cfg.param_count()
+    assert 0.5 * analytic < total < 2.0 * analytic, (arch, total, analytic)
+
+
+@pytest.mark.parametrize("arch", ["stablelm_3b", "zamba2_2_7b", "xlstm_350m",
+                                  "mixtral_8x22b", "h2o_danube3_4b"])
+def test_full_config_cache_shapes(arch):
+    """Decode caches for the full configs stay bounded for SWA/SSM archs."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    for shape_name in ("decode_32k", "long_500k"):
+        if shape_name == "long_500k" and not cfg.sub_quadratic:
+            continue
+        info = specs_lib.INPUT_SHAPES[shape_name]
+        cache = jax.eval_shape(
+            lambda: model.init_cache(info["batch"], info["seq"])
+        )
+        import math
+
+        total_bytes = sum(
+            math.prod(l.shape) * l.dtype.itemsize for l in jax.tree.leaves(cache)
+        )
+        # Global cache must fit the pod (256 x 16 GB), with margin.
+        assert total_bytes < 2e12, (arch, shape_name, total_bytes)
+        if cfg.attention == "swa" and cfg.family == "dense":
+            # ring buffer: slots bounded by the window regardless of seq
+            k = jax.tree.leaves(cache)[0]
+            assert cfg.window in k.shape or k.shape[2] <= cfg.window
+
+
+def test_long500k_run_skip_partition():
+    runs = {a for a in ARCHS if get_config(a).sub_quadratic}
+    assert runs == {
+        "xlstm_350m", "zamba2_2_7b", "h2o_danube3_4b", "h2o_danube_1_8b",
+        "mixtral_8x22b",
+    }

@@ -1,0 +1,182 @@
+"""Unit + property tests for the NN substrate components."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.nn import attention as attn_lib
+from repro.nn import moe as moe_lib
+from repro.nn.rope import apply_rope
+from repro.nn.ssm import chunked_ssm_scan, ssm_decode_step
+from repro.nn.xlstm import (
+    chunked_mlstm, init_mlstm_state, init_slstm_state,
+    mlstm_decode_step, slstm_scan,
+)
+
+
+# --------------------------------------------------------------- attention
+
+def test_chunked_attention_matches_dense():
+    b, s, h, hd = 2, 64, 3, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+
+    def dense(q, k, v, window=None):
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q / np.sqrt(hd), k)
+        qp, kp = jnp.arange(s)[:, None], jnp.arange(s)[None, :]
+        mask = qp >= kp
+        if window:
+            mask &= (qp - kp) < window
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        p = jax.nn.softmax(logits, -1)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+    for chunk in (16, 32, 64):
+        for window in (None, 24):
+            got = attn_lib.chunked_causal_attention(
+                q, k, v, chunk_size=chunk, window=window
+            )
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(dense(q, k, v, window)), atol=1e-5
+            )
+
+
+@given(kvh=st.sampled_from([1, 2, 4]), h=st.sampled_from([4, 8]))
+@settings(max_examples=8, deadline=None)
+def test_repeat_kv(kvh, h):
+    kv = jnp.arange(kvh * 6, dtype=jnp.float32).reshape(1, 2, kvh, 3)
+    out = attn_lib.repeat_kv(kv, h)
+    assert out.shape == (1, 2, h, 3)
+    reps = h // kvh
+    for i in range(h):
+        np.testing.assert_array_equal(out[:, :, i], kv[:, :, i // reps])
+
+
+def test_ring_cache_swa_decode():
+    """Ring-buffer SWA cache: decode attends to exactly the window."""
+    b, h, kvh, hd, window = 1, 2, 2, 8, 4
+    cache = attn_lib.init_kv_cache(b, window, kvh, hd, jnp.float32)
+    keys = jax.random.normal(jax.random.PRNGKey(0), (10, b, 1, kvh, hd))
+    for t in range(10):
+        cache = attn_lib.cache_update(cache, keys[t], keys[t])
+    assert int(cache.index) == 10
+    q = jax.random.normal(jax.random.PRNGKey(1), (b, 1, h, hd))
+    out = attn_lib.decode_attention(q, cache, num_heads=h, window=window)
+    # Reference: dense attention over last `window` keys in time order.
+    last = jnp.concatenate([keys[t] for t in range(6, 10)], axis=1)  # (b,4,kvh,hd)
+    kr = attn_lib.repeat_kv(last, h)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q / np.sqrt(hd), kr)
+    want = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(logits, -1), kr)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+def test_rope_relative_property():
+    """RoPE inner products depend only on relative positions."""
+    hd = 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+    def score(pq, pk):
+        qr = apply_rope(q, jnp.array([pq]))
+        kr = apply_rope(k, jnp.array([pk]))
+        return float(jnp.sum(qr * kr))
+    assert abs(score(3, 1) - score(10, 8)) < 1e-4
+    assert abs(score(0, 0) - score(7, 7)) < 1e-4
+
+
+# --------------------------------------------------------------------- moe
+
+def test_moe_matches_dense_expert_sum():
+    """With capacity high enough for zero drops, MoE output equals the
+    explicit gate-weighted expert sum."""
+    b, s, d, f, e, k = 2, 16, 8, 12, 4, 2
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (b, s, d))
+    router = jax.random.normal(ks[1], (d, e))
+    wg = jax.random.normal(ks[2], (e, d, f)) / np.sqrt(d)
+    wu = jax.random.normal(ks[3], (e, d, f)) / np.sqrt(d)
+    wd = jax.random.normal(ks[4], (e, f, d)) / np.sqrt(f)
+    out, stats = moe_lib.moe_ffn(
+        x, router, wg, wu, wd, top_k=k, capacity_factor=float(e)
+    )
+    assert float(stats.dropped) == 0.0
+
+    probs = jax.nn.softmax(x @ router, -1)
+    gates, ids = jax.lax.top_k(probs, k)
+    gates = gates / gates.sum(-1, keepdims=True)
+    expert_out = jnp.stack(
+        [jax.nn.silu(x @ wg[i]) * (x @ wu[i]) @ wd[i] for i in range(e)], axis=2
+    )  # (b, s, e, d)
+    want = jnp.einsum(
+        "bske,bsed->bsd", jax.nn.one_hot(ids, e) * gates[..., None], expert_out
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    b, s, d, f, e = 1, 64, 8, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(ks[0], (b, s, d))
+    out, stats = moe_lib.moe_ffn(
+        x,
+        jax.random.normal(ks[1], (d, e)),
+        jax.random.normal(ks[2], (e, d, f)),
+        jax.random.normal(ks[3], (e, d, f)),
+        jax.random.normal(ks[4], (e, f, d)),
+        top_k=2,
+        capacity_factor=0.5,
+    )
+    assert float(stats.dropped) > 0.0
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert float(stats.aux_loss) > 0.0
+
+
+# --------------------------------------------------------------- ssm/xlstm
+
+@given(chunk=st.sampled_from([4, 8, 16]), seed=st.integers(0, 3))
+@settings(max_examples=10, deadline=None)
+def test_ssm_chunked_equals_sequential(chunk, seed):
+    b, s, h, dh, ds = 1, 16, 2, 4, 3
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    x = jax.random.normal(ks[0], (b, s, h, dh))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bm = jax.random.normal(ks[3], (b, s, ds))
+    cm = jax.random.normal(ks[4], (b, s, ds))
+    h0 = jax.random.normal(ks[5], (b, h, dh, ds))
+    y, hf = chunked_ssm_scan(x, dt, a, bm, cm, h0, chunk=chunk)
+    hseq = h0
+    for t in range(s):
+        y_t, hseq = ssm_decode_step(x[:, t], dt[:, t], a, bm[:, t], cm[:, t], hseq)
+        np.testing.assert_allclose(np.asarray(y[:, t]), np.asarray(y_t), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hseq), atol=1e-4)
+
+
+@given(chunk=st.sampled_from([4, 8]), seed=st.integers(0, 3))
+@settings(max_examples=8, deadline=None)
+def test_mlstm_chunked_equals_sequential(chunk, seed):
+    b, s, h, dk, dv = 1, 16, 2, 4, 4
+    ks = jax.random.split(jax.random.PRNGKey(seed + 10), 5)
+    q = jax.random.normal(ks[0], (b, s, h, dk))
+    k = jax.random.normal(ks[1], (b, s, h, dk))
+    v = jax.random.normal(ks[2], (b, s, h, dv))
+    ip = jax.random.normal(ks[3], (b, s, h))
+    fp = jax.random.normal(ks[4], (b, s, h)) + 2.0
+    st0 = init_mlstm_state(b, h, dk, dv)
+    y, _ = chunked_mlstm(q, k, v, ip, fp, st0, chunk=chunk)
+    stt = st0
+    for t in range(s):
+        y_t, stt = mlstm_decode_step(q[:, t], k[:, t], v[:, t], ip[:, t], fp[:, t], stt)
+        np.testing.assert_allclose(np.asarray(y[:, t]), np.asarray(y_t), atol=2e-4)
+
+
+def test_slstm_state_bounded():
+    """Normalizer keeps sLSTM hidden state bounded despite exp gates."""
+    b, s, d, h = 2, 200, 8, 2
+    xg = 3.0 * jax.random.normal(jax.random.PRNGKey(0), (b, s, 4 * d))
+    rw = jax.random.normal(jax.random.PRNGKey(1), (4, h, d // h, d // h)) * 0.3
+    hs, _ = slstm_scan(xg, rw, init_slstm_state(b, d), h)
+    assert bool(jnp.all(jnp.isfinite(hs)))
+    assert float(jnp.max(jnp.abs(hs))) < 10.0

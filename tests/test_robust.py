@@ -1,0 +1,150 @@
+"""Tests for the beyond-paper robustness extensions (async / lossy /
+quantized consensus — the paper's §IV future-work direction)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import admm, consensus, robust, topology
+
+
+def _problem(key, n=16, q=3, j=160, m=4):
+    ky, kt = jax.random.split(key)
+    y = jax.random.normal(ky, (n, j))
+    t = jax.random.normal(kt, (q, j))
+    yw = y.reshape(n, m, j // m).transpose(1, 0, 2)
+    tw = t.reshape(q, m, j // m).transpose(1, 0, 2)
+    return y, t, yw, tw
+
+
+# ------------------------------------------------------------- async ADMM
+
+def test_async_admm_prob1_equals_sync():
+    y, t, yw, tw = _problem(jax.random.PRNGKey(0))
+    sync = admm.admm_ridge_consensus(yw, tw, mu=1e-2, eps_radius=6.0, num_iters=150)
+    anc = robust.async_admm_ridge_consensus(
+        yw, tw, mu=1e-2, eps_radius=6.0, num_iters=150,
+        active_prob=1.0, key=jax.random.PRNGKey(1),
+    )
+    np.testing.assert_allclose(
+        np.asarray(anc.o_star), np.asarray(sync.o_star), atol=1e-5
+    )
+
+
+def test_async_admm_converges_to_oracle():
+    """Half the workers active per round still reaches the centralized
+    solution — the asynchrony tolerance the paper projects for ADMM."""
+    y, t, yw, tw = _problem(jax.random.PRNGKey(2))
+    oracle = admm.exact_constrained_ridge(y, t, eps_radius=6.0)
+    res = robust.async_admm_ridge_consensus(
+        yw, tw, mu=1e-2, eps_radius=6.0, num_iters=800,
+        active_prob=0.5, key=jax.random.PRNGKey(3),
+    )
+    rel = float(jnp.linalg.norm(res.o_star - oracle) / jnp.linalg.norm(oracle))
+    assert rel < 5e-3, rel
+
+
+def test_async_slower_than_sync():
+    _, _, yw, tw = _problem(jax.random.PRNGKey(4))
+    k = 60
+    sync = admm.admm_ridge_consensus(yw, tw, mu=1e-2, eps_radius=6.0, num_iters=k)
+    anc = robust.async_admm_ridge_consensus(
+        yw, tw, mu=1e-2, eps_radius=6.0, num_iters=k,
+        active_prob=0.3, key=jax.random.PRNGKey(5),
+    )
+    assert float(anc.objective[-1]) >= float(sync.trace.objective[-1]) - 1e-3
+
+
+# ----------------------------------------------------------- lossy gossip
+
+def test_lossy_gossip_zero_drop_matches_dense():
+    m = 8
+    h = topology.circular_mixing_matrix(m, 2)
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, 5))
+    want = consensus.gossip_average(x, h, 6)
+    got = robust.lossy_gossip_average(
+        x, h, 6, drop_prob=0.0, key=jax.random.PRNGKey(1)
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_lossy_gossip_still_contracts():
+    """With moderate loss, workers still agree (consensus) even though the
+    agreed value may be biased off the true mean — the failure mode the
+    relaxed-ADMM literature (paper ref [16]) addresses."""
+    m = 10
+    h = topology.circular_mixing_matrix(m, 3)
+    x = jax.random.normal(jax.random.PRNGKey(2), (m, 4))
+    out = robust.lossy_gossip_average(
+        x, h, 60, drop_prob=0.2, key=jax.random.PRNGKey(3)
+    )
+    spread = float(jnp.max(jnp.abs(out - out.mean(0, keepdims=True))))
+    assert spread < 1e-2, spread
+    bias = float(jnp.max(jnp.abs(out.mean(0) - x.mean(0))))
+    assert bias < 1.0  # bounded, generally nonzero
+
+
+def test_dssfn_survives_lossy_network():
+    """End-to-end dSSFN over a 10% lossy network: performance parity with
+    the lossless run within a modest margin."""
+    from repro.core import layerwise, ssfn
+    from repro.data import make_classification, partition_workers
+
+    data = make_classification(
+        jax.random.PRNGKey(0), num_train=320, num_test=160,
+        input_dim=12, num_classes=4,
+    )
+    cfg = ssfn.SSFNConfig(
+        input_dim=12, num_classes=4, num_layers=3, hidden=48,
+        mu0=1e-2, mul=1e-2, admm_iters=120,
+    )
+    m = 8
+    xw, tw = partition_workers(data.x_train, data.t_train, m)
+    h = topology.circular_mixing_matrix(m, 2)
+    rounds = topology.gossip_rounds_for_tolerance(h, 1e-8)
+    clean_fn = consensus.make_consensus_fn("gossip", h=h, num_rounds=rounds)
+    lossy_fn = robust.make_lossy_consensus_fn(
+        h, rounds + 10, drop_prob=0.1, key=jax.random.PRNGKey(9)
+    )
+    key = jax.random.PRNGKey(7)
+    p_clean, _ = layerwise.train_decentralized_ssfn(
+        xw, tw, cfg, key, consensus_fn=clean_fn
+    )
+    p_lossy, _ = layerwise.train_decentralized_ssfn(
+        xw, tw, cfg, key, consensus_fn=lossy_fn
+    )
+    acc_c = layerwise.accuracy(p_clean, data.x_test, data.y_test, 4)
+    acc_l = layerwise.accuracy(p_lossy, data.x_test, data.y_test, 4)
+    assert acc_l > acc_c - 0.10, (acc_c, acc_l)
+
+
+# ------------------------------------------------------ quantized consensus
+
+@given(bits=st.sampled_from([4, 8, 12]), seed=st.integers(0, 4))
+@settings(max_examples=12, deadline=None)
+def test_quantization_unbiased_and_bounded(bits, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64, 64))
+    keys = jax.random.split(jax.random.PRNGKey(seed + 100), 32)
+    qs = jnp.stack([robust.quantize_stochastic(x, bits, k) for k in keys])
+    # bounded error per draw
+    step = float((x.max() - x.min()) / (2**bits - 1))
+    assert float(jnp.max(jnp.abs(qs[0] - x))) <= step + 1e-6
+    # unbiased on average
+    bias = float(jnp.max(jnp.abs(qs.mean(0) - x)))
+    assert bias < 4 * step / np.sqrt(32) + 1e-3
+
+
+def test_quantized_consensus_admm():
+    """8-bit links: ADMM still converges near the oracle, with 4x less
+    traffic than f32 (eq. 15 scaled by bits/32)."""
+    y, t, yw, tw = _problem(jax.random.PRNGKey(6))
+    oracle = admm.exact_constrained_ridge(y, t, eps_radius=6.0)
+    qfn = robust.make_quantized_consensus_fn(
+        consensus.exact_average, bits=8, key=jax.random.PRNGKey(8)
+    )
+    res = admm.admm_ridge_consensus(
+        yw, tw, mu=1e-2, eps_radius=6.0, num_iters=200, consensus_fn=qfn
+    )
+    rel = float(jnp.linalg.norm(res.o_star - oracle) / jnp.linalg.norm(oracle))
+    assert rel < 5e-2, rel

@@ -1,0 +1,93 @@
+"""Unit + property tests for mixing matrices and consensus."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import consensus, topology
+
+
+@given(
+    m=st.integers(min_value=2, max_value=40),
+    d=st.integers(min_value=1, max_value=10),
+)
+@settings(max_examples=40, deadline=None)
+def test_circular_mixing_is_doubly_stochastic(m, d):
+    h = topology.circular_mixing_matrix(m, d)
+    assert np.allclose(h.sum(axis=0), 1.0)
+    assert np.allclose(h.sum(axis=1), 1.0)
+    assert np.all(h >= 0)
+    assert np.allclose(h, h.T)
+
+
+@given(m=st.integers(min_value=3, max_value=24), seed=st.integers(0, 5))
+@settings(max_examples=20, deadline=None)
+def test_random_geometric_doubly_stochastic(m, seed):
+    h = topology.random_geometric_mixing_matrix(m, radius=0.5, seed=seed)
+    assert np.allclose(h.sum(axis=0), 1.0)
+    assert np.allclose(h.sum(axis=1), 1.0)
+
+
+def test_spectral_gap_increases_with_degree():
+    gaps = [
+        topology.spectral_gap(topology.circular_mixing_matrix(20, d))
+        for d in (1, 2, 4, 8)
+    ]
+    assert gaps == sorted(gaps), gaps  # denser graph mixes faster
+
+
+def test_gossip_converges_to_mean():
+    m = 12
+    h = topology.circular_mixing_matrix(m, 2)
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, 5, 7))
+    rounds = topology.gossip_rounds_for_tolerance(h, 1e-8)
+    out = consensus.gossip_average(x, h, rounds)
+    mean = jnp.mean(x, axis=0, keepdims=True)
+    assert float(jnp.max(jnp.abs(out - mean))) < 1e-5
+
+
+def test_gossip_error_metric():
+    x = jnp.ones((4, 3))
+    assert float(consensus.gossip_error(x)) == 0.0
+
+
+def test_exact_average_broadcasts():
+    x = jnp.arange(12.0).reshape(4, 3)
+    out = consensus.exact_average(x)
+    assert out.shape == x.shape
+    assert jnp.allclose(out[0], x.mean(0))
+
+
+def test_fully_connected_one_round():
+    m = 8
+    h = topology.fully_connected_mixing_matrix(m)
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, 4))
+    out = consensus.gossip_average(x, h, 1)
+    assert float(jnp.max(jnp.abs(out - x.mean(0)))) < 1e-6
+
+
+def test_degree_saturates_at_dmax():
+    m = 10
+    h = topology.circular_mixing_matrix(m, 5)   # d_max for M=10
+    assert np.allclose(h, topology.fully_connected_mixing_matrix(m))
+
+
+def test_ring_gossip_matches_dense_gossip():
+    """TPU collective_permute formulation == dense H-matmul formulation."""
+    m, d = 8, 2
+    h = topology.circular_mixing_matrix(m, d)
+    x = jax.random.normal(jax.random.PRNGKey(2), (m, 6))
+
+    # Simulate ppermute semantics with numpy rolls.
+    def ring_step(vals):
+        acc = vals.copy()
+        for k in range(1, d + 1):
+            acc = acc + np.roll(vals, -k, axis=0) + np.roll(vals, k, axis=0)
+        return acc / (2 * d + 1)
+
+    dense = np.asarray(consensus.gossip_average(x, h, 3))
+    ring = np.asarray(x)
+    for _ in range(3):
+        ring = ring_step(ring)
+    assert np.allclose(dense, ring, atol=1e-5)
