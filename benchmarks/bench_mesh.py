@@ -1,0 +1,137 @@
+"""Simulated vs mesh consensus backends: per-ADMM-iteration cost, consensus
+bytes moved, and centralized-equivalence parity.
+
+The tentpole measurement for the mesh-native execution engine: the SAME
+worker program (``core.admm._admm_backend_path``) timed under
+
+  - ``SimulatedBackend``  (vmap worker axis, single device), and
+  - ``MeshBackend``       (shard_map, one worker per device slot),
+
+in both exact (``lax.pmean``) and degree-d ring-gossip (``lax.ppermute``)
+consensus modes.  Communication is reported with the paper's eq.-15
+accounting (Q * n scalars per exchange, B exchanges per consensus, K
+consensus rounds), i.e. bytes each worker puts on the wire per solve.
+
+Standalone (fakes an 8-device host mesh before jax initializes)::
+
+    python -m benchmarks.bench_mesh [--workers 8]
+
+Under ``python -m benchmarks.run`` the harness uses whatever devices
+exist (the CI multi-device job exports XLA_FLAGS for 8).
+"""
+from __future__ import annotations
+
+import os
+
+
+# Tiny-but-representative shapes: J_m > n keeps local Grams full rank.
+N_FEATURES = 64
+NUM_CLASSES = 6
+SAMPLES_PER_WORKER = 96
+ADMM_ITERS = 60
+GOSSIP_DEGREE = 2
+GOSSIP_ROUNDS = 4
+BYTES_PER_SCALAR = 4  # float32
+
+
+def _consensus_bytes(backend, n: int, q: int, num_iters: int) -> int:
+    """Eq.-15 wire bytes per worker for one ADMM solve."""
+    return q * n * backend.exchanges_per_consensus() * num_iters * BYTES_PER_SCALAR
+
+
+def run(verbose: bool = True, num_workers: int | None = None) -> list[str]:
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import csv_row, timed
+    from repro.core import admm
+    from repro.core.backend import MeshBackend, SimulatedBackend
+    from repro.launch.mesh import make_worker_mesh
+
+    m = num_workers or len(jax.devices())
+    n, q, k = N_FEATURES, NUM_CLASSES, ADMM_ITERS
+    j = m * SAMPLES_PER_WORKER
+    ky, kt = jax.random.split(jax.random.PRNGKey(0))
+    y = jax.random.normal(ky, (n, j))
+    t = jax.random.normal(kt, (q, j))
+    yw = y.reshape(n, m, j // m).transpose(1, 0, 2)
+    tw = t.reshape(q, m, j // m).transpose(1, 0, 2)
+    eps = 2.0 * q
+    oracle = admm.exact_constrained_ridge(y, t, eps_radius=eps)
+
+    backends = {
+        "sim_exact": SimulatedBackend(m),
+        "mesh_exact": MeshBackend(make_worker_mesh(m)),
+    }
+    # Gossip needs 2d+1 distinct ring neighbours; clamp to the device
+    # count so the smoke also runs on a 1-device host.
+    degree = min(GOSSIP_DEGREE, (m - 1) // 2)
+    if degree >= 1:
+        backends["sim_gossip"] = SimulatedBackend(
+            m, mode="gossip", degree=degree, num_rounds=GOSSIP_ROUNDS
+        )
+        backends["mesh_gossip"] = MeshBackend(
+            make_worker_mesh(m),
+            mode="gossip",
+            degree=degree,
+            num_rounds=GOSSIP_ROUNDS,
+        )
+    elif verbose:
+        print(f"# gossip backends skipped: M={m} < 3 ring neighbours", flush=True)
+
+    rows, objectives = [], {}
+    for name, backend in backends.items():
+        # Outer jit so the second call is pure steady-state execution
+        # (admm_ridge_consensus re-traces per call otherwise: the worker
+        # program closes over the backend).
+        solve = jax.jit(
+            lambda a, b, be=backend: admm.admm_ridge_consensus(
+                a, b, mu=1e-2, eps_radius=eps, num_iters=k, backend=be
+            )
+        )
+        res, _ = timed(solve, yw, tw)  # compile
+        res, dt = timed(solve, yw, tw)
+        iter_us = dt / k * 1e6
+        objectives[name] = float(res.trace.objective[-1])
+        rel_oracle = float(
+            jnp.linalg.norm(res.o_star - oracle) / jnp.linalg.norm(oracle)
+        )
+        derived = (
+            f"M={m};iter_us={iter_us:.1f};"
+            f"comm_bytes={_consensus_bytes(backend, n, q, k)};"
+            f"oracle_rel={rel_oracle:.2e}"
+        )
+        rows.append(csv_row(f"mesh_backend_{name}", dt * 1e6, derived))
+        if verbose:
+            print(rows[-1], flush=True)
+
+    # Centralized-equivalence parity: same mode, different runtime.
+    for mode in ("exact", "gossip"):
+        if f"sim_{mode}" not in objectives:
+            continue
+        a, b = objectives[f"sim_{mode}"], objectives[f"mesh_{mode}"]
+        rel = abs(a - b) / max(abs(a), 1e-30)
+        rows.append(
+            csv_row(f"mesh_backend_parity_{mode}", 0.0, f"rel_objective_gap={rel:.2e}")
+        )
+        if verbose:
+            print(rows[-1], flush=True)
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=8)
+    args = ap.parse_args()
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={args.workers}".strip()
+        )
+    run(num_workers=args.workers)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,6 +2,11 @@
 
     PYTHONPATH=src python -m benchmarks.run
 
+``BENCH_ONLY=commload,kernels,mesh`` restricts the sweep to a
+comma-separated subset (module names without the ``bench_`` prefix) —
+the CI benchmark-smoke job uses this to stay inside its time budget
+while still producing a per-PR CSV artifact for the ADMM hot path.
+
 Prints ``name,us_per_call,derived`` CSV rows:
   - bench_equivalence : Table II  (centralized vs decentralized SSFN)
   - bench_convergence : Fig. 3    (objective vs total ADMM iterations)
@@ -9,6 +14,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   - bench_commload    : eq. 14-16 (communication-load ratio eta)
   - bench_robust      : beyond-paper: quantized/lossy/async consensus sweeps
   - bench_kernels     : kernel micro-benches (oracle throughput on host)
+  - bench_mesh        : simulated-vs-mesh ConsensusBackend cost + parity
   - roofline          : aggregates the dry-run §Roofline table
 """
 from __future__ import annotations
@@ -24,21 +30,30 @@ def main() -> None:
         bench_degree,
         bench_equivalence,
         bench_kernels,
+        bench_mesh,
         bench_robust,
         roofline,
     )
 
+    mods = {
+        "commload": bench_commload,
+        "kernels": bench_kernels,
+        "mesh": bench_mesh,
+        "equivalence": bench_equivalence,
+        "convergence": bench_convergence,
+        "degree": bench_degree,
+        "robust": bench_robust,
+        "roofline": roofline,
+    }
+    only = os.environ.get("BENCH_ONLY")
+    selected = [s.strip() for s in only.split(",")] if only else list(mods)
+    unknown = [s for s in selected if s not in mods]
+    if unknown:
+        raise SystemExit(f"BENCH_ONLY names unknown benchmarks {unknown}; have {list(mods)}")
+
     print("name,us_per_call,derived")
-    for mod in (
-        bench_commload,
-        bench_kernels,
-        bench_equivalence,
-        bench_convergence,
-        bench_degree,
-        bench_robust,
-        roofline,
-    ):
-        mod.run(verbose=True)
+    for name in selected:
+        mods[name].run(verbose=True)
 
 
 if __name__ == "__main__":

@@ -16,7 +16,7 @@ from repro.configs import get_config
 from repro.core import admm
 from repro.core.readout import layerwise_backbone_fit
 from repro.models import build_model
-from repro.nn.layers import embed_lookup, rms_norm
+from repro.nn.layers import embed_lookup
 from repro.models import blocks
 
 

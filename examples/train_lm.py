@@ -5,7 +5,6 @@ compares against), on the host mesh.
     PYTHONPATH=src python examples/train_lm.py [--steps 200]
 """
 import argparse
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,8 +1,18 @@
 """Paper core: SSFN architecture + decentralized layer-wise ADMM learning."""
-from repro.core import admm, consensus, equivalence, layerwise, readout, ssfn, topology
+from repro.core import (
+    admm,
+    backend,
+    consensus,
+    equivalence,
+    layerwise,
+    readout,
+    ssfn,
+    topology,
+)
 
 __all__ = [
     "admm",
+    "backend",
     "consensus",
     "equivalence",
     "layerwise",

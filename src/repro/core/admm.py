@@ -26,12 +26,15 @@ Notes on fidelity:
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import TYPE_CHECKING, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import consensus as consensus_lib
+
+if TYPE_CHECKING:  # avoid a circular import at runtime (backend imports consensus)
+    from repro.core.backend import ConsensusBackend
 
 Array = jax.Array
 
@@ -102,6 +105,7 @@ def admm_ridge_consensus(
     eps_radius: float,
     num_iters: int,
     consensus_fn: Callable[[Array], Array] | None = None,
+    backend: "ConsensusBackend | None" = None,
     z0: Array | None = None,
     use_kernels: bool = False,
 ) -> ADMMResult:
@@ -110,12 +114,34 @@ def admm_ridge_consensus(
     y_workers: (M, n, J_m) per-worker feature matrices (equal shard sizes,
         matching the paper's uniform division of the training set).
     t_workers: (M, Q, J_m) per-worker targets.
-    consensus_fn: (M, Q, n) -> (M, Q, n) averaging primitive; defaults to
-        exact consensus.  Pass a gossip closure for the paper-faithful
-        B-round doubly-stochastic simulation.
+    backend: a ``ConsensusBackend`` deciding where the M workers execute —
+        ``SimulatedBackend`` (vmap worker axis, single device) or
+        ``MeshBackend`` (shard_map, one worker per mesh slot) — and which
+        consensus primitive they use (exact pmean or degree-d ring
+        gossip).  Defaults to ``SimulatedBackend(M, mode='exact')``.
+    consensus_fn: legacy batched (M, Q, n) -> (M, Q, n) averaging
+        primitive for simulations with an *arbitrary* dense mixing matrix
+        H (``make_consensus_fn('gossip', h=...)``).  Mutually exclusive
+        with ``backend``; ring topologies should prefer a gossip-mode
+        backend, which expresses the same mixing as peer exchanges.
     """
+    if consensus_fn is not None and backend is not None:
+        raise ValueError("pass either consensus_fn or backend, not both")
     if consensus_fn is None:
-        consensus_fn = consensus_lib.exact_average
+        from repro.core.backend import SimulatedBackend
+
+        if backend is None:
+            backend = SimulatedBackend(y_workers.shape[0])
+        return _admm_backend_path(
+            y_workers,
+            t_workers,
+            backend=backend,
+            mu=mu,
+            eps_radius=eps_radius,
+            num_iters=num_iters,
+            z0=z0,
+            use_kernels=use_kernels,
+        )
     m, n = y_workers.shape[0], y_workers.shape[1]
     q = t_workers.shape[1]
     dtype = y_workers.dtype
@@ -155,6 +181,85 @@ def admm_ridge_consensus(
     )
     trace = ADMMTrace(objs, primals, duals, cerrs)
     return ADMMResult(o_star=state.z, o_workers=state.o, lam=state.lam, trace=trace)
+
+
+def _worker_stats_local(y_m: Array, t_m: Array, mu: float, use_kernels: bool):
+    """Worker-local A_m = T_m Y_m^T and Cholesky of G_m = Y_m Y_m^T + I/mu.
+
+    The local view of ``_worker_stats`` for SPMD execution: same math, no
+    worker axis, same Pallas ``gram`` kernel routing on aligned shapes.
+    """
+    n, j = y_m.shape
+    if use_kernels and n % 128 == 0 and j % 128 == 0:
+        from repro.kernels.gram import gram as gram_kernel
+
+        gram = gram_kernel(y_m, mu=mu).astype(y_m.dtype)
+    else:
+        gram = y_m @ y_m.T + (1.0 / mu) * jnp.eye(n, dtype=y_m.dtype)
+    chol = jnp.linalg.cholesky(gram)
+    a = t_m @ y_m.T
+    return a, chol
+
+
+def _admm_backend_path(
+    y_workers: Array,
+    t_workers: Array,
+    *,
+    backend: "ConsensusBackend",
+    mu: float,
+    eps_radius: float,
+    num_iters: int,
+    z0: Array | None,
+    use_kernels: bool,
+) -> ADMMResult:
+    """Eq.-11 iteration as a worker-local SPMD program.
+
+    The same traced program runs under ``SimulatedBackend`` (vmap) and
+    ``MeshBackend`` (shard_map); all cross-worker communication goes
+    through the backend collectives.  Each worker evaluates the objective
+    against its OWN consensus estimate Z_m (they coincide under exact
+    consensus); traces report worker 0, matching the batched path.
+    """
+    m = y_workers.shape[0]
+    if m != backend.num_workers:
+        raise ValueError(
+            f"y_workers has {m} worker shards, backend expects {backend.num_workers}"
+        )
+    q, n = t_workers.shape[1], y_workers.shape[1]
+    dtype = y_workers.dtype
+    z_init = jnp.zeros((q, n), dtype) if z0 is None else z0.astype(dtype)
+
+    def worker(y_m: Array, t_m: Array):
+        a, chol = _worker_stats_local(y_m, t_m, mu, use_kernels)
+
+        def step(carry, _):
+            _, z, lam = carry
+            rhs = a + (z - lam) / mu
+            o = jax.scipy.linalg.cho_solve((chol, True), rhs.T).T
+            avg = backend.consensus_mean(o + lam)
+            if backend.mode == "exact":
+                # avg IS the pmean: the deviation is zero by construction,
+                # and computing it would cost two extra collectives per
+                # iteration on the mesh hot path.
+                cerr = jnp.zeros((), avg.dtype)
+            else:
+                cerr = backend.pmax(jnp.max(jnp.abs(avg - backend.exact_mean(avg))))
+            z_new = project_frobenius(avg, eps_radius)
+            lam_new = lam + o - z_new
+            obj = backend.psum(jnp.sum((t_m - z_new @ y_m) ** 2))
+            primal = jnp.sqrt(backend.psum(jnp.sum((o - z_new) ** 2)))
+            dual = jnp.linalg.norm(z_new - z)
+            return (o, z_new, lam_new), (obj, primal, dual, cerr)
+
+        init = (jnp.zeros((q, n), dtype), z_init, jnp.zeros((q, n), dtype))
+        (o, z, lam), traces = jax.lax.scan(step, init, None, length=num_iters)
+        return (o, z, lam), traces
+
+    (o_w, z_w, lam_w), (objs, primals, duals, cerrs) = backend.run(
+        worker, y_workers, t_workers
+    )
+    trace = ADMMTrace(objs[0], primals[0], duals[0], cerrs[0])
+    return ADMMResult(o_star=z_w[0], o_workers=o_w, lam=lam_w, trace=trace)
 
 
 def centralized_ridge_admm(

@@ -23,7 +23,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import topology
 
 
 def exact_average(x_workers: jax.Array) -> jax.Array:

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core import admm as admm_lib
 from repro.core import ssfn as ssfn_lib
+from repro.core.backend import ConsensusBackend
 
 Array = jax.Array
 
@@ -50,6 +51,7 @@ def train_decentralized_ssfn(
     key: jax.Array,
     *,
     consensus_fn: Callable[[Array], Array] | None = None,
+    backend: ConsensusBackend | None = None,
     gossip_rounds: int = 1,
     size_estimation_tol: float | None = None,
 ) -> tuple[ssfn_lib.SSFNParams, LayerwiseLog]:
@@ -57,9 +59,16 @@ def train_decentralized_ssfn(
 
     x_workers: (M, P, J_m) column-stacked inputs per worker (disjoint shards).
     t_workers: (M, Q, J_m) one-hot targets per worker.
-    consensus_fn: consensus primitive for the Z-update; None = exact mean.
+    backend: where the M workers execute and how they reach consensus
+        (``SimulatedBackend`` or ``MeshBackend``); None = simulated exact
+        mean.  In the mesh case the Y_m/T_m shards stay device-local
+        through the whole layer-wise loop — feature propagation and the
+        layer solves all run under the backend.
+    consensus_fn: legacy dense-H consensus primitive for the Z-update
+        (mutually exclusive with ``backend``).
     gossip_rounds: B, used only for the communication-load accounting when a
-        gossip consensus_fn is supplied (B=1 for exact all-reduce).
+        gossip consensus_fn is supplied (B=1 for exact all-reduce; gossip
+        backends account with their own ``num_rounds``).
     size_estimation_tol: the SELF-SIZE-estimating behaviour (paper §I: "a
         decentralized estimation of the size of SSFN is possible"): stop
         growing layers once the relative cost improvement drops below this
@@ -70,6 +79,12 @@ def train_decentralized_ssfn(
     q = cfg.num_classes
     t0 = time.perf_counter()
     r_list = ssfn_lib.init_random_matrices(key, cfg)
+
+    exchanges = gossip_rounds
+    if backend is not None:
+        x_workers = backend.shard_workers(x_workers)
+        t_workers = backend.shard_workers(t_workers)
+        exchanges = backend.exchanges_per_consensus()
 
     o_list: list[Array] = []
     y_workers = x_workers                      # y_0 = x
@@ -85,6 +100,7 @@ def train_decentralized_ssfn(
             eps_radius=cfg.eps_radius,
             num_iters=cfg.admm_iters,
             consensus_fn=consensus_fn,
+            backend=backend,
         )
         o_l = res.o_star
         o_list.append(o_l)
@@ -95,7 +111,7 @@ def train_decentralized_ssfn(
         traces["cerr"].append(np.asarray(res.trace.consensus_error))
         # Communication accounting, eq. 15: Q * n_{l-1} scalars per exchange,
         # B exchanges per consensus, K consensus rounds per layer.
-        comm += q * y_workers.shape[1] * gossip_rounds * cfg.admm_iters
+        comm += q * y_workers.shape[1] * exchanges * cfg.admm_iters
 
         # Self-size estimation: every worker sees the same consensus
         # objective, so this stop decision is itself consensual.
@@ -109,7 +125,12 @@ def train_decentralized_ssfn(
 
         if layer < cfg.num_layers:
             w_next = ssfn_lib.build_weight(o_l, r_list[layer], q)
-            y_workers = jax.vmap(lambda ym: jax.nn.relu(w_next @ ym))(y_workers)
+            propagate = lambda ym: jax.nn.relu(w_next @ ym)
+            if backend is None:
+                y_workers = jax.vmap(propagate)(y_workers)
+            else:
+                # W is replicated (closed over); Y_m shards stay local.
+                y_workers = backend.map_workers(propagate, y_workers)
 
     # Early size-estimation stop leaves fewer readouts than random matrices.
     params = ssfn_lib.SSFNParams(o=tuple(o_list), r=r_list[: len(o_list) - 1])

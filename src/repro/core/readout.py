@@ -20,7 +20,7 @@ what this module provides:
 from __future__ import annotations
 
 import functools
-from typing import Callable, NamedTuple, Sequence
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -177,7 +177,8 @@ def make_sharded_layer_solver(
     outside (features are gathered along n before the solve: Q*n is small).
     """
     from jax.sharding import PartitionSpec as P
-    from jax.experimental.shard_map import shard_map
+
+    from repro.sharding.rules import shard_map_compat
 
     def solver(y: Array, t: Array) -> ShardedADMMResult:
         # y: (n, J) sharded J over data axes; t: (Q, J) likewise.
@@ -188,12 +189,11 @@ def make_sharded_layer_solver(
             num_iters=num_iters,
             axis_names=data_axes,
         )
-        return shard_map(
+        return shard_map_compat(
             fn,
             mesh=mesh,
             in_specs=(P(None, data_axes), P(None, data_axes)),
             out_specs=ShardedADMMResult(z=P(), objective=P()),
-            check_rep=False,
         )(y, t)
 
     return solver

@@ -15,7 +15,7 @@ Frobenius norm is sqrt(2Q) <= eps = 2Q — hence the monotone cost.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import NamedTuple, Sequence
 
 import jax

@@ -8,7 +8,6 @@ tasks only (see DESIGN.md §8).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import NamedTuple
 
 import jax

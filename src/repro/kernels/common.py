@@ -9,5 +9,20 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def tpu_compiler_params(dimension_semantics: tuple[str, ...]):
+    """Pallas TPU CompilerParams across jax versions.
+
+    The class was renamed ``TPUCompilerParams`` -> ``CompilerParams``
+    around jax 0.6; support both so the kernels import on the pinned
+    0.4.x CI jaxlib and on current TPU images.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams"
+    )
+    return cls(dimension_semantics=dimension_semantics)
+
+
 def cdiv(a: int, b: int) -> int:
     return -(-a // b)

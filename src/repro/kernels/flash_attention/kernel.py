@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import default_interpret
+from repro.kernels.common import default_interpret, tpu_compiler_params
 
 NEG_INF = -1e30
 
@@ -113,8 +113,6 @@ def flash_attention_pallas(
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
-        ),
+        compiler_params=tpu_compiler_params(("parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import cdiv, default_interpret
+from repro.kernels.common import default_interpret, tpu_compiler_params
 
 
 def _gram_kernel(y1_ref, y2_ref, o_ref, acc_ref, *, inv_mu: float, nk: int, block_n: int):
@@ -71,8 +71,6 @@ def gram_pallas(
         out_specs=pl.BlockSpec((block_n, block_n), lambda i, jj, k: (i, jj)),
         out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((block_n, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
-        ),
+        compiler_params=tpu_compiler_params(("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(y, y)

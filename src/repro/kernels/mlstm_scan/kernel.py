@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import default_interpret
+from repro.kernels.common import default_interpret, tpu_compiler_params
 
 NEG_BIG = -1e30
 
@@ -130,9 +130,7 @@ def mlstm_scan_pallas(
             pltpu.VMEM((dk, 1), jnp.float32),
             pltpu.VMEM((1, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
-        ),
+        compiler_params=tpu_compiler_params(("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, i_pre, f_pre)
     return y, (c_f, n_f, m_f)

@@ -1,6 +1,5 @@
 """Oracle: the chunked mLSTM from repro.nn.xlstm (itself validated against
 the sequential recurrence)."""
-import jax
 
 from repro.nn.xlstm import chunked_mlstm, init_mlstm_state
 

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import default_interpret
+from repro.kernels.common import default_interpret, tpu_compiler_params
 
 
 def _ssm_kernel(
@@ -102,9 +102,7 @@ def ssm_scan_pallas(
             jax.ShapeDtypeStruct((bsz, h, dh, ds), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((dh, ds), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
-        ),
+        compiler_params=tpu_compiler_params(("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, a, b_mat, c_mat)
     return y, h_final

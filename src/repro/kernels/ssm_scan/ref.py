@@ -1,6 +1,5 @@
 """Pure-jnp oracle: the chunked scan from repro.nn.ssm (itself validated
 against the sequential recurrence in tests)."""
-import jax
 import jax.numpy as jnp
 
 from repro.nn.ssm import chunked_ssm_scan

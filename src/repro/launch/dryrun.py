@@ -18,7 +18,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCHS, get_config
 from repro.launch import specs as specs_lib

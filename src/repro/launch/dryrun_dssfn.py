@@ -25,12 +25,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.readout import admm_solve_sharded, gram_share_solve_sharded
 from repro.launch.hlo_analysis import analyze_module
-from repro.launch.mesh import HARDWARE, data_axes_for, make_production_mesh
+from repro.launch.mesh import HARDWARE, make_production_mesh
 
 
 def lower_solver(mode: str, *, n: int, q: int, j_total: int, iters: int,
                  multi_pod: bool, save_hlo: str | None = None) -> dict:
-    from jax.experimental.shard_map import shard_map
+    from repro.sharding.rules import shard_map_compat
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     axes = tuple(mesh.axis_names)          # ADMM workers = every chip
@@ -46,12 +46,11 @@ def lower_solver(mode: str, *, n: int, q: int, j_total: int, iters: int,
             gram_share_solve_sharded, eps_radius=2.0 * q, axis_names=axes,
         )
 
-    sharded = shard_map(
+    sharded = shard_map_compat(
         fn,
         mesh=mesh,
         in_specs=(P(None, axes), P(None, axes)),
         out_specs=jax.tree.map(lambda _: P(), _out_struct(mode)),
-        check_rep=False,
     )
     y = jax.ShapeDtypeStruct((n, j_total), jnp.float32)
     t = jax.ShapeDtypeStruct((q, j_total), jnp.float32)

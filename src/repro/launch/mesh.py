@@ -13,19 +13,50 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_compat(shape, axes):
+    """``jax.make_mesh`` across jax versions.
+
+    ``axis_types`` only exists from jax 0.5; on older jaxlib (0.4.x, the
+    pinned CI version) every axis is implicitly Auto already.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Small mesh over whatever devices exist (tests / CPU examples)."""
     n = len(jax.devices())
     dp = max(1, n // model_parallel)
-    axis_types = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh((dp, model_parallel), ("data", "model"), axis_types=axis_types)
+    return make_mesh_compat((dp, model_parallel), ("data", "model"))
+
+
+def make_worker_mesh(num_workers: int | None = None):
+    """1-D mesh for dSSFN ADMM: one paper "worker" per device slot.
+
+    Used by ``core.backend.MeshBackend``.  On CPU, fake devices must be
+    requested via ``XLA_FLAGS=--xla_force_host_platform_device_count=M``
+    BEFORE jax initializes (the ``launch.train_dssfn`` CLI does this); on
+    TPU the slots are real chips and the ring-gossip mode maps each
+    degree-k hop onto an ICI collective_permute.
+    """
+    n = len(jax.devices())
+    if num_workers is None:
+        num_workers = n
+    if num_workers > n:
+        raise ValueError(
+            f"requested {num_workers} workers but only {n} devices are "
+            "visible; on CPU set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={num_workers} before jax initializes"
+        )
+    return make_mesh_compat((num_workers,), ("workers",))
 
 
 def data_axes_for(mesh) -> tuple[str, ...]:

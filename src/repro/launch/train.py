@@ -17,7 +17,6 @@ import numpy as np
 
 from repro.configs import ARCHS, get_config
 from repro.data import TokenStream
-from repro.launch import specs as specs_lib
 from repro.launch.mesh import data_axes_for, make_host_mesh, make_production_mesh
 from repro.models import build_model
 from repro.models.steps import make_train_step

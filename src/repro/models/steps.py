@@ -1,7 +1,6 @@
 """Loss and step functions: train_step, prefill_step, serve_step."""
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,6 @@
 VLM-backbone and audio-decoder families."""
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

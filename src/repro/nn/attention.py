@@ -10,7 +10,6 @@ sequence dim stays local.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.sharding.rules import current_rules, shard
+from repro.sharding.rules import current_rules, shard, shard_map_compat
 
 Array = jax.Array
 
@@ -178,7 +178,7 @@ def moe_ffn(
                     )
                 return out.astype(jnp.float32), stats
 
-            out, stats = jax.shard_map(
+            out, stats = shard_map_compat(
                 local_fn,
                 mesh=rules.mesh,
                 in_specs=(
@@ -190,7 +190,6 @@ def moe_ffn(
                 ),
                 out_specs=(P(dp_spec, None, None), RouterStats(P(), P(), P())),
                 axis_names=set(dp) | {ax},
-                check_vma=False,
             )(x.astype(jnp.float32), w_router, w_gate, w_up, w_down)
             return out.astype(dtype), stats
     return _moe_core(

@@ -35,10 +35,39 @@ class AxisRules:
     # Shard the sequence dim of activations over data axes (for batch=1
     # long-context decode this is the only way to use the data axis).
     sequence_sharding: bool = False
+    # Mesh axis carrying the dSSFN ADMM worker dimension (the leading
+    # (M, ...) axis of per-worker Y_m/T_m stacks); None outside
+    # decentralized-training launches.
+    worker_axis: str | None = None
 
     @property
     def weight_axes(self) -> tuple[str, ...]:
         return self.fsdp_axes if self.fsdp_axes is not None else self.data_axes
+
+
+def shard_map_compat(fn, *, mesh, in_specs, out_specs, axis_names=None):
+    """``shard_map`` across jax versions, replication checking disabled.
+
+    jax >= 0.6 exposes ``jax.shard_map`` (with ``check_vma`` and optional
+    ``axis_names``); the pinned 0.4.x CI jaxlib only has
+    ``jax.experimental.shard_map.shard_map`` (with ``check_rep`` and no
+    axis subsetting).  ``axis_names`` is honoured where supported and may
+    be dropped on the fallback — call sites here always map over every
+    mesh axis, where the two behaviours coincide.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        kwargs: dict = dict(
+            mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return sm(fn, **kwargs)
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
 
 
 _state = threading.local()
@@ -72,6 +101,8 @@ def _resolve(logical: str | None, rules: AxisRules):
         return w if len(w) > 1 else w[0]
     if logical == "tensor":
         return rules.model_axis
+    if logical == "workers":
+        return rules.worker_axis
     raise ValueError(f"unknown logical axis {logical!r}")
 
 

@@ -1,0 +1,84 @@
+"""Property-testing front-end: real hypothesis when installed, else a
+deterministic fallback.
+
+The test-suite's property tests only need ``given``/``settings`` and the
+``sampled_from``/``integers`` strategies.  Hermetic CI images (and the
+tier-1 gate) may not ship ``hypothesis``; rather than skip the properties
+entirely, the fallback enumerates a deterministic, evenly-strided subset
+of the strategy grid (capped by ``settings(max_examples=...)``), so every
+property still runs against multiple inputs.  With ``hypothesis``
+installed (the ``test`` extra in pyproject.toml) the real engine — with
+shrinking and randomized exploration — is used transparently.
+
+Usage in tests::
+
+    from repro.testing import given, settings, st
+"""
+from __future__ import annotations
+
+import itertools
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A finite, ordered pool of example values."""
+
+        def __init__(self, values):
+            self.values = list(values)
+
+    class _Strategies:
+        @staticmethod
+        def sampled_from(elements):
+            return _Strategy(elements)
+
+        @staticmethod
+        def integers(min_value=None, max_value=None):
+            if min_value is None or max_value is None:
+                raise NotImplementedError(
+                    "fallback st.integers requires explicit bounds"
+                )
+            return _Strategy(range(min_value, max_value + 1))
+
+    st = _Strategies()
+
+    def settings(*, max_examples: int = 20, **_ignored):
+        """Record the example budget for the enclosing ``given``."""
+
+        def deco(fn):
+            fn._stub_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**named_strategies):
+        """Run the test over a deterministic subset of the strategy grid.
+
+        The full cartesian product is strided down to the ``settings``
+        example budget so the subset spans the grid's extremes rather
+        than clustering at the first values.
+        """
+
+        def deco(fn):
+            budget = getattr(fn, "_stub_max_examples", 20)
+            names = sorted(named_strategies)
+            pools = [named_strategies[k].values for k in names]
+
+            def wrapper():
+                grid = list(itertools.product(*pools))
+                stride = max(1, len(grid) // max(1, budget))
+                for combo in grid[::stride][:budget]:
+                    fn(**dict(zip(names, combo)))
+
+            # NOT functools.wraps: copying __wrapped__ would expose fn's
+            # parameters to pytest's fixture resolution.
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

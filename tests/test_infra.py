@@ -4,8 +4,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import load_pytree, save_pytree
 from repro.data import TokenStream, make_classification, partition_workers

@@ -5,9 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st
 
-from repro.configs import ARCHS, get_config
+from repro.configs import get_config
 from repro.models import build_model
 from repro.models.steps import cross_entropy
 

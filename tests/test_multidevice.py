@@ -4,14 +4,15 @@ XLA_FLAGS must be set before jax initializes, so these run out of process).
 Covers paths the single-device suite cannot execute numerically:
 - the manual shard_map MoE (combine-before-psum) vs the plain path,
 - ring-gossip consensus via lax.ppermute vs the dense-H reference,
-- the distributed dSSFN ADMM solve on a real (2, 4) mesh.
+- the distributed dSSFN ADMM solve on a real (2, 4) mesh,
+- MeshBackend vs SimulatedBackend vs centralized-oracle parity on an
+  M=8 ``workers`` mesh (the ConsensusBackend acceptance test).
 """
 import os
 import subprocess
 import sys
 import textwrap
 
-import pytest
 
 REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -23,8 +24,8 @@ def run_subprocess(body: str) -> str:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P, NamedSharding
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
         """
     ) + textwrap.dedent(body)
     out = subprocess.run(
@@ -87,8 +88,7 @@ def test_ring_gossip_ppermute_matches_dense():
     h = topology.circular_mixing_matrix(m, degree)
     want = consensus.gossip_average(x, h, rounds)
 
-    ring_mesh = jax.make_mesh((8,), ("w",),
-                              axis_types=(jax.sharding.AxisType.Auto,))
+    ring_mesh = make_mesh_compat((8,), ("w",))
     fn = shard_map(
         partial(consensus.ring_gossip_average, axis_name="w", degree=degree,
                 num_nodes=m, num_rounds=rounds),
@@ -100,6 +100,62 @@ def test_ring_gossip_ppermute_matches_dense():
     print("GOSSIP_OK", err)
     """)
     assert "GOSSIP_OK" in out
+
+
+def test_mesh_backend_matches_simulated_and_oracle():
+    """The tentpole guarantee: the SAME worker program under MeshBackend
+    (shard_map, device-local shards) and SimulatedBackend (vmap axis)
+    produces the same dSSFN training run, and both match the centralized
+    oracle — in exact AND ring-gossip consensus modes."""
+    out = run_subprocess("""
+    from repro.core import admm, layerwise, ssfn
+    from repro.core.backend import MeshBackend, SimulatedBackend
+    from repro.launch.mesh import make_worker_mesh
+
+    m, n, q, j = 8, 16, 3, 256
+    mesh = make_worker_mesh(m)
+    y = jax.random.normal(jax.random.PRNGKey(0), (n, j))
+    t = jax.random.normal(jax.random.PRNGKey(1), (q, j))
+    yw = y.reshape(n, m, j // m).transpose(1, 0, 2)
+    tw = t.reshape(q, m, j // m).transpose(1, 0, 2)
+
+    kw = dict(mu=1e-2, eps_radius=6.0, num_iters=300)
+    sim = admm.admm_ridge_consensus(yw, tw, backend=SimulatedBackend(m), **kw)
+    msh = admm.admm_ridge_consensus(yw, tw, backend=MeshBackend(mesh), **kw)
+    rel_pair = float(jnp.linalg.norm(sim.o_star - msh.o_star)
+                     / jnp.linalg.norm(sim.o_star))
+    assert rel_pair < 1e-4, rel_pair
+    rel_obj = float(jnp.abs(sim.trace.objective[-1] - msh.trace.objective[-1])
+                    / sim.trace.objective[-1])
+    assert rel_obj < 1e-4, rel_obj
+    oracle = admm.exact_constrained_ridge(y, t, eps_radius=6.0)
+    rel_oracle = float(jnp.linalg.norm(msh.o_star - oracle) / jnp.linalg.norm(oracle))
+    assert rel_oracle < 1e-3, rel_oracle
+
+    gkw = dict(mode="gossip", degree=2, num_rounds=6)
+    simg = admm.admm_ridge_consensus(yw, tw, backend=SimulatedBackend(m, **gkw), **kw)
+    mshg = admm.admm_ridge_consensus(yw, tw, backend=MeshBackend(mesh, **gkw), **kw)
+    rel_g = float(jnp.linalg.norm(simg.o_star - mshg.o_star)
+                  / jnp.linalg.norm(simg.o_star))
+    assert rel_g < 1e-4, rel_g
+
+    # Full layer-wise training: shards stay device-local end to end.
+    cfg = ssfn.SSFNConfig(input_dim=10, num_classes=3, num_layers=2,
+                          hidden=24, admm_iters=60)
+    kx, kt, kinit = jax.random.split(jax.random.PRNGKey(2), 3)
+    xw = jax.random.normal(kx, (m, 10, 24))
+    labels = jax.random.randint(kt, (m, 24), 0, 3)
+    tw2 = jax.nn.one_hot(labels, 3).transpose(0, 2, 1)
+    ps, logs = layerwise.train_decentralized_ssfn(
+        xw, tw2, cfg, kinit, backend=SimulatedBackend(m))
+    pm, logm = layerwise.train_decentralized_ssfn(
+        xw, tw2, cfg, kinit, backend=MeshBackend(mesh))
+    rel_train = abs(logs.layer_costs[-1] - logm.layer_costs[-1]) / abs(
+        logs.layer_costs[-1])
+    assert rel_train < 1e-4, rel_train
+    print("MESHBACKEND_OK", rel_pair, rel_g, rel_train)
+    """)
+    assert "MESHBACKEND_OK" in out
 
 
 def test_distributed_admm_on_8_devices():

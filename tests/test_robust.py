@@ -3,8 +3,7 @@ quantized consensus — the paper's §IV future-work direction)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, st
 
 from repro.core import admm, consensus, robust, topology
 

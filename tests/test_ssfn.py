@@ -1,7 +1,6 @@
 """SSFN architecture + layer-wise training tests (paper §II-B claims)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import equivalence, layerwise, ssfn
