@@ -1,37 +1,60 @@
 """Simulated vs mesh consensus backends: per-ADMM-iteration cost, consensus
-bytes moved, and centralized-equivalence parity.
+bytes moved, compile-once engine vs legacy re-trace, and parity.
 
-The tentpole measurement for the mesh-native execution engine: the SAME
+The tentpole measurement for the compile-once layer engine: the SAME
 worker program (``core.admm._admm_backend_path``) timed under
 
   - ``SimulatedBackend``  (vmap worker axis, single device), and
   - ``MeshBackend``       (shard_map, one worker per device slot),
 
 in both exact (``lax.pmean``) and degree-d ring-gossip (``lax.ppermute``)
-consensus modes.  Communication is reported with the paper's eq.-15
+consensus modes, plus the Pallas kernel path (``use_kernels=True`` — the
+shapes below are 128-aligned so the ``gram`` kernel really runs, and the
+``mesh_layer_step[_kernels]`` rows time ``engine.fused_layer_step`` with
+a weight operand so the fused ``propagate_gram`` kernel runs too).
+Each backend is exercised twice: the steady-state call hits the
+backend's executable cache, while a fresh backend per call measures the
+cache-off cost — for the mesh rows that is exactly the pre-engine
+behaviour (a new ``jax.jit(shard_map(...))`` per solve, reported as
+``legacy_*``); the pre-engine sim path was an eager vmap, so sim rows
+label the same figure ``uncached_*``.  Communication is reported with
+the paper's eq.-15
 accounting (Q * n scalars per exchange, B exchanges per consensus, K
 consensus rounds), i.e. bytes each worker puts on the wire per solve.
 
+Besides the CSV rows for ``python -m benchmarks.run``, emits a
+machine-readable ``BENCH_mesh.json`` (repo root) so the perf trajectory
+is tracked across PRs:
+
+  compile_s         first mesh-exact solve (trace + compile + run)
+  iter_ms           steady-state per-ADMM-iteration wall time (cached)
+  legacy_iter_ms    the same solve with a per-call re-trace (pre-engine)
+  bytes_per_worker  eq.-15 wire bytes per worker per solve
+
 Standalone (fakes an 8-device host mesh before jax initializes)::
 
-    python -m benchmarks.bench_mesh [--workers 8]
+    python -m benchmarks.bench_mesh [--workers 8] [--json BENCH_mesh.json]
 
 Under ``python -m benchmarks.run`` the harness uses whatever devices
 exist (the CI multi-device job exports XLA_FLAGS for 8).
 """
 from __future__ import annotations
 
+import json
 import os
 
 
-# Tiny-but-representative shapes: J_m > n keeps local Grams full rank.
-N_FEATURES = 64
+# 128-aligned so the Pallas gram/propagate_gram kernel paths are actually
+# exercised (J_m > n keeps local Grams full rank).
+N_FEATURES = 128
 NUM_CLASSES = 6
-SAMPLES_PER_WORKER = 96
+SAMPLES_PER_WORKER = 128
 ADMM_ITERS = 60
 GOSSIP_DEGREE = 2
 GOSSIP_ROUNDS = 4
 BYTES_PER_SCALAR = 4  # float32
+
+DEFAULT_JSON = "BENCH_mesh.json"
 
 
 def _consensus_bytes(backend, n: int, q: int, num_iters: int) -> int:
@@ -39,7 +62,11 @@ def _consensus_bytes(backend, n: int, q: int, num_iters: int) -> int:
     return q * n * backend.exchanges_per_consensus() * num_iters * BYTES_PER_SCALAR
 
 
-def run(verbose: bool = True, num_workers: int | None = None) -> list[str]:
+def run(
+    verbose: bool = True,
+    num_workers: int | None = None,
+    json_path: str | None = DEFAULT_JSON,
+) -> list[str]:
     import jax
     import jax.numpy as jnp
 
@@ -59,63 +86,151 @@ def run(verbose: bool = True, num_workers: int | None = None) -> list[str]:
     eps = 2.0 * q
     oracle = admm.exact_constrained_ridge(y, t, eps_radius=eps)
 
-    backends = {
-        "sim_exact": SimulatedBackend(m),
-        "mesh_exact": MeshBackend(make_worker_mesh(m)),
+    def make(kind: str, **kw):
+        if kind == "sim":
+            return SimulatedBackend(m, **kw)
+        return MeshBackend(make_worker_mesh(m), **kw)
+
+    variants: dict[str, dict] = {
+        "sim_exact": {"kind": "sim"},
+        "mesh_exact": {"kind": "mesh"},
+        "mesh_exact_kernels": {"kind": "mesh", "use_kernels": True},
     }
     # Gossip needs 2d+1 distinct ring neighbours; clamp to the device
     # count so the smoke also runs on a 1-device host.
     degree = min(GOSSIP_DEGREE, (m - 1) // 2)
     if degree >= 1:
-        backends["sim_gossip"] = SimulatedBackend(
-            m, mode="gossip", degree=degree, num_rounds=GOSSIP_ROUNDS
-        )
-        backends["mesh_gossip"] = MeshBackend(
-            make_worker_mesh(m),
-            mode="gossip",
-            degree=degree,
-            num_rounds=GOSSIP_ROUNDS,
-        )
+        gossip = dict(mode="gossip", degree=degree, num_rounds=GOSSIP_ROUNDS)
+        variants["sim_gossip"] = {"kind": "sim", **gossip}
+        variants["mesh_gossip"] = {"kind": "mesh", **gossip}
     elif verbose:
         print(f"# gossip backends skipped: M={m} < 3 ring neighbours", flush=True)
 
     rows, objectives = [], {}
-    for name, backend in backends.items():
-        # Outer jit so the second call is pure steady-state execution
-        # (admm_ridge_consensus re-traces per call otherwise: the worker
-        # program closes over the backend).
-        solve = jax.jit(
-            lambda a, b, be=backend: admm.admm_ridge_consensus(
-                a, b, mu=1e-2, eps_radius=eps, num_iters=k, backend=be
+    report: dict = {
+        "workers": m,
+        "n_features": n,
+        "num_classes": q,
+        "samples_per_worker": SAMPLES_PER_WORKER,
+        "admm_iters": k,
+        "backends": {},
+    }
+    for name, spec in variants.items():
+        spec = dict(spec)
+        kind = spec.pop("kind")
+        use_kernels = spec.pop("use_kernels", False)
+
+        def solve(backend):
+            return admm.admm_ridge_consensus(
+                yw, tw, mu=1e-2, eps_radius=eps, num_iters=k,
+                backend=backend, use_kernels=use_kernels,
             )
-        )
-        res, _ = timed(solve, yw, tw)  # compile
-        res, dt = timed(solve, yw, tw)
-        iter_us = dt / k * 1e6
+
+        # Compile-once engine: one backend, executable cached across calls.
+        backend = make(kind, **spec)
+        res, compile_s = timed(solve, backend)    # trace + compile + run
+        res, dt = timed(solve, backend)           # steady state (cache hit)
+        # Cache-off baseline: a fresh backend per call re-traces and
+        # re-jits the whole worker program.  For the MESH rows this is
+        # exactly the pre-engine behaviour (a per-call
+        # ``jax.jit(shard_map(...))``), so it is reported as ``legacy_*``;
+        # the pre-engine sim path was an eager (unjitted) vmap, so for
+        # sim rows the same measurement is only a cache-off figure and is
+        # reported as ``uncached_*``.
+        _, fresh_s = timed(solve, make(kind, **spec))
+        baseline_tag = "legacy" if kind == "mesh" else "uncached"
+
+        iter_ms = dt / k * 1e3
         objectives[name] = float(res.trace.objective[-1])
         rel_oracle = float(
             jnp.linalg.norm(res.o_star - oracle) / jnp.linalg.norm(oracle)
         )
+        nbytes = _consensus_bytes(backend, n, q, k)
+        report["backends"][name] = {
+            "compile_s": round(compile_s, 4),
+            "iter_ms": round(iter_ms, 4),
+            "solve_s": round(dt, 4),
+            f"{baseline_tag}_solve_s": round(fresh_s, 4),
+            f"{baseline_tag}_iter_ms": round(fresh_s / k * 1e3, 4),
+            f"solve_speedup_vs_{baseline_tag}": round(fresh_s / max(dt, 1e-9), 2),
+            "bytes_per_worker": nbytes,
+            "oracle_rel": rel_oracle,
+            "lowerings": backend.lowerings,
+        }
         derived = (
-            f"M={m};iter_us={iter_us:.1f};"
-            f"comm_bytes={_consensus_bytes(backend, n, q, k)};"
+            f"M={m};iter_us={iter_ms * 1e3:.1f};"
+            f"{baseline_tag}_iter_us={fresh_s / k * 1e6:.1f};"
+            f"comm_bytes={nbytes};"
             f"oracle_rel={rel_oracle:.2e}"
         )
         rows.append(csv_row(f"mesh_backend_{name}", dt * 1e6, derived))
         if verbose:
             print(rows[-1], flush=True)
 
-    # Centralized-equivalence parity: same mode, different runtime.
-    for mode in ("exact", "gossip"):
-        if f"sim_{mode}" not in objectives:
-            continue
-        a, b = objectives[f"sim_{mode}"], objectives[f"mesh_{mode}"]
-        rel = abs(a - b) / max(abs(a), 1e-30)
+    # The fused layer step (propagate -> Gram/Cholesky -> ADMM scan as one
+    # program) with kernel routing: this is the only path that exercises
+    # the fused propagate_gram Pallas kernel, so time it explicitly.
+    from repro.core import engine
+
+    kw_shape = jax.random.normal(jax.random.PRNGKey(2), (n, n)) / jnp.sqrt(n)
+    step_objs = {}
+    for kernels in (False, True):
+        name = "mesh_layer_step" + ("_kernels" if kernels else "")
+        backend = make("mesh")
+
+        def layer_step(w, backend=backend, kernels=kernels):
+            return engine.fused_layer_step(
+                backend, yw, tw, w, mu=1e-2, eps_radius=eps, num_iters=k,
+                use_kernels=kernels,
+            )
+
+        res, compile_s = timed(layer_step, kw_shape)
+        res, dt = timed(layer_step, kw_shape)
+        step_objs[name] = float(res.trace.objective[-1])
+        report["backends"][name] = {
+            "compile_s": round(compile_s, 4),
+            "iter_ms": round(dt / k * 1e3, 4),
+            "solve_s": round(dt, 4),
+            "lowerings": backend.lowerings,
+        }
         rows.append(
-            csv_row(f"mesh_backend_parity_{mode}", 0.0, f"rel_objective_gap={rel:.2e}")
+            csv_row(name, dt * 1e6, f"M={m};iter_us={dt / k * 1e6:.1f}")
         )
         if verbose:
             print(rows[-1], flush=True)
+    objectives.update(step_objs)
+
+    # Centralized-equivalence parity: same mode, different runtime.
+    report["parity"] = {}
+    for a_name, b_name, tag in (
+        ("sim_exact", "mesh_exact", "exact"),
+        ("sim_gossip", "mesh_gossip", "gossip"),
+        ("mesh_exact", "mesh_exact_kernels", "kernels"),
+        ("mesh_layer_step", "mesh_layer_step_kernels", "fused_kernels"),
+    ):
+        if a_name not in objectives or b_name not in objectives:
+            continue
+        a, b = objectives[a_name], objectives[b_name]
+        rel = abs(a - b) / max(abs(a), 1e-30)
+        report["parity"][tag] = rel
+        rows.append(
+            csv_row(f"mesh_backend_parity_{tag}", 0.0, f"rel_objective_gap={rel:.2e}")
+        )
+        if verbose:
+            print(rows[-1], flush=True)
+
+    # Headline keys the CI bench-json step requires: the mesh hot path.
+    headline = report["backends"]["mesh_exact"]
+    report["compile_s"] = headline["compile_s"]
+    report["iter_ms"] = headline["iter_ms"]
+    report["legacy_iter_ms"] = headline["legacy_iter_ms"]
+    report["bytes_per_worker"] = headline["bytes_per_worker"]
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        if verbose:
+            print(f"# wrote {json_path}", flush=True)
     return rows
 
 
@@ -124,13 +239,14 @@ def main() -> None:
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--json", default=DEFAULT_JSON, help="output JSON path")
     args = ap.parse_args()
     flags = os.environ.get("XLA_FLAGS", "")
     if "--xla_force_host_platform_device_count" not in flags:
         os.environ["XLA_FLAGS"] = (
             f"{flags} --xla_force_host_platform_device_count={args.workers}".strip()
         )
-    run(num_workers=args.workers)
+    run(num_workers=args.workers, json_path=args.json)
 
 
 if __name__ == "__main__":

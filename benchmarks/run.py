@@ -14,7 +14,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   - bench_commload    : eq. 14-16 (communication-load ratio eta)
   - bench_robust      : beyond-paper: quantized/lossy/async consensus sweeps
   - bench_kernels     : kernel micro-benches (oracle throughput on host)
-  - bench_mesh        : simulated-vs-mesh ConsensusBackend cost + parity
+  - bench_mesh        : simulated-vs-mesh ConsensusBackend cost + parity;
+                        also writes BENCH_mesh.json (compile-once engine
+                        vs legacy re-trace perf trajectory)
   - roofline          : aggregates the dry-run §Roofline table
 """
 from __future__ import annotations

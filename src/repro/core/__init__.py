@@ -3,6 +3,7 @@ from repro.core import (
     admm,
     backend,
     consensus,
+    engine,
     equivalence,
     layerwise,
     readout,
@@ -14,6 +15,7 @@ __all__ = [
     "admm",
     "backend",
     "consensus",
+    "engine",
     "equivalence",
     "layerwise",
     "readout",

@@ -201,6 +201,52 @@ def _worker_stats_local(y_m: Array, t_m: Array, mu: float, use_kernels: bool):
     return a, chol
 
 
+def worker_admm_iterations(
+    backend: "ConsensusBackend",
+    a: Array,
+    chol: Array,
+    y_m: Array,
+    t_m: Array,
+    z_init: Array,
+    *,
+    mu: float,
+    eps_radius: float,
+    num_iters: int,
+):
+    """K eq.-11 iterations as a worker-local scan over the cached factor.
+
+    The shared inner loop of ``_admm_backend_path`` and the fused layer
+    engine (``core.engine``): all cross-worker communication goes through
+    the backend collectives.  Each worker evaluates the objective against
+    its OWN consensus estimate Z_m (they coincide under exact consensus).
+    Returns ``(o, z, lam), (objs, primals, duals, cerrs)``.
+    """
+    q, n = a.shape
+    dtype = a.dtype
+
+    def step(carry, _):
+        _, z, lam = carry
+        rhs = a + (z - lam) / mu
+        o = jax.scipy.linalg.cho_solve((chol, True), rhs.T).T
+        avg = backend.consensus_mean(o + lam)
+        if backend.mode == "exact":
+            # avg IS the pmean: the deviation is zero by construction,
+            # and computing it would cost two extra collectives per
+            # iteration on the mesh hot path.
+            cerr = jnp.zeros((), avg.dtype)
+        else:
+            cerr = backend.pmax(jnp.max(jnp.abs(avg - backend.exact_mean(avg))))
+        z_new = project_frobenius(avg, eps_radius)
+        lam_new = lam + o - z_new
+        obj = backend.psum(jnp.sum((t_m - z_new @ y_m) ** 2))
+        primal = jnp.sqrt(backend.psum(jnp.sum((o - z_new) ** 2)))
+        dual = jnp.linalg.norm(z_new - z)
+        return (o, z_new, lam_new), (obj, primal, dual, cerr)
+
+    init = (jnp.zeros((q, n), dtype), z_init, jnp.zeros((q, n), dtype))
+    return jax.lax.scan(step, init, None, length=num_iters)
+
+
 def _admm_backend_path(
     y_workers: Array,
     t_workers: Array,
@@ -215,10 +261,11 @@ def _admm_backend_path(
     """Eq.-11 iteration as a worker-local SPMD program.
 
     The same traced program runs under ``SimulatedBackend`` (vmap) and
-    ``MeshBackend`` (shard_map); all cross-worker communication goes
-    through the backend collectives.  Each worker evaluates the objective
-    against its OWN consensus estimate Z_m (they coincide under exact
-    consensus); traces report worker 0, matching the batched path.
+    ``MeshBackend`` (shard_map); traces report worker 0, matching the
+    batched path.  The worker program is compiled through the backend's
+    executable cache: ``z0`` rides along as a replicated operand (NOT a
+    closed-over constant) so one cached executable serves every solve
+    with the same hyper-parameters and operand shapes.
     """
     m = y_workers.shape[0]
     if m != backend.num_workers:
@@ -229,34 +276,18 @@ def _admm_backend_path(
     dtype = y_workers.dtype
     z_init = jnp.zeros((q, n), dtype) if z0 is None else z0.astype(dtype)
 
-    def worker(y_m: Array, t_m: Array):
+    def worker(y_m: Array, t_m: Array, z_init_rep: Array):
         a, chol = _worker_stats_local(y_m, t_m, mu, use_kernels)
+        return worker_admm_iterations(
+            backend, a, chol, y_m, t_m, z_init_rep,
+            mu=mu, eps_radius=eps_radius, num_iters=num_iters,
+        )
 
-        def step(carry, _):
-            _, z, lam = carry
-            rhs = a + (z - lam) / mu
-            o = jax.scipy.linalg.cho_solve((chol, True), rhs.T).T
-            avg = backend.consensus_mean(o + lam)
-            if backend.mode == "exact":
-                # avg IS the pmean: the deviation is zero by construction,
-                # and computing it would cost two extra collectives per
-                # iteration on the mesh hot path.
-                cerr = jnp.zeros((), avg.dtype)
-            else:
-                cerr = backend.pmax(jnp.max(jnp.abs(avg - backend.exact_mean(avg))))
-            z_new = project_frobenius(avg, eps_radius)
-            lam_new = lam + o - z_new
-            obj = backend.psum(jnp.sum((t_m - z_new @ y_m) ** 2))
-            primal = jnp.sqrt(backend.psum(jnp.sum((o - z_new) ** 2)))
-            dual = jnp.linalg.norm(z_new - z)
-            return (o, z_new, lam_new), (obj, primal, dual, cerr)
-
-        init = (jnp.zeros((q, n), dtype), z_init, jnp.zeros((q, n), dtype))
-        (o, z, lam), traces = jax.lax.scan(step, init, None, length=num_iters)
-        return (o, z, lam), traces
-
+    cache_key = (
+        "admm_ridge", float(mu), float(eps_radius), int(num_iters), bool(use_kernels)
+    )
     (o_w, z_w, lam_w), (objs, primals, duals, cerrs) = backend.run(
-        worker, y_workers, t_workers
+        worker, y_workers, t_workers, replicated=(z_init,), key=cache_key
     )
     trace = ADMMTrace(objs[0], primals[0], duals[0], cerrs[0])
     return ADMMResult(o_star=z_w[0], o_workers=o_w, lam=lam_w, trace=trace)

@@ -26,11 +26,31 @@ Consensus modes (both backends):
 - ``gossip`` — B rounds of degree-d circular gossip (paper §III) via
   ``lax.ppermute``; equivalent to the dense doubly-stochastic
   ``topology.circular_mixing_matrix`` but expressed as peer exchanges.
+
+Executable cache
+----------------
+Both backends memoize their lowered executables.  ``run``/``map_workers``
+wrap the worker program in ``jax.jit`` exactly once per cache key and
+reuse that jit object on every later call, so an L-layer dSSFN train with
+repeated hidden widths compiles each *distinct operand shape* exactly
+once instead of re-tracing per layer solve (the pre-engine behaviour:
+a fresh ``jax.jit(shard_map(...))`` per call).  The cache key is
+
+    (explicit ``key`` or the worker-fn object itself,
+     number of stacked/replicated operands, donation set)
+
+and jit's own shape/dtype dispatch handles the rest.  Callers that
+rebuild their worker closure per call (the dSSFN layer engine) MUST pass
+an explicit ``key`` capturing every closed-over value that changes the
+trace (mu, K, kernel routing, ...); array state must then be passed as an
+operand — stacked or ``replicated`` — never closed over, because the
+first trace would bake it into every later run.
 """
 from __future__ import annotations
 
 import abc
-from typing import Any, Callable
+from collections import OrderedDict
+from typing import Any, Callable, Hashable
 
 import jax
 import jax.numpy as jnp
@@ -45,15 +65,50 @@ WORKER_AXIS = "workers"
 
 _CONSENSUS_MODES = ("exact", "gossip")
 
+#: Bound on memoized executables per backend instance.  Callers that pass
+#: a fresh closure per call without an explicit ``key`` create one entry
+#: each; FIFO eviction keeps that pattern correct (just uncached).
+_EXEC_CACHE_SIZE = 64
+
+
+def _supports_donation() -> bool:
+    """XLA ignores donation on CPU (with a warning) — skip it there."""
+    return jax.default_backend() != "cpu"
+
+
+def _closes_over_arrays(fn) -> bool:
+    """True if ``fn`` captures jax/numpy arrays in its closure cells.
+
+    Identity-keyed caching would bake such arrays into the first trace as
+    constants and silently reuse them if the caller ever rebound the cell
+    — so those fns are executed uncached unless an explicit ``key``
+    (plus operand-passing) is used.  Arrays reached through *globals*
+    cannot be detected this way; passing them as operands with an
+    explicit key is the supported pattern.
+    """
+    import numpy as np
+
+    cells = getattr(fn, "__closure__", None) or ()
+    for cell in cells:
+        try:
+            contents = cell.cell_contents
+        except ValueError:  # empty cell
+            continue
+        for leaf in jax.tree.leaves(contents):
+            if isinstance(leaf, (jax.Array, np.ndarray)):
+                return True
+    return False
+
 
 class ConsensusBackend(abc.ABC):
     """Executes per-worker SPMD functions and provides their collectives.
 
     A "worker function" passed to :meth:`run` receives this worker's LOCAL
-    slices of the stacked ``(M, ...)`` operands (leading axis stripped) and
-    may communicate with peers only through :meth:`consensus_mean`,
-    :meth:`psum`, :meth:`pmax` and :meth:`worker_index`.  Replicated
-    quantities (hyper-parameters, shared weights) are closed over.
+    slices of the stacked ``(M, ...)`` operands (leading axis stripped),
+    then any ``replicated`` operands whole, and may communicate with peers
+    only through :meth:`consensus_mean`, :meth:`psum`, :meth:`pmax` and
+    :meth:`worker_index`.  Static hyper-parameters may be closed over
+    (fold them into ``key``); array state must be an operand.
     :meth:`run` returns every output re-stacked to ``(M, ...)``.
     """
 
@@ -82,21 +137,121 @@ class ConsensusBackend(abc.ABC):
         self.mode = mode
         self.degree = degree
         self.num_rounds = num_rounds
+        # Executable cache: (key, n_stacked, n_replicated, donate, collective)
+        # -> jitted callable.  ``lowerings`` counts actual traces; the
+        # compile-count regression test asserts it equals the number of
+        # distinct layer shapes, not the number of layer solves.
+        self._exec_cache: OrderedDict[Hashable, Callable] = OrderedDict()
+        self.lowerings = 0
+        self.cache_hits = 0
 
     # ------------------------------------------------------------------
     # Execution
     # ------------------------------------------------------------------
-    @abc.abstractmethod
-    def run(self, fn: Callable[..., Any], *stacked_args: Array) -> Any:
-        """Run ``fn`` once per worker; stacked (M, ...) in and out."""
+    def run(
+        self,
+        fn: Callable[..., Any],
+        *stacked_args: Array,
+        replicated: tuple = (),
+        key: Hashable | None = None,
+        donate: tuple[int, ...] = (),
+    ) -> Any:
+        """Run ``fn`` once per worker; stacked (M, ...) in and out.
 
-    @abc.abstractmethod
-    def map_workers(self, fn: Callable[..., Any], *stacked_args: Array) -> Any:
+        replicated: extra operands every worker sees whole (shared weights).
+        key: explicit executable-cache key; REQUIRED for correctness when
+            the same logical program is re-wrapped in a fresh closure per
+            call (it must capture every trace-affecting closed-over value).
+        donate: indices into ``stacked_args`` whose buffers the caller no
+            longer needs — donated to XLA off-CPU (the O/Λ/Y carries of
+            the dSSFN layer engine).
+        """
+        return self._cached_call(
+            fn, stacked_args, replicated, key, donate, collective=True
+        )
+
+    def map_workers(
+        self,
+        fn: Callable[..., Any],
+        *stacked_args: Array,
+        replicated: tuple = (),
+        key: Hashable | None = None,
+        donate: tuple[int, ...] = (),
+    ) -> Any:
         """Like :meth:`run` for collective-free, purely local ``fn``."""
+        return self._cached_call(
+            fn, stacked_args, replicated, key, donate, collective=False
+        )
 
     def shard_workers(self, x: Array) -> Array:
         """Place a stacked (M, ...) array in this backend's worker layout."""
         return x
+
+    # ------------------------------------------------------------------
+    # Executable cache
+    # ------------------------------------------------------------------
+    def _cached_call(self, fn, stacked_args, replicated, key, donate, collective):
+        self._check_stacked(stacked_args)
+        donate = tuple(sorted(donate))
+        if any(i < 0 or i >= len(stacked_args) for i in donate):
+            raise ValueError(f"donate indices {donate} out of range")
+        if key is None and _closes_over_arrays(fn):
+            # Identity-keyed caching would freeze the closed-over arrays
+            # into the first trace; keep the pre-cache per-call semantics
+            # for this pattern (callers wanting the cache pass arrays as
+            # operands with an explicit key — see the module docstring).
+            jitted = self._build_executable(
+                fn, len(stacked_args), len(replicated), donate, collective
+            )
+        else:
+            cache_key = (
+                key if key is not None else fn,
+                len(stacked_args),
+                len(replicated),
+                donate,
+                collective,
+            )
+            jitted = self._exec_cache.get(cache_key)
+            if jitted is None:
+                jitted = self._build_executable(
+                    fn, len(stacked_args), len(replicated), donate, collective
+                )
+                self._exec_cache[cache_key] = jitted
+                while len(self._exec_cache) > _EXEC_CACHE_SIZE:
+                    self._exec_cache.popitem(last=False)
+            else:
+                self.cache_hits += 1
+        args = tuple(self.shard_workers(a) for a in stacked_args)
+        return jitted(*args, *self._place_replicated(replicated))
+
+    def _count_trace(self) -> None:
+        # Runs at trace time only: executions served from jit's dispatch
+        # cache never re-enter the wrapped Python function.
+        self.lowerings += 1
+
+    def cache_info(self) -> dict:
+        return {
+            "entries": len(self._exec_cache),
+            "lowerings": self.lowerings,
+            "cache_hits": self.cache_hits,
+        }
+
+    def _place_replicated(self, replicated: tuple) -> tuple:
+        return replicated
+
+    @abc.abstractmethod
+    def _build_executable(
+        self, fn, n_stacked: int, n_replicated: int, donate, collective: bool
+    ) -> Callable:
+        """Wrap ``fn`` into a jitted stacked-in/stacked-out callable."""
+
+    def _check_stacked(self, stacked_args) -> None:
+        for a in stacked_args:
+            if a.shape[0] != self.num_workers:
+                raise ValueError(
+                    f"stacked operand has leading dim {a.shape[0]}, "
+                    f"backend has {self.num_workers} workers"
+                )
 
     # ------------------------------------------------------------------
     # Collectives — valid only inside a function passed to ``run``.
@@ -167,21 +322,16 @@ class SimulatedBackend(ConsensusBackend):
         self.axis_name = axis_name
         self._init_consensus(mode, degree, num_rounds)
 
-    def run(self, fn: Callable[..., Any], *stacked_args: Array) -> Any:
-        self._check_stacked(stacked_args)
-        return jax.vmap(fn, axis_name=self.axis_name)(*stacked_args)
+    def _build_executable(self, fn, n_stacked, n_replicated, donate, collective):
+        def counted(*args):
+            self._count_trace()
+            return fn(*args)
 
-    def map_workers(self, fn: Callable[..., Any], *stacked_args: Array) -> Any:
-        self._check_stacked(stacked_args)
-        return jax.vmap(fn)(*stacked_args)
-
-    def _check_stacked(self, stacked_args) -> None:
-        for a in stacked_args:
-            if a.shape[0] != self.num_workers:
-                raise ValueError(
-                    f"stacked operand has leading dim {a.shape[0]}, "
-                    f"backend has {self.num_workers} workers"
-                )
+        in_axes = (0,) * n_stacked + (None,) * n_replicated
+        kwargs = {"axis_name": self.axis_name} if collective else {}
+        mapped = jax.vmap(counted, in_axes=in_axes, **kwargs)
+        donate_argnums = donate if _supports_donation() else ()
+        return jax.jit(mapped, donate_argnums=donate_argnums)
 
 
 class MeshBackend(ConsensusBackend):
@@ -218,44 +368,39 @@ class MeshBackend(ConsensusBackend):
         )
         self._init_consensus(mode, degree, num_rounds)
 
-    def run(self, fn: Callable[..., Any], *stacked_args: Array) -> Any:
-        return self._shard_mapped(fn, stacked_args)
-
-    # On a mesh, a collective-free fn is just a shard_map whose program
-    # happens to contain no collectives — the same execution path.
-    map_workers = run
-
     def shard_workers(self, x: Array) -> Array:
         spec = [None] * jnp.ndim(x)
         spec[0] = self.axis_name
         return jax.device_put(x, NamedSharding(self.mesh, P(*spec)))
 
-    def _shard_mapped(self, fn, stacked_args):
+    def _place_replicated(self, replicated: tuple) -> tuple:
+        sharding = NamedSharding(self.mesh, P())
+        return tuple(jax.device_put(r, sharding) for r in replicated)
+
+    # On a mesh, a collective-free fn is just a shard_map whose program
+    # happens to contain no collectives — the same execution path, so
+    # ``collective`` does not change the built executable.
+    def _build_executable(self, fn, n_stacked, n_replicated, donate, collective):
         from repro.sharding.rules import shard_map_compat
 
-        for a in stacked_args:
-            if a.shape[0] != self.num_workers:
-                raise ValueError(
-                    f"stacked operand has leading dim {a.shape[0]}, "
-                    f"mesh {self.axis_name!r} axis has {self.num_workers} slots"
-                )
-
         def local(*local_args):
+            self._count_trace()
             # shard_map hands each worker a (1, ...) slice of the stacked
-            # operand; strip it so fn sees the same local view as vmap.
-            out = fn(*[a[0] for a in local_args])
+            # operands; strip it so fn sees the same local view as vmap.
+            # Replicated operands arrive whole.
+            stacked = [a[0] for a in local_args[:n_stacked]]
+            out = fn(*stacked, *local_args[n_stacked:])
             return jax.tree.map(lambda o: jnp.asarray(o)[None], out)
 
-        mapped = jax.jit(
-            shard_map_compat(
-                local,
-                mesh=self.mesh,
-                in_specs=P(self.axis_name),
-                out_specs=P(self.axis_name),
-            )
+        in_specs = (P(self.axis_name),) * n_stacked + (P(),) * n_replicated
+        mapped = shard_map_compat(
+            local,
+            mesh=self.mesh,
+            in_specs=in_specs,
+            out_specs=P(self.axis_name),
         )
-        args = tuple(self.shard_workers(a) for a in stacked_args)
-        return mapped(*args)
+        donate_argnums = donate if _supports_donation() else ()
+        return jax.jit(mapped, donate_argnums=donate_argnums)
 
 
 def make_backend(

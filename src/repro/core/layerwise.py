@@ -11,6 +11,13 @@ Both trainers share the same progressive-growth loop (paper §II-B):
 The *only* difference between the two is where the data lives and how the
 consensus mean in the Z-update is computed — which is the paper's central
 claim of centralized equivalence.
+
+Execution: the backend path runs through the compile-once layer engine
+(``core.engine``) — propagation, Gram/Cholesky and the K-iteration ADMM
+scan fuse into one cached SPMD program per layer, traces accumulate on
+device and are fetched once after the loop, and the self-size-estimation
+stop costs exactly one scalar fetch per layer.  The legacy dense-H
+``consensus_fn`` simulation keeps the original per-call loop.
 """
 from __future__ import annotations
 
@@ -23,8 +30,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import admm as admm_lib
+from repro.core import engine as engine_lib
 from repro.core import ssfn as ssfn_lib
-from repro.core.backend import ConsensusBackend
+from repro.core.backend import ConsensusBackend, SimulatedBackend
 
 Array = jax.Array
 
@@ -62,8 +70,9 @@ def train_decentralized_ssfn(
     backend: where the M workers execute and how they reach consensus
         (``SimulatedBackend`` or ``MeshBackend``); None = simulated exact
         mean.  In the mesh case the Y_m/T_m shards stay device-local
-        through the whole layer-wise loop — feature propagation and the
-        layer solves all run under the backend.
+        through the whole layer-wise loop — feature propagation, the Gram
+        factorization and the layer solves all run as ONE fused SPMD
+        program per layer under the backend's executable cache.
     consensus_fn: legacy dense-H consensus primitive for the Z-update
         (mutually exclusive with ``backend``).
     gossip_rounds: B, used only for the communication-load accounting when a
@@ -76,15 +85,109 @@ def train_decentralized_ssfn(
         already tracks, so all workers stop at the same depth with NO extra
         communication.  None = fixed size (cfg.num_layers, paper §II).
     """
+    if consensus_fn is not None and backend is not None:
+        raise ValueError("pass either consensus_fn or backend, not both")
+    if consensus_fn is not None:
+        return _train_consensus_fn_path(
+            x_workers, t_workers, cfg, key,
+            consensus_fn=consensus_fn,
+            gossip_rounds=gossip_rounds,
+            size_estimation_tol=size_estimation_tol,
+        )
+
     q = cfg.num_classes
     t0 = time.perf_counter()
     r_list = ssfn_lib.init_random_matrices(key, cfg)
 
-    exchanges = gossip_rounds
-    if backend is not None:
-        x_workers = backend.shard_workers(x_workers)
-        t_workers = backend.shard_workers(t_workers)
-        exchanges = backend.exchanges_per_consensus()
+    # eq.-15 accounting: a user-supplied backend knows its own exchange
+    # count; the implicit simulated-exact default keeps the legacy
+    # ``gossip_rounds`` convention.
+    exchanges = (
+        backend.exchanges_per_consensus() if backend is not None else gossip_rounds
+    )
+    engine_backend = backend or SimulatedBackend(x_workers.shape[0])
+    x_workers = engine_backend.shard_workers(x_workers)
+    t_workers = engine_backend.shard_workers(t_workers)
+
+    o_list: list[Array] = []
+    y_workers = x_workers                      # y_0 = x
+    w_next: Array | None = None
+    # Device-resident (K,) traces per layer; fetched once after the loop.
+    dev_traces: list[admm_lib.ADMMTrace] = []
+    comm = 0
+    prev_cost: float | None = None
+
+    for layer in range(cfg.num_layers + 1):
+        step = engine_lib.fused_layer_step(
+            engine_backend,
+            y_workers,
+            t_workers,
+            w_next,
+            mu=_mu_for_layer(cfg, layer),
+            eps_radius=cfg.eps_radius,
+            num_iters=cfg.admm_iters,
+            use_kernels=cfg.use_kernels,
+            # From layer 2 on, the stacked Y is a fresh relu(W@Y) buffer
+            # the engine owns — safe to hand to XLA.  Layers 0 and 1 must
+            # NOT donate: layer 0's input is the caller's x_workers, and
+            # layer 0's pass-through output may alias it.
+            donate_y=layer > 1,
+        )
+        y_workers = step.y_workers
+        o_list.append(step.o_star)
+        dev_traces.append(step.trace)
+        # Communication accounting, eq. 15: Q * n_{l-1} scalars per exchange,
+        # B exchanges per consensus, K consensus rounds per layer.
+        comm += q * y_workers.shape[1] * exchanges * cfg.admm_iters
+
+        # Self-size estimation: every worker sees the same consensus
+        # objective, so this stop decision is itself consensual.  This is
+        # the loop's ONLY per-layer host sync — one scalar fetch; without
+        # size estimation the whole train runs sync-free.
+        if size_estimation_tol is not None:
+            cur = float(step.trace.objective[-1])
+            if (
+                prev_cost is not None
+                and prev_cost - cur < size_estimation_tol * max(prev_cost, 1e-12)
+            ):
+                break
+            prev_cost = cur
+
+        if layer < cfg.num_layers:
+            w_next = ssfn_lib.build_weight(step.o_star, r_list[layer], q)
+
+    # One bulk fetch of every per-layer trace after the loop.
+    traces = [jax.tree.map(np.asarray, tr) for tr in dev_traces]
+    layer_costs = [float(tr.objective[-1]) for tr in traces]
+
+    # Early size-estimation stop leaves fewer readouts than random matrices.
+    params = ssfn_lib.SSFNParams(o=tuple(o_list), r=r_list[: len(o_list) - 1])
+    log = LayerwiseLog(
+        layer_costs=layer_costs,
+        admm_objective=np.stack([tr.objective for tr in traces]),
+        admm_primal=np.stack([tr.primal_residual for tr in traces]),
+        admm_dual=np.stack([tr.dual_residual for tr in traces]),
+        consensus_error=np.stack([tr.consensus_error for tr in traces]),
+        wall_time_s=time.perf_counter() - t0,
+        comm_scalars=comm,
+    )
+    return params, log
+
+
+def _train_consensus_fn_path(
+    x_workers: Array,
+    t_workers: Array,
+    cfg: ssfn_lib.SSFNConfig,
+    key: jax.Array,
+    *,
+    consensus_fn: Callable[[Array], Array],
+    gossip_rounds: int,
+    size_estimation_tol: float | None,
+) -> tuple[ssfn_lib.SSFNParams, LayerwiseLog]:
+    """Legacy batched dense-H simulation (arbitrary mixing matrix H)."""
+    q = cfg.num_classes
+    t0 = time.perf_counter()
+    r_list = ssfn_lib.init_random_matrices(key, cfg)
 
     o_list: list[Array] = []
     y_workers = x_workers                      # y_0 = x
@@ -100,7 +203,6 @@ def train_decentralized_ssfn(
             eps_radius=cfg.eps_radius,
             num_iters=cfg.admm_iters,
             consensus_fn=consensus_fn,
-            backend=backend,
         )
         o_l = res.o_star
         o_list.append(o_l)
@@ -109,12 +211,8 @@ def train_decentralized_ssfn(
         traces["primal"].append(np.asarray(res.trace.primal_residual))
         traces["dual"].append(np.asarray(res.trace.dual_residual))
         traces["cerr"].append(np.asarray(res.trace.consensus_error))
-        # Communication accounting, eq. 15: Q * n_{l-1} scalars per exchange,
-        # B exchanges per consensus, K consensus rounds per layer.
-        comm += q * y_workers.shape[1] * exchanges * cfg.admm_iters
+        comm += q * y_workers.shape[1] * gossip_rounds * cfg.admm_iters
 
-        # Self-size estimation: every worker sees the same consensus
-        # objective, so this stop decision is itself consensual.
         if (
             size_estimation_tol is not None
             and len(layer_costs) >= 2
@@ -125,14 +223,8 @@ def train_decentralized_ssfn(
 
         if layer < cfg.num_layers:
             w_next = ssfn_lib.build_weight(o_l, r_list[layer], q)
-            propagate = lambda ym: jax.nn.relu(w_next @ ym)
-            if backend is None:
-                y_workers = jax.vmap(propagate)(y_workers)
-            else:
-                # W is replicated (closed over); Y_m shards stay local.
-                y_workers = backend.map_workers(propagate, y_workers)
+            y_workers = jax.vmap(lambda ym: jax.nn.relu(w_next @ ym))(y_workers)
 
-    # Early size-estimation stop leaves fewer readouts than random matrices.
     params = ssfn_lib.SSFNParams(o=tuple(o_list), r=r_list[: len(o_list) - 1])
     log = LayerwiseLog(
         layer_costs=layer_costs,

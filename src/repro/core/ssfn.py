@@ -35,6 +35,11 @@ class SSFNConfig:
     admm_iters: int = 100           # K (paper §III-B)
     eps_scale: float = 1.0          # eps_radius = eps_scale * 2Q
     dtype: jnp.dtype = jnp.float32
+    # Route propagation/Gram through the Pallas kernels (matmul_relu,
+    # gram, fused propagate_gram) on 128-aligned shapes; falls back to
+    # the einsum path otherwise.  Plumbed through the layer engine and
+    # the launch/train_dssfn.py --use-kernels CLI flag.
+    use_kernels: bool = False
 
     @property
     def n(self) -> int:

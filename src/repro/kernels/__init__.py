@@ -3,6 +3,8 @@ interpret=True on CPU against pure-jnp oracles):
 
 - gram:            G = Y Y^T + (1/mu) I   (dSSFN ADMM layer-solve hot-spot)
 - matmul_relu:     relu(W @ X)            (SSFN LT+NLT forward step)
+- propagate_gram:  fused relu(W @ Y) AND its regularized Gram in one pass
+                   over the samples (the dSSFN layer engine's hot path)
 - flash_attention: causal/SWA online-softmax attention (assigned archs)
 - ssm_scan:        Mamba2 chunked selective scan (zamba2 / SSM archs)
 - mlstm_scan:      chunked stabilized mLSTM matrix-memory scan (xlstm)
@@ -11,6 +13,7 @@ from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.gram import gram, gram_ref
 from repro.kernels.matmul_relu import matmul_relu, matmul_relu_ref
 from repro.kernels.mlstm_scan import mlstm_scan, mlstm_scan_ref
+from repro.kernels.propagate_gram import propagate_gram, propagate_gram_ref
 from repro.kernels.ssm_scan import ssm_scan, ssm_scan_ref
 
 __all__ = [
@@ -20,6 +23,8 @@ __all__ = [
     "gram_ref",
     "matmul_relu",
     "matmul_relu_ref",
+    "propagate_gram",
+    "propagate_gram_ref",
     "mlstm_scan",
     "mlstm_scan_ref",
     "ssm_scan",

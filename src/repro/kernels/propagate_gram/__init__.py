@@ -1,0 +1,4 @@
+from repro.kernels.propagate_gram.ops import propagate_gram
+from repro.kernels.propagate_gram.ref import propagate_gram_ref
+
+__all__ = ["propagate_gram", "propagate_gram_ref"]

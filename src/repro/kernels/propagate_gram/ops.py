@@ -1,0 +1,19 @@
+"""Public jit'd wrapper: picks the fused Pallas kernel when tiles align,
+else falls back to the oracle (odd shapes in tests / tiny problems)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.propagate_gram.kernel import propagate_gram_pallas
+from repro.kernels.propagate_gram.ref import propagate_gram_ref
+
+
+@functools.partial(jax.jit, static_argnames=("mu", "block_j"))
+def propagate_gram(w: jax.Array, y: jax.Array, *, mu: float, block_j: int = 128):
+    n, n_prev = w.shape
+    _, j = y.shape
+    if n % 128 == 0 and n_prev % 128 == 0 and j % block_j == 0:
+        return propagate_gram_pallas(w, y, mu=mu, block_j=block_j)
+    return propagate_gram_ref(w, y, mu=mu)

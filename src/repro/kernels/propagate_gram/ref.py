@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused propagate+gram layer step."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def propagate_gram_ref(
+    w: jax.Array, y: jax.Array, *, mu: float
+) -> tuple[jax.Array, jax.Array]:
+    """(relu(W @ Y), relu(W @ Y) relu(W @ Y)^T + (1/mu) I)."""
+    y_new = jax.nn.relu(w @ y)
+    yf = y_new.astype(jnp.float32)
+    gram = yf @ yf.T + (1.0 / mu) * jnp.eye(w.shape[0], dtype=jnp.float32)
+    return y_new, gram

@@ -47,6 +47,14 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--train", type=int, default=960)
     ap.add_argument("--test", type=int, default=240)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--use-kernels",
+        action="store_true",
+        help="route propagation/Gram through the Pallas kernels "
+        "(matmul_relu, gram, fused propagate_gram); needs 128-aligned "
+        "--hidden/--input-dim and per-worker sample counts, else each "
+        "misaligned op falls back to the einsum path",
+    )
     ap.add_argument("--out", default=None, help="optional JSON results path")
     ap.add_argument(
         "--no-host-mesh",
@@ -121,6 +129,9 @@ def train_one(kind: str, args, data, xw, tw, cfg, key) -> dict:
         "test_accuracy": acc,
         "final_objective": log.layer_costs[-1],
         "comm_scalars": log.comm_scalars,
+        # Compile-once layer engine: lowerings == distinct layer shapes,
+        # not layer solves (the compile-count regression test's invariant).
+        "executable_cache": backend.cache_info(),
         "params": params,
     }
 
@@ -151,6 +162,7 @@ def main(argv=None) -> dict:
         num_layers=args.layers,
         hidden=args.hidden,
         admm_iters=args.admm_iters,
+        use_kernels=args.use_kernels,
     )
     key = jax.random.PRNGKey(args.seed + 1)
 

@@ -9,6 +9,7 @@ from repro.kernels import (
     gram, gram_ref,
     matmul_relu, matmul_relu_ref,
     mlstm_scan, mlstm_scan_ref,
+    propagate_gram, propagate_gram_ref,
     ssm_scan, ssm_scan_ref,
 )
 
@@ -55,6 +56,49 @@ def test_matmul_relu_sweep(m, k, n, dtype):
         atol=_tol(dtype) * scale,
     )
     assert bool(jnp.all(got >= 0))
+
+
+# -------------------------------------------------------- propagate_gram
+
+@pytest.mark.parametrize("n,n_prev,j", [(128, 128, 128), (128, 256, 384), (256, 128, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mu", [1e-2, 1.0])
+def test_propagate_gram_sweep(n, n_prev, j, dtype, mu):
+    """Fused relu(W@Y) + Gram in one pass == the two-step oracle."""
+    kw, ky = jax.random.split(jax.random.PRNGKey(n + n_prev + j))
+    w = (jax.random.normal(kw, (n, n_prev)) / np.sqrt(n_prev)).astype(dtype)
+    y = jax.random.normal(ky, (n_prev, j)).astype(dtype)
+    y_new, g = propagate_gram(w, y, mu=mu)
+    y_ref, g_ref = propagate_gram_ref(w, y, mu=mu)
+    np.testing.assert_allclose(
+        np.asarray(y_new, np.float32), np.asarray(y_ref, np.float32),
+        atol=_tol(dtype) * max(float(jnp.max(jnp.abs(y_ref.astype(jnp.float32)))), 1.0),
+    )
+    np.testing.assert_allclose(
+        np.asarray(g), np.asarray(g_ref),
+        atol=_tol(dtype) * max(float(jnp.max(jnp.abs(g_ref))), 1.0),
+    )
+    assert bool(jnp.all(y_new.astype(jnp.float32) >= 0))
+
+
+def test_propagate_gram_fallback_odd_shape():
+    w = jax.random.normal(jax.random.PRNGKey(0), (20, 9))
+    y = jax.random.normal(jax.random.PRNGKey(1), (9, 17))
+    y_new, g = propagate_gram(w, y, mu=0.5)
+    y_ref, g_ref = propagate_gram_ref(w, y, mu=0.5)
+    np.testing.assert_allclose(np.asarray(y_new), np.asarray(y_ref), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), rtol=1e-5, atol=1e-4)
+
+
+def test_propagate_gram_consistent_with_component_kernels():
+    """fused == matmul_relu then gram (the unfused kernel pipeline)."""
+    w = jax.random.normal(jax.random.PRNGKey(2), (128, 128)) / np.sqrt(128)
+    y = jax.random.normal(jax.random.PRNGKey(3), (128, 256))
+    y_new, g = propagate_gram(w, y, mu=1e-2)
+    y_two = matmul_relu(w, y)
+    g_two = gram(y_two, mu=1e-2)
+    np.testing.assert_allclose(np.asarray(y_new), np.asarray(y_two), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_two), atol=1e-3)
 
 
 # ------------------------------------------------------- flash_attention

@@ -158,6 +158,53 @@ def test_mesh_backend_matches_simulated_and_oracle():
     assert "MESHBACKEND_OK" in out
 
 
+def test_layer_engine_on_8_devices():
+    """Compile-once layer engine on a real M=8 ``workers`` mesh: kernel-path
+    parity (use_kernels=True vs einsum, exact AND gossip consensus) and the
+    compile-count invariant (lowerings == distinct layer shapes)."""
+    out = run_subprocess("""
+    import dataclasses
+    from repro.core import layerwise, ssfn
+    from repro.core.backend import MeshBackend, SimulatedBackend
+    from repro.launch.mesh import make_worker_mesh
+
+    m = 8
+    wmesh = make_worker_mesh(m)
+    cfg = ssfn.SSFNConfig(input_dim=128, num_classes=3, num_layers=2,
+                          hidden=128, admm_iters=15)
+    cfg_k = dataclasses.replace(cfg, use_kernels=True)
+    kx, kt, kinit = jax.random.split(jax.random.PRNGKey(0), 3)
+    xw = jax.random.normal(kx, (m, 128, 128))
+    labels = jax.random.randint(kt, (m, 128), 0, 3)
+    tw = jax.nn.one_hot(labels, 3).transpose(0, 2, 1)
+
+    for mode_kw in ({}, dict(mode="gossip", degree=2, num_rounds=6)):
+        mesh_be = MeshBackend(wmesh, **mode_kw)
+        pk, _ = layerwise.train_decentralized_ssfn(
+            xw, tw, cfg_k, kinit, backend=mesh_be)
+        pr, _ = layerwise.train_decentralized_ssfn(
+            xw, tw, cfg, kinit, backend=MeshBackend(wmesh, **mode_kw))
+        ps, _ = layerwise.train_decentralized_ssfn(
+            xw, tw, cfg_k, kinit, backend=SimulatedBackend(m, **mode_kw))
+        for a, b in zip(pk.o, pr.o):   # kernels == einsum on the mesh
+            rel = float(jnp.linalg.norm(a - b) / jnp.linalg.norm(a))
+            assert rel < 1e-6, (mode_kw, rel)
+        for a, b in zip(pk.o, ps.o):   # sim == mesh through the engine
+            rel = float(jnp.linalg.norm(a - b) / jnp.linalg.norm(a))
+            assert rel < 1e-4, (mode_kw, rel)
+        # 3 layer solves, 3 distinct programs even though l=1 and l=2
+        # share W shape (128,128) here: l=0 has no W, l=1 must not donate
+        # the caller-reachable Y, l=2 donates the engine-owned carry.
+        # The win shows from l=3 on (none here) and on repeat trains:
+        assert mesh_be.lowerings == 3, mesh_be.cache_info()
+        layerwise.train_decentralized_ssfn(
+            xw, tw, cfg_k, kinit, backend=mesh_be)
+        assert mesh_be.lowerings == 3, mesh_be.cache_info()  # fully cached
+    print("ENGINE8_OK")
+    """)
+    assert "ENGINE8_OK" in out
+
+
 def test_distributed_admm_on_8_devices():
     out = run_subprocess("""
     from functools import partial
