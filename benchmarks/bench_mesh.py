@@ -31,6 +31,11 @@ is tracked across PRs:
   legacy_iter_ms    the same solve with a per-call re-trace (pre-engine)
   bytes_per_worker  eq.-15 wire bytes per worker per solve
 
+plus a ``policies`` section — one row per ConsensusPolicy (exact /
+gossip / quantized / lossy / stale) through a single shared mesh backend
+(one lowering per policy), with ``bytes_per_worker`` scaled by the
+policy's declared ``wire_bits``.
+
 Standalone (fakes an 8-device host mesh before jax initializes)::
 
     python -m benchmarks.bench_mesh [--workers 8] [--json BENCH_mesh.json]
@@ -57,9 +62,10 @@ BYTES_PER_SCALAR = 4  # float32
 DEFAULT_JSON = "BENCH_mesh.json"
 
 
-def _consensus_bytes(backend, n: int, q: int, num_iters: int) -> int:
-    """Eq.-15 wire bytes per worker for one ADMM solve."""
-    return q * n * backend.exchanges_per_consensus() * num_iters * BYTES_PER_SCALAR
+def _consensus_bytes(policy, n: int, q: int, num_iters: int) -> int:
+    """Eq.-15 wire bytes per worker for one ADMM solve, at the policy's
+    declared link width (``ConsensusPolicy.wire_bytes``)."""
+    return policy.wire_bytes(scalars=q * n, num_consensus=num_iters)
 
 
 def run(
@@ -73,6 +79,13 @@ def run(
     from benchmarks.common import csv_row, timed
     from repro.core import admm
     from repro.core.backend import MeshBackend, SimulatedBackend
+    from repro.core.policy import (
+        ExactMean,
+        LossyGossip,
+        QuantizedGossip,
+        RingGossip,
+        StaleMixing,
+    )
     from repro.launch.mesh import make_worker_mesh
 
     m = num_workers or len(jax.devices())
@@ -100,7 +113,7 @@ def run(
     # count so the smoke also runs on a 1-device host.
     degree = min(GOSSIP_DEGREE, (m - 1) // 2)
     if degree >= 1:
-        gossip = dict(mode="gossip", degree=degree, num_rounds=GOSSIP_ROUNDS)
+        gossip = dict(policy=RingGossip(rounds=GOSSIP_ROUNDS, degree=degree))
         variants["sim_gossip"] = {"kind": "sim", **gossip}
         variants["mesh_gossip"] = {"kind": "mesh", **gossip}
     elif verbose:
@@ -145,7 +158,7 @@ def run(
         rel_oracle = float(
             jnp.linalg.norm(res.o_star - oracle) / jnp.linalg.norm(oracle)
         )
-        nbytes = _consensus_bytes(backend, n, q, k)
+        nbytes = _consensus_bytes(backend.policy, n, q, k)
         report["backends"][name] = {
             "compile_s": round(compile_s, 4),
             "iter_ms": round(iter_ms, 4),
@@ -199,6 +212,54 @@ def run(
         if verbose:
             print(rows[-1], flush=True)
     objectives.update(step_objs)
+
+    # Per-policy rows: every ConsensusPolicy through ONE backend and one
+    # cached layer program per policy (the pluggable-consensus seam).
+    # bytes_per_worker scales with the policy's declared wire_bits —
+    # quantized:4 moves 1/8th the bytes of f32 exact consensus.
+    policies = {"exact": ExactMean()}
+    if degree >= 1:
+        policies["gossip"] = RingGossip(rounds=GOSSIP_ROUNDS, degree=degree)
+        policies["lossy"] = LossyGossip(
+            drop_prob=0.1, rounds=GOSSIP_ROUNDS, degree=degree
+        )
+    policies["quantized"] = QuantizedGossip(bits=4)
+    policies["stale"] = StaleMixing(2)
+    policy_backend = make("mesh")
+    report["policies"] = {}
+    for pname, pol in policies.items():
+        def policy_solve(pol=pol):
+            return admm.admm_ridge_consensus(
+                yw, tw, mu=1e-2, eps_radius=eps, num_iters=k,
+                backend=policy_backend, policy=pol,
+            )
+
+        res, p_compile_s = timed(policy_solve)   # trace + compile + run
+        res, dt = timed(policy_solve)            # steady state (cache hit)
+        nbytes = _consensus_bytes(pol, n, q, k)
+        rel_oracle = float(
+            jnp.linalg.norm(res.o_star - oracle) / jnp.linalg.norm(oracle)
+        )
+        report["policies"][pname] = {
+            "policy": pol.describe(),
+            "compile_s": round(p_compile_s, 4),
+            "iter_ms": round(dt / k * 1e3, 4),
+            "bytes_per_worker": nbytes,
+            "wire_bits": pol.wire_bits,
+            "exchanges_per_round": pol.exchanges_per_round,
+            "oracle_rel": rel_oracle,
+        }
+        rows.append(csv_row(
+            f"mesh_policy_{pname}", dt * 1e6,
+            f"M={m};iter_us={dt / k * 1e6:.1f};comm_bytes={nbytes};"
+            f"wire_bits={pol.wire_bits};oracle_rel={rel_oracle:.2e}",
+        ))
+        if verbose:
+            print(rows[-1], flush=True)
+    # One lowering per policy through the shared backend — the
+    # compile-count invariant of the policy seam.
+    report["policy_lowerings"] = policy_backend.lowerings
+    assert policy_backend.lowerings == len(policies), policy_backend.cache_info()
 
     # Centralized-equivalence parity: same mode, different runtime.
     report["parity"] = {}

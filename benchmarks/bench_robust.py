@@ -1,13 +1,18 @@
 """Beyond-paper benchmark: dSSFN under non-ideal networks (the paper's
-§IV future-work axis) — quantized links, lossy links, asynchronous
-workers.  One layer-solve accuracy vs the exact oracle per condition."""
+§IV future-work axis) — quantized links, lossy links, stale peers — each
+expressed as a ``ConsensusPolicy`` through the SAME backend + executable
+cache as the ideal-network path.  One layer-solve accuracy vs the exact
+oracle per condition, plus eq.-15 wire bytes scaled by the policy's
+declared ``wire_bits``."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_row, timed
-from repro.core import admm, consensus, robust, topology
+from repro.core import admm
+from repro.core.backend import SimulatedBackend
+from repro.core.policy import LossyGossip, QuantizedGossip, StaleMixing
 
 
 def _problem(key, n=32, q=5, j=640, m=8):
@@ -21,55 +26,54 @@ def _problem(key, n=32, q=5, j=640, m=8):
 
 def run(verbose: bool = True) -> list[str]:
     rows = []
-    y, t, yw, tw = _problem(jax.random.PRNGKey(0))
+    m = 8
+    y, t, yw, tw = _problem(jax.random.PRNGKey(0), m=m)
+    n, q = y.shape[0], t.shape[0]
     eps = 10.0
     oracle = admm.exact_constrained_ridge(y, t, eps_radius=eps)
     nrm = float(jnp.linalg.norm(oracle))
+    backend = SimulatedBackend(m)
 
     def rel(o):
         return float(jnp.linalg.norm(o - oracle)) / nrm
 
+    def solve(policy, num_iters):
+        return admm.admm_ridge_consensus(
+            yw, tw, mu=1e-2, eps_radius=eps, num_iters=num_iters,
+            backend=backend, policy=policy,
+        )
+
+    def wire_bytes(policy, num_iters):
+        # eq. 15 at the policy's declared link width — the same
+        # accounting bench_mesh reports.
+        return policy.wire_bytes(scalars=q * n, num_consensus=num_iters)
+
     # Quantized consensus: bits sweep (eq. 15 traffic scales by bits/32).
     for bits in (4, 6, 8, 16):
-        qfn = robust.make_quantized_consensus_fn(
-            consensus.exact_average, bits=bits, key=jax.random.PRNGKey(bits)
-        )
-        (res,), dt = timed(
-            lambda: (admm.admm_ridge_consensus(
-                yw, tw, mu=1e-2, eps_radius=eps, num_iters=200, consensus_fn=qfn
-            ),)
-        )
+        policy = QuantizedGossip(bits=bits)
+        (res,), dt = timed(lambda p=policy: (solve(p, 200),))
         rows.append(csv_row(
             f"robust_quant_{bits}bit", dt * 1e6,
-            f"rel_err={rel(res.o_star):.2e};traffic_scale={bits/32:.3f}",
+            f"rel_err={rel(res.o_star):.2e};traffic_scale={bits/32:.3f};"
+            f"wire_bytes={wire_bytes(policy, 200)}",
         ))
 
     # Lossy gossip: drop-probability sweep on a degree-2 circular graph.
-    h = topology.circular_mixing_matrix(8, 2)
-    b_rounds = topology.gossip_rounds_for_tolerance(h, 1e-8)
     for p in (0.0, 0.05, 0.1, 0.2):
-        lfn = robust.make_lossy_consensus_fn(
-            h, b_rounds + 10, drop_prob=p, key=jax.random.PRNGKey(int(p * 100))
-        )
-        (res,), dt = timed(
-            lambda: (admm.admm_ridge_consensus(
-                yw, tw, mu=1e-2, eps_radius=eps, num_iters=200, consensus_fn=lfn
-            ),)
-        )
+        policy = LossyGossip(drop_prob=p, rounds=20, degree=2)
+        (res,), dt = timed(lambda pol=policy: (solve(pol, 200),))
         rows.append(csv_row(
-            f"robust_lossy_p{p}", dt * 1e6, f"rel_err={rel(res.o_star):.2e}"
+            f"robust_lossy_p{p}", dt * 1e6,
+            f"rel_err={rel(res.o_star):.2e};wire_bytes={wire_bytes(policy, 200)}",
         ))
 
-    # Asynchronous workers: activity-probability sweep.
-    for ap in (1.0, 0.5, 0.25):
-        (res,), dt = timed(
-            lambda: (robust.async_admm_ridge_consensus(
-                yw, tw, mu=1e-2, eps_radius=eps, num_iters=400,
-                active_prob=ap, key=jax.random.PRNGKey(int(ap * 100)),
-            ),)
-        )
+    # Stale peers: staleness sweep (delay=0 is synchronous/exact).
+    for delay in (0, 1, 2, 4):
+        policy = StaleMixing(delay)
+        (res,), dt = timed(lambda pol=policy: (solve(pol, 400),))
         rows.append(csv_row(
-            f"robust_async_p{ap}", dt * 1e6, f"rel_err={rel(res.o_star):.2e}"
+            f"robust_stale_d{delay}", dt * 1e6,
+            f"rel_err={rel(res.o_star):.2e}",
         ))
 
     if verbose:

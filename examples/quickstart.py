@@ -1,11 +1,15 @@
 """Quickstart: train a decentralized SSFN (the paper's algorithm) on a
-synthetic Satimage-shaped task and verify centralized equivalence.
+synthetic Satimage-shaped task and verify centralized equivalence —
+through the ``repro.dssfn`` facade, so the backend/policy wiring is one
+spec object.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 
-from repro.core import consensus, equivalence, layerwise, ssfn, topology
+from repro import dssfn
+from repro.core import equivalence, layerwise, ssfn, topology
+from repro.core.policy import RingGossip
 from repro.data import paper_dataset, partition_workers
 
 
@@ -16,13 +20,14 @@ def main():
     m, degree = 8, 2
     xw, tw = partition_workers(data.x_train, data.t_train, m)
 
-    # 2. Communication network: degree-2 circular topology, modeled by a
-    #    doubly-stochastic mixing matrix (paper §III).
+    # 2. Communication network: degree-2 circular topology (paper §III).
+    #    The spectral gap of its mixing matrix tells us how many gossip
+    #    rounds reach consensus to tolerance; the RingGossip policy then
+    #    runs exactly that mixing as peer exchanges.
     h = topology.circular_mixing_matrix(m, degree)
     rounds = topology.gossip_rounds_for_tolerance(h, tol=1e-8)
     print(f"circular graph M={m} d={degree}: spectral gap "
           f"{topology.spectral_gap(h):.3f}, gossip rounds B={rounds}")
-    consensus_fn = consensus.make_consensus_fn("gossip", h=h, num_rounds=rounds)
 
     # 3. dSSFN: layer-wise consensus-ADMM learning (Algorithm 1).
     cfg = ssfn.SSFNConfig(
@@ -31,9 +36,12 @@ def main():
         mu0=1e-3, mul=1e-2, admm_iters=100,
     )
     key = jax.random.PRNGKey(7)   # seeds the SHARED random matrices {R_l}
-    params_d, log = layerwise.train_decentralized_ssfn(
-        xw, tw, cfg, key, consensus_fn=consensus_fn, gossip_rounds=rounds
+    spec = dssfn.TrainSpec(
+        cfg=cfg, backend="simulated", workers=m,
+        policy=RingGossip(rounds=rounds, degree=degree),
     )
+    result = dssfn.train(spec, xw, tw, key)
+    params_d, log = result.params, result.log
     print(f"dSSFN trained in {log.wall_time_s:.1f}s; layer costs: "
           + " ".join(f"{c:.1f}" for c in log.layer_costs))
     print(f"communication: {log.comm_scalars:,} scalars exchanged (eq. 15)")
@@ -43,7 +51,7 @@ def main():
         data.x_train, data.t_train, cfg, key
     )
     rep = equivalence.compare(params_c, params_d, data.x_test, data.num_classes)
-    acc_d = layerwise.accuracy(params_d, data.x_test, data.y_test, data.num_classes)
+    acc_d = dssfn.evaluate(result, data.x_test, data.y_test)
     acc_c = layerwise.accuracy(params_c, data.x_test, data.y_test, data.num_classes)
     print(f"test acc: centralized {acc_c:.3f} vs decentralized {acc_d:.3f}; "
           f"decision agreement {rep.agreement:.3f}")

@@ -1,12 +1,16 @@
-"""dSSFN beyond the paper: quantized links, lossy links, asynchronous
-workers, and non-IID data shards (the paper's §IV future-work axis).
+"""dSSFN beyond the paper: quantized links, lossy links, stale
+(asynchronous) peers, and non-IID data shards (the paper's §IV
+future-work axis) — each non-ideal network is just a different
+``ConsensusPolicy`` handed to the same solver.
 
     PYTHONPATH=src python examples/robust_networks.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import admm, consensus, robust, topology
+from repro.core import admm
+from repro.core.backend import SimulatedBackend
+from repro.core.policy import ExactMean, LossyGossip, QuantizedGossip, StaleMixing
 from repro.data import make_classification, partition_workers, partition_workers_noniid
 
 
@@ -24,44 +28,38 @@ def main():
     nrm = float(jnp.linalg.norm(oracle))
     rel = lambda o: float(jnp.linalg.norm(o - oracle)) / nrm
 
+    backend = SimulatedBackend(m)
+
+    def solve(policy, num_iters=200):
+        return admm.admm_ridge_consensus(
+            xw, tw, mu=1e-2, eps_radius=eps, num_iters=num_iters,
+            backend=backend, policy=policy,
+        )
+
     print("single-layer readout solve, M=8 workers, vs exact oracle:\n")
 
-    res = admm.admm_ridge_consensus(xw, tw, mu=1e-2, eps_radius=eps, num_iters=200)
-    print(f"  ideal network (exact consensus):       rel err {rel(res.o_star):.1e}")
+    res = solve(ExactMean())
+    print(f"  ideal network (ExactMean):              rel err {rel(res.o_star):.1e}")
 
     for bits in (16, 8, 4):
-        qfn = robust.make_quantized_consensus_fn(
-            consensus.exact_average, bits=bits, key=jax.random.PRNGKey(bits)
-        )
-        res = admm.admm_ridge_consensus(
-            xw, tw, mu=1e-2, eps_radius=eps, num_iters=200, consensus_fn=qfn
-        )
-        print(f"  {bits:2d}-bit links ({bits/32:.2f}x traffic):        "
+        policy = QuantizedGossip(bits=bits)
+        res = solve(policy)
+        print(f"  {bits:2d}-bit links ({policy.wire_bits/32:.2f}x traffic):        "
               f"rel err {rel(res.o_star):.1e}")
 
-    h = topology.circular_mixing_matrix(m, 2)
-    b_rounds = topology.gossip_rounds_for_tolerance(h, 1e-8)
     for p in (0.05, 0.2):
-        lfn = robust.make_lossy_consensus_fn(
-            h, b_rounds + 10, drop_prob=p, key=jax.random.PRNGKey(int(100 * p))
-        )
-        res = admm.admm_ridge_consensus(
-            xw, tw, mu=1e-2, eps_radius=eps, num_iters=200, consensus_fn=lfn
-        )
+        res = solve(LossyGossip(drop_prob=p, rounds=20, degree=2))
         print(f"  lossy gossip, {int(p*100):2d}% link drops:          "
               f"rel err {rel(res.o_star):.1e}")
 
-    for ap in (0.5, 0.25):
-        res_a = robust.async_admm_ridge_consensus(
-            xw, tw, mu=1e-2, eps_radius=eps, num_iters=600,
-            active_prob=ap, key=jax.random.PRNGKey(int(100 * ap)),
-        )
-        print(f"  async workers, {int(ap*100):2d}% active/round:       "
-              f"rel err {rel(res_a.o_star):.1e}")
+    for delay in (1, 3):
+        res = solve(StaleMixing(delay), num_iters=400)
+        print(f"  stale peers, {delay}-round-old values:        "
+              f"rel err {rel(res.o_star):.1e}")
 
     xw_n, tw_n = partition_workers_noniid(data.x_train, data.t_train, m)
     res_n = admm.admm_ridge_consensus(
-        xw_n, tw_n, mu=1e-2, eps_radius=eps, num_iters=200
+        xw_n, tw_n, mu=1e-2, eps_radius=eps, num_iters=200, backend=backend
     )
     print(f"  pathologically non-IID shards:          rel err {rel(res_n.o_star):.1e}"
           "   (distribution-free!)")

@@ -6,6 +6,7 @@ from repro.core import (
     engine,
     equivalence,
     layerwise,
+    policy,
     readout,
     ssfn,
     topology,
@@ -18,6 +19,7 @@ __all__ = [
     "engine",
     "equivalence",
     "layerwise",
+    "policy",
     "readout",
     "ssfn",
     "topology",

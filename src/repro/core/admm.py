@@ -32,8 +32,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import consensus as consensus_lib
+from repro.core.policy import ConsensusPolicy
 
-if TYPE_CHECKING:  # avoid a circular import at runtime (backend imports consensus)
+if TYPE_CHECKING:  # avoid a circular import at runtime (backend imports policy)
     from repro.core.backend import ConsensusBackend
 
 Array = jax.Array
@@ -106,6 +107,7 @@ def admm_ridge_consensus(
     num_iters: int,
     consensus_fn: Callable[[Array], Array] | None = None,
     backend: "ConsensusBackend | None" = None,
+    policy: ConsensusPolicy | None = None,
     z0: Array | None = None,
     use_kernels: bool = False,
 ) -> ADMMResult:
@@ -116,17 +118,22 @@ def admm_ridge_consensus(
     t_workers: (M, Q, J_m) per-worker targets.
     backend: a ``ConsensusBackend`` deciding where the M workers execute —
         ``SimulatedBackend`` (vmap worker axis, single device) or
-        ``MeshBackend`` (shard_map, one worker per mesh slot) — and which
-        consensus primitive they use (exact pmean or degree-d ring
-        gossip).  Defaults to ``SimulatedBackend(M, mode='exact')``.
+        ``MeshBackend`` (shard_map, one worker per mesh slot).  Defaults
+        to ``SimulatedBackend(M)``.
+    policy: the ``ConsensusPolicy`` deciding *how* they reach consensus
+        (``ExactMean``, ``RingGossip``, ``QuantizedGossip``,
+        ``LossyGossip``, ``StaleMixing``); defaults to the backend's own
+        policy.  Policy state (quantizer keys, staleness buffers) is
+        threaded through the ADMM scan carry.
     consensus_fn: legacy batched (M, Q, n) -> (M, Q, n) averaging
         primitive for simulations with an *arbitrary* dense mixing matrix
         H (``make_consensus_fn('gossip', h=...)``).  Mutually exclusive
-        with ``backend``; ring topologies should prefer a gossip-mode
-        backend, which expresses the same mixing as peer exchanges.
+        with ``backend``/``policy``; ring topologies should prefer a
+        gossip-policy backend, which expresses the same mixing as peer
+        exchanges.
     """
-    if consensus_fn is not None and backend is not None:
-        raise ValueError("pass either consensus_fn or backend, not both")
+    if consensus_fn is not None and (backend is not None or policy is not None):
+        raise ValueError("pass either consensus_fn or backend/policy, not both")
     if consensus_fn is None:
         from repro.core.backend import SimulatedBackend
 
@@ -136,6 +143,7 @@ def admm_ridge_consensus(
             y_workers,
             t_workers,
             backend=backend,
+            policy=policy,
             mu=mu,
             eps_radius=eps_radius,
             num_iters=num_iters,
@@ -212,24 +220,30 @@ def worker_admm_iterations(
     mu: float,
     eps_radius: float,
     num_iters: int,
+    policy: ConsensusPolicy | None = None,
 ):
     """K eq.-11 iterations as a worker-local scan over the cached factor.
 
     The shared inner loop of ``_admm_backend_path`` and the fused layer
     engine (``core.engine``): all cross-worker communication goes through
-    the backend collectives.  Each worker evaluates the objective against
-    its OWN consensus estimate Z_m (they coincide under exact consensus).
+    ``policy.mix`` (default: the backend's policy) on the backend's
+    collective context, and the policy's per-round state — quantizer PRNG
+    keys, staleness buffers — rides in the scan carry.  Each worker
+    evaluates the objective against its OWN consensus estimate Z_m (they
+    coincide under exact consensus).
     Returns ``(o, z, lam), (objs, primals, duals, cerrs)``.
     """
+    policy = policy if policy is not None else backend.policy
+    ctx = backend.ctx()
     q, n = a.shape
     dtype = a.dtype
 
     def step(carry, _):
-        _, z, lam = carry
+        (_, z, lam), pstate = carry
         rhs = a + (z - lam) / mu
         o = jax.scipy.linalg.cho_solve((chol, True), rhs.T).T
-        avg = backend.consensus_mean(o + lam)
-        if backend.mode == "exact":
+        avg, pstate = policy.mix(o + lam, pstate, ctx)
+        if policy.is_exact:
             # avg IS the pmean: the deviation is zero by construction,
             # and computing it would cost two extra collectives per
             # iteration on the mesh hot path.
@@ -241,10 +255,12 @@ def worker_admm_iterations(
         obj = backend.psum(jnp.sum((t_m - z_new @ y_m) ** 2))
         primal = jnp.sqrt(backend.psum(jnp.sum((o - z_new) ** 2)))
         dual = jnp.linalg.norm(z_new - z)
-        return (o, z_new, lam_new), (obj, primal, dual, cerr)
+        return ((o, z_new, lam_new), pstate), (obj, primal, dual, cerr)
 
-    init = (jnp.zeros((q, n), dtype), z_init, jnp.zeros((q, n), dtype))
-    return jax.lax.scan(step, init, None, length=num_iters)
+    zeros = jnp.zeros((q, n), dtype)
+    init = ((zeros, z_init, zeros), policy.init_state(zeros, ctx))
+    (state, _), traces = jax.lax.scan(step, init, None, length=num_iters)
+    return state, traces
 
 
 def _admm_backend_path(
@@ -257,6 +273,7 @@ def _admm_backend_path(
     num_iters: int,
     z0: Array | None,
     use_kernels: bool,
+    policy: ConsensusPolicy | None = None,
 ) -> ADMMResult:
     """Eq.-11 iteration as a worker-local SPMD program.
 
@@ -272,6 +289,8 @@ def _admm_backend_path(
         raise ValueError(
             f"y_workers has {m} worker shards, backend expects {backend.num_workers}"
         )
+    policy = policy if policy is not None else backend.policy
+    policy.validate(backend.num_workers)
     q, n = t_workers.shape[1], y_workers.shape[1]
     dtype = y_workers.dtype
     z_init = jnp.zeros((q, n), dtype) if z0 is None else z0.astype(dtype)
@@ -280,14 +299,15 @@ def _admm_backend_path(
         a, chol = _worker_stats_local(y_m, t_m, mu, use_kernels)
         return worker_admm_iterations(
             backend, a, chol, y_m, t_m, z_init_rep,
-            mu=mu, eps_radius=eps_radius, num_iters=num_iters,
+            mu=mu, eps_radius=eps_radius, num_iters=num_iters, policy=policy,
         )
 
     cache_key = (
         "admm_ridge", float(mu), float(eps_radius), int(num_iters), bool(use_kernels)
     )
     (o_w, z_w, lam_w), (objs, primals, duals, cerrs) = backend.run(
-        worker, y_workers, t_workers, replicated=(z_init,), key=cache_key
+        worker, y_workers, t_workers, replicated=(z_init,), key=cache_key,
+        policy=policy,
     )
     trace = ADMMTrace(objs[0], primals[0], duals[0], cerrs[0])
     return ADMMResult(o_star=z_w[0], o_workers=o_w, lam=lam_w, trace=trace)

@@ -21,11 +21,14 @@ Because both backends execute the *same traced worker program*, the
 centralized-equivalence tests transfer verbatim from the simulation to
 the mesh — which is the point of the paper.
 
-Consensus modes (both backends):
-- ``exact``  — ``lax.pmean``: one all-reduce, the B -> infinity limit.
-- ``gossip`` — B rounds of degree-d circular gossip (paper §III) via
-  ``lax.ppermute``; equivalent to the dense doubly-stochastic
-  ``topology.circular_mixing_matrix`` but expressed as peer exchanges.
+Consensus (both backends) is a pluggable :class:`~repro.core.policy.
+ConsensusPolicy` strategy object: ``ExactMean`` (one all-reduce, the
+B -> infinity limit), ``RingGossip`` (B rounds of degree-d circular
+gossip via ``lax.ppermute`` — the dense doubly-stochastic
+``topology.circular_mixing_matrix`` expressed as peer exchanges),
+``QuantizedGossip``, ``LossyGossip`` and ``StaleMixing``.  The legacy
+string modes (``mode='exact'|'gossip'`` plus ``degree``/``num_rounds``)
+remain as thin deprecated aliases over the first two policies.
 
 Executable cache
 ----------------
@@ -49,6 +52,7 @@ first trace would bake it into every later run.
 from __future__ import annotations
 
 import abc
+import warnings
 from collections import OrderedDict
 from typing import Any, Callable, Hashable
 
@@ -56,14 +60,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import consensus as consensus_lib
+from repro.core import policy as policy_lib
+from repro.core.policy import ConsensusContext, ConsensusPolicy
 
 Array = jax.Array
 
 #: Canonical mesh-axis name for the ADMM worker dimension.
 WORKER_AXIS = "workers"
-
-_CONSENSUS_MODES = ("exact", "gossip")
 
 #: Bound on memoized executables per backend instance.  Callers that pass
 #: a fresh closure per call without an explicit ``key`` create one entry
@@ -114,29 +117,37 @@ class ConsensusBackend(abc.ABC):
 
     axis_name: str
     num_workers: int
-    mode: str
-    degree: int
-    num_rounds: int
+    policy: ConsensusPolicy
 
-    def _init_consensus(self, mode: str, degree: int, num_rounds: int) -> None:
-        if mode not in _CONSENSUS_MODES:
-            raise ValueError(
-                f"unknown consensus mode {mode!r}; expected one of {_CONSENSUS_MODES}"
+    def _init_consensus(
+        self,
+        policy: ConsensusPolicy | None,
+        mode: str | None,
+        degree: int,
+        num_rounds: int,
+    ) -> None:
+        if policy is not None and mode is not None:
+            raise ValueError("pass either policy or mode, not both")
+        if policy is None:
+            if mode is not None:
+                # The pre-policy string API: kept working, but the policy
+                # object is the supported spelling.
+                warnings.warn(
+                    f"ConsensusBackend(mode={mode!r}, ...) is a deprecated "
+                    "alias; pass policy=ExactMean()/RingGossip(...) "
+                    "(repro.core.policy) instead",
+                    DeprecationWarning,
+                    stacklevel=3,
+                )
+            policy = policy_lib.policy_from_mode(
+                mode or "exact", degree=degree, num_rounds=num_rounds
             )
-        if degree < 1:
-            raise ValueError(f"gossip degree must be >= 1, got {degree}")
-        if num_rounds < 1:
-            raise ValueError(f"gossip rounds must be >= 1, got {num_rounds}")
-        if mode == "gossip" and 2 * degree + 1 > self.num_workers:
-            # A larger degree would wrap the ring and double-count
-            # neighbours — no longer the paper's degree-d circulant H.
-            raise ValueError(
-                f"gossip degree {degree} needs 2*d+1 <= M distinct ring "
-                f"neighbours but M={self.num_workers}"
+        if not isinstance(policy, ConsensusPolicy):
+            raise TypeError(
+                f"policy must be a ConsensusPolicy, got {type(policy).__name__}"
             )
-        self.mode = mode
-        self.degree = degree
-        self.num_rounds = num_rounds
+        policy.validate(self.num_workers)
+        self.policy = policy
         # Executable cache: (key, n_stacked, n_replicated, donate, collective)
         # -> jitted callable.  ``lowerings`` counts actual traces; the
         # compile-count regression test asserts it equals the number of
@@ -144,6 +155,24 @@ class ConsensusBackend(abc.ABC):
         self._exec_cache: OrderedDict[Hashable, Callable] = OrderedDict()
         self.lowerings = 0
         self.cache_hits = 0
+
+    # Legacy attribute views over the policy (pre-policy API surface).
+    @property
+    def mode(self) -> str:
+        return self.policy.mode_name
+
+    @property
+    def degree(self) -> int:
+        return getattr(self.policy, "degree", 1)
+
+    @property
+    def num_rounds(self) -> int:
+        return getattr(self.policy, "rounds", 1)
+
+    def ctx(self) -> ConsensusContext:
+        """The collectives handle policies mix through — valid inside a
+        function passed to :meth:`run`."""
+        return ConsensusContext(self.axis_name, self.num_workers)
 
     # ------------------------------------------------------------------
     # Execution
@@ -155,6 +184,7 @@ class ConsensusBackend(abc.ABC):
         replicated: tuple = (),
         key: Hashable | None = None,
         donate: tuple[int, ...] = (),
+        policy: ConsensusPolicy | None = None,
     ) -> Any:
         """Run ``fn`` once per worker; stacked (M, ...) in and out.
 
@@ -165,9 +195,16 @@ class ConsensusBackend(abc.ABC):
         donate: indices into ``stacked_args`` whose buffers the caller no
             longer needs — donated to XLA off-CPU (the O/Λ/Y carries of
             the dSSFN layer engine).
+        policy: the consensus policy this program runs under, when it is
+            not the backend default.  ``fn`` must close over the policy
+            object itself (policies are static config; see
+            ``admm._admm_backend_path``); passing it here makes it part
+            of the executable-cache key, so one lowering per
+            (program, policy) pair and no stale-executable reuse.
         """
         return self._cached_call(
-            fn, stacked_args, replicated, key, donate, collective=True
+            fn, stacked_args, replicated, key, donate, collective=True,
+            policy=policy,
         )
 
     def map_workers(
@@ -190,7 +227,9 @@ class ConsensusBackend(abc.ABC):
     # ------------------------------------------------------------------
     # Executable cache
     # ------------------------------------------------------------------
-    def _cached_call(self, fn, stacked_args, replicated, key, donate, collective):
+    def _cached_call(
+        self, fn, stacked_args, replicated, key, donate, collective, policy=None
+    ):
         self._check_stacked(stacked_args)
         donate = tuple(sorted(donate))
         if any(i < 0 or i >= len(stacked_args) for i in donate):
@@ -210,6 +249,7 @@ class ConsensusBackend(abc.ABC):
                 len(replicated),
                 donate,
                 collective,
+                policy,
             )
             jitted = self._exec_cache.get(cache_key)
             if jitted is None:
@@ -257,16 +297,14 @@ class ConsensusBackend(abc.ABC):
     # Collectives — valid only inside a function passed to ``run``.
     # ------------------------------------------------------------------
     def consensus_mean(self, x: Array) -> Array:
-        """The paper's graph-average primitive (Algorithm 1, line 8)."""
-        if self.mode == "exact":
-            return jax.lax.pmean(x, self.axis_name)
-        return consensus_lib.ring_gossip_average(
-            x,
-            self.axis_name,
-            degree=self.degree,
-            num_nodes=self.num_workers,
-            num_rounds=self.num_rounds,
-        )
+        """The paper's graph-average primitive (Algorithm 1, line 8).
+
+        One-shot mix under this backend's policy, from a fresh policy
+        state.  Loops that call the policy repeatedly (the ADMM scan)
+        should instead thread ``policy.mix``'s state through their carry
+        — see ``admm.worker_admm_iterations``.
+        """
+        return self.policy.one_shot(x, self.ctx())
 
     def exact_mean(self, x: Array) -> Array:
         """True mean regardless of mode (diagnostics: consensus error)."""
@@ -289,14 +327,15 @@ class ConsensusBackend(abc.ABC):
 
         Exact consensus is one all-reduce (B=1 in the eq. 15 accounting);
         degree-d gossip sends to 2d neighbours for each of B rounds.
+        Delegates to the policy's declared ``exchanges_per_round``.
         """
-        if self.mode == "exact":
-            return 1
-        return 2 * self.degree * self.num_rounds
+        return self.policy.exchanges_per_round
 
     def describe(self) -> str:
-        g = f", degree={self.degree}, rounds={self.num_rounds}" if self.mode == "gossip" else ""
-        return f"{type(self).__name__}(M={self.num_workers}, mode={self.mode!r}{g})"
+        return (
+            f"{type(self).__name__}(M={self.num_workers}, "
+            f"policy={self.policy.describe()})"
+        )
 
 
 class SimulatedBackend(ConsensusBackend):
@@ -311,7 +350,8 @@ class SimulatedBackend(ConsensusBackend):
         self,
         num_workers: int,
         *,
-        mode: str = "exact",
+        policy: ConsensusPolicy | None = None,
+        mode: str | None = None,
         degree: int = 1,
         num_rounds: int = 1,
         axis_name: str = WORKER_AXIS,
@@ -320,7 +360,7 @@ class SimulatedBackend(ConsensusBackend):
             raise ValueError(f"num_workers must be >= 1, got {num_workers}")
         self.num_workers = int(num_workers)
         self.axis_name = axis_name
-        self._init_consensus(mode, degree, num_rounds)
+        self._init_consensus(policy, mode, degree, num_rounds)
 
     def _build_executable(self, fn, n_stacked, n_replicated, donate, collective):
         def counted(*args):
@@ -348,7 +388,8 @@ class MeshBackend(ConsensusBackend):
         self,
         mesh: Mesh | None = None,
         *,
-        mode: str = "exact",
+        policy: ConsensusPolicy | None = None,
+        mode: str | None = None,
         degree: int = 1,
         num_rounds: int = 1,
         axis_name: str = WORKER_AXIS,
@@ -366,7 +407,7 @@ class MeshBackend(ConsensusBackend):
         self.num_workers = int(
             mesh.devices.shape[mesh.axis_names.index(axis_name)]
         )
-        self._init_consensus(mode, degree, num_rounds)
+        self._init_consensus(policy, mode, degree, num_rounds)
 
     def shard_workers(self, x: Array) -> Array:
         spec = [None] * jnp.ndim(x)
@@ -408,17 +449,30 @@ def make_backend(
     num_workers: int | None = None,
     *,
     mesh: Mesh | None = None,
-    mode: str = "exact",
+    policy: ConsensusPolicy | str | None = None,
+    mode: str | None = None,
     degree: int = 1,
     num_rounds: int = 1,
 ) -> ConsensusBackend:
-    """CLI-friendly factory: kind in {'simulated', 'mesh'}."""
+    """CLI-friendly factory: kind in {'simulated', 'mesh'}.
+
+    ``policy`` is the supported consensus selector — a ConsensusPolicy
+    object or a spec string (``"exact"``, ``"gossip:4:2"``,
+    ``"quantized:8"``, ``"lossy:0.1"``, ``"stale:2"``, see
+    ``policy.parse_policy``).  The old ``mode=``/``degree=``/
+    ``num_rounds=`` strings remain as deprecated aliases.
+    """
+    if isinstance(policy, str):
+        policy = policy_lib.parse_policy(policy, degree=degree)
     if kind == "simulated":
         if num_workers is None:
             raise ValueError("simulated backend requires num_workers")
         return SimulatedBackend(
-            num_workers, mode=mode, degree=degree, num_rounds=num_rounds
+            num_workers, policy=policy, mode=mode, degree=degree,
+            num_rounds=num_rounds,
         )
     if kind == "mesh":
-        return MeshBackend(mesh, mode=mode, degree=degree, num_rounds=num_rounds)
+        return MeshBackend(
+            mesh, policy=policy, mode=mode, degree=degree, num_rounds=num_rounds
+        )
     raise ValueError(f"unknown backend kind {kind!r}; expected 'simulated' or 'mesh'")

@@ -8,16 +8,28 @@ quantity over the graph" primitive (Algorithm 1, line 8):
    leading axis of a single array (the simulation layout used by the
    reproduction experiments and tests).
 2. ``exact_average`` — the B -> infinity limit (1/M) * sum_m x_m.
-3. ``ring_gossip_shard_map`` — the TPU-native adaptation: the same degree-d
+3. ``ring_gossip_average`` — the TPU-native adaptation: the same degree-d
    circular-topology gossip expressed with ``jax.lax.ppermute`` along a
    mesh axis, for running the consensus on an actual device ring (ICI
    torus).  On production meshes one would instead use ``jax.lax.pmean``
    (a single all-reduce == exact consensus); we keep gossip to reproduce
    the paper's degree sweep.
+
+This module holds the *reference implementations*; how they are selected
+and composed per training run is the job of the ``ConsensusPolicy``
+strategy objects in ``repro.core.policy`` (``ExactMean``, ``RingGossip``,
+``QuantizedGossip``, ``LossyGossip``, ``StaleMixing``), which call back
+into these primitives.  The SPMD-side extras — the lossy ring hop and the
+stochastic quantizer — live here for the same reason.
+
+``make_consensus_fn`` (the legacy batched dense-H factory) is deprecated:
+prefer a policy plus a backend, which run the identical mixing as peer
+exchanges under both the simulation and the mesh.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -83,6 +95,66 @@ def ring_gossip_average(
     return jax.lax.fori_loop(0, num_rounds, body, x)
 
 
+def lossy_ring_gossip_step(
+    x: jax.Array,
+    axis_name: str,
+    *,
+    degree: int,
+    num_nodes: int,
+    drop_prob: float,
+    key: jax.Array,
+) -> jax.Array:
+    """One degree-d ring gossip round where each incoming link fails
+    independently with probability ``drop_prob``.
+
+    The receiver renormalizes its equal-weight mixing row over surviving
+    links (the self-link never drops), preserving row-stochasticity —
+    the same failure model as the old batched ``lossy_gossip_average``
+    but expressed with collectives, so it runs under both backends.
+    ``key`` must be a per-worker key (each node observes its own link
+    failures); ``drop_prob=0`` reduces to :func:`ring_gossip_step`.
+    """
+    num_links = 2 * degree
+    keys = jax.random.split(key, num_links)
+    acc = x
+    count = jnp.ones((), x.dtype)  # self-link
+    i = 0
+    for k in range(1, degree + 1):
+        fwd = [(s, (s + k) % num_nodes) for s in range(num_nodes)]
+        bwd = [(s, (s - k) % num_nodes) for s in range(num_nodes)]
+        for perm in (fwd, bwd):
+            msg = jax.lax.ppermute(x, axis_name, perm)
+            alive = jax.random.bernoulli(keys[i], 1.0 - drop_prob).astype(x.dtype)
+            acc = acc + alive * msg
+            count = count + alive
+            i += 1
+    return acc / count
+
+
+def quantize_stochastic(x: jax.Array, bits: int, key: jax.Array) -> jax.Array:
+    """Unbiased per-tensor stochastic-rounding quantization to 2^bits
+    levels over the tensor's dynamic range: E[q(x)] = x."""
+    levels = 2 ** bits - 1
+    lo = jnp.min(x)
+    hi = jnp.max(x)
+    scale = jnp.maximum(hi - lo, 1e-12) / levels
+    t = (x - lo) / scale
+    floor = jnp.floor(t)
+    prob = t - floor
+    up = jax.random.bernoulli(key, prob, x.shape)
+    q = floor + up.astype(x.dtype)
+    return lo + q * scale
+
+
+def quantize_nearest(x: jax.Array, bits: int) -> jax.Array:
+    """Deterministic round-to-nearest variant (biased, zero variance)."""
+    levels = 2 ** bits - 1
+    lo = jnp.min(x)
+    hi = jnp.max(x)
+    scale = jnp.maximum(hi - lo, 1e-12) / levels
+    return lo + jnp.round((x - lo) / scale) * scale
+
+
 def make_consensus_fn(
     mode: str,
     *,
@@ -93,7 +165,19 @@ def make_consensus_fn(
 
     mode = 'exact'  : true mean (production path; == one all-reduce)
     mode = 'gossip' : B rounds of x <- Hx (paper-faithful simulation)
+
+    .. deprecated::
+        Stale alias kept for the batched dense-H simulation path.  New
+        code should pass a ``repro.core.policy`` ConsensusPolicy to a
+        ``ConsensusBackend`` — the same mixing expressed as peer
+        exchanges, valid on the mesh as well as in simulation.
     """
+    warnings.warn(
+        "make_consensus_fn is deprecated; pass a ConsensusPolicy "
+        "(repro.core.policy) to a ConsensusBackend instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     if mode == "exact":
         return exact_average
     if mode == "gossip":

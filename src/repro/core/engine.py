@@ -39,6 +39,7 @@ import jax.numpy as jnp
 
 from repro.core import admm as admm_lib
 from repro.core.backend import ConsensusBackend
+from repro.core.policy import ConsensusPolicy
 
 Array = jax.Array
 
@@ -86,6 +87,7 @@ def fused_layer_step(
     num_iters: int,
     use_kernels: bool = False,
     donate_y: bool = False,
+    policy: ConsensusPolicy | None = None,
 ) -> LayerStepResult:
     """One dSSFN layer as a single cached SPMD program.
 
@@ -99,6 +101,9 @@ def fused_layer_step(
         caller's array, and layer 0's pass-through output may alias it
         (jit forwards unchanged inputs), so layer 1 must not donate
         either.
+    policy: consensus strategy for the ADMM scan inside this program
+        (default: the backend's policy).  Part of the cache key — one
+        lowering per (layer shape, policy), never a per-call re-trace.
 
     The executable cache key covers every closed-over trace-affecting
     value; W is an operand, so the (n, n)-shaped program compiled for
@@ -109,6 +114,8 @@ def fused_layer_step(
         raise ValueError(
             f"y_workers has {m} worker shards, backend expects {backend.num_workers}"
         )
+    policy = policy if policy is not None else backend.policy
+    policy.validate(backend.num_workers)
 
     def worker(y_m: Array, t_m: Array, *w_rep: Array):
         if w_rep:
@@ -121,7 +128,7 @@ def fused_layer_step(
         z_init = jnp.zeros((q, n), a.dtype)
         (o, z, lam), traces = admm_lib.worker_admm_iterations(
             backend, a, chol, y_m, t_m, z_init,
-            mu=mu, eps_radius=eps_radius, num_iters=num_iters,
+            mu=mu, eps_radius=eps_radius, num_iters=num_iters, policy=policy,
         )
         return (o, z, lam, y_m), traces
 
@@ -140,6 +147,7 @@ def fused_layer_step(
         replicated=() if w is None else (w,),
         key=cache_key,
         donate=(0,) if donate_y else (),
+        policy=policy,
     )
     trace = admm_lib.ADMMTrace(objs[0], primals[0], duals[0], cerrs[0])
     return LayerStepResult(

@@ -33,6 +33,7 @@ from repro.core import admm as admm_lib
 from repro.core import engine as engine_lib
 from repro.core import ssfn as ssfn_lib
 from repro.core.backend import ConsensusBackend, SimulatedBackend
+from repro.core.policy import ConsensusPolicy
 
 Array = jax.Array
 
@@ -60,6 +61,7 @@ def train_decentralized_ssfn(
     *,
     consensus_fn: Callable[[Array], Array] | None = None,
     backend: ConsensusBackend | None = None,
+    policy: ConsensusPolicy | None = None,
     gossip_rounds: int = 1,
     size_estimation_tol: float | None = None,
 ) -> tuple[ssfn_lib.SSFNParams, LayerwiseLog]:
@@ -67,14 +69,19 @@ def train_decentralized_ssfn(
 
     x_workers: (M, P, J_m) column-stacked inputs per worker (disjoint shards).
     t_workers: (M, Q, J_m) one-hot targets per worker.
-    backend: where the M workers execute and how they reach consensus
-        (``SimulatedBackend`` or ``MeshBackend``); None = simulated exact
-        mean.  In the mesh case the Y_m/T_m shards stay device-local
-        through the whole layer-wise loop — feature propagation, the Gram
-        factorization and the layer solves all run as ONE fused SPMD
-        program per layer under the backend's executable cache.
+    backend: where the M workers execute (``SimulatedBackend`` or
+        ``MeshBackend``); None = simulated.  In the mesh case the Y_m/T_m
+        shards stay device-local through the whole layer-wise loop —
+        feature propagation, the Gram factorization and the layer solves
+        all run as ONE fused SPMD program per layer under the backend's
+        executable cache.
+    policy: how the workers reach consensus — a ``repro.core.policy``
+        strategy object (``ExactMean``, ``RingGossip``,
+        ``QuantizedGossip``, ``LossyGossip``, ``StaleMixing``); defaults
+        to the backend's policy.  Drives the eq.-15 communication
+        accounting via its declared ``exchanges_per_round``.
     consensus_fn: legacy dense-H consensus primitive for the Z-update
-        (mutually exclusive with ``backend``).
+        (mutually exclusive with ``backend``/``policy``).
     gossip_rounds: B, used only for the communication-load accounting when a
         gossip consensus_fn is supplied (B=1 for exact all-reduce; gossip
         backends account with their own ``num_rounds``).
@@ -85,8 +92,8 @@ def train_decentralized_ssfn(
         already tracks, so all workers stop at the same depth with NO extra
         communication.  None = fixed size (cfg.num_layers, paper §II).
     """
-    if consensus_fn is not None and backend is not None:
-        raise ValueError("pass either consensus_fn or backend, not both")
+    if consensus_fn is not None and (backend is not None or policy is not None):
+        raise ValueError("pass either consensus_fn or backend/policy, not both")
     if consensus_fn is not None:
         return _train_consensus_fn_path(
             x_workers, t_workers, cfg, key,
@@ -99,13 +106,13 @@ def train_decentralized_ssfn(
     t0 = time.perf_counter()
     r_list = ssfn_lib.init_random_matrices(key, cfg)
 
-    # eq.-15 accounting: a user-supplied backend knows its own exchange
-    # count; the implicit simulated-exact default keeps the legacy
-    # ``gossip_rounds`` convention.
-    exchanges = (
-        backend.exchanges_per_consensus() if backend is not None else gossip_rounds
-    )
     engine_backend = backend or SimulatedBackend(x_workers.shape[0])
+    # eq.-15 accounting: the policy declares its own exchange count; the
+    # implicit simulated-exact default (no backend, no policy) keeps the
+    # legacy ``gossip_rounds`` convention.
+    explicit = backend is not None or policy is not None
+    policy = policy if policy is not None else engine_backend.policy
+    exchanges = policy.exchanges_per_round if explicit else gossip_rounds
     x_workers = engine_backend.shard_workers(x_workers)
     t_workers = engine_backend.shard_workers(t_workers)
 
@@ -127,6 +134,7 @@ def train_decentralized_ssfn(
             eps_radius=cfg.eps_radius,
             num_iters=cfg.admm_iters,
             use_kernels=cfg.use_kernels,
+            policy=policy,
             # From layer 2 on, the stacked Y is a fresh relu(W@Y) buffer
             # the engine owns — safe to hand to XLA.  Layers 0 and 1 must
             # NOT donate: layer 0's input is the caller's x_workers, and

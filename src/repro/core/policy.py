@@ -1,0 +1,474 @@
+"""ConsensusPolicy: one strategy object per way of reaching consensus.
+
+The paper's Algorithm 1 is parameterized by *how* the workers average
+(a doubly-stochastic mixing matrix H); everything else — the layer-wise
+loop, the ADMM iterations, the mesh execution — is invariant.  This
+module makes that parameterization a first-class object instead of a set
+of string modes and parallel code paths:
+
+    policy.mix(x, state, ctx) -> (x_mixed, state)
+
+runs *inside* the SPMD worker program (under ``SimulatedBackend``'s vmap
+axis or ``MeshBackend``'s shard_map region), communicates only through
+the collectives on :class:`ConsensusContext`, and threads optional
+per-round state (quantizer PRNG keys, staleness buffers) through the
+ADMM scan carry.  Each policy declares its communication footprint —
+``exchanges_per_round`` (peer messages per consensus call, the B factor
+of the paper's eq. 15) and ``wire_bits`` (bits per exchanged scalar) —
+so the accounting in ``layerwise``/``bench_mesh`` needs no per-mode
+special cases.
+
+Shipped policies
+----------------
+==============================  ==========================  ==========
+policy                          exchanges/round             wire bits
+==============================  ==========================  ==========
+``ExactMean()``                 1 (one all-reduce)          32
+``RingGossip(rounds, degree)``  2 * degree * rounds         32
+``QuantizedGossip(bits)``       1                           ``bits``
+``LossyGossip(drop_prob, ...)`` 2 * degree * rounds         32
+``StaleMixing(delay)``          1                           32
+==============================  ==========================  ==========
+
+``ExactMean`` is the B -> infinity limit (bit-identical to the old
+``mode='exact'``); ``RingGossip`` is the paper's degree-d circular
+topology expressed as ``ppermute`` hops; the last three are the paper's
+§IV future-work axis (quantized / lossy / asynchronous peer-to-peer
+networks), previously stranded in ``core/robust.py`` as batched
+simulations that could not run under ``MeshBackend``.
+
+The numeric primitives (ring hops, stochastic quantization) live in
+``repro.core.consensus`` — policies are thin strategy objects over those
+reference implementations, which is what keeps a new consensus variant
+at ~50 lines.
+
+Policies are frozen dataclasses: hashable (they participate in the
+backend executable-cache key — one lowering per (layer shape, policy)),
+compare by value, and hold only static configuration.  Randomized
+policies fold a static integer ``seed`` with the worker index at trace
+time and advance the resulting key through the scan state, so repeated
+``mix`` calls see fresh draws with no Python-side state.
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import consensus as consensus_lib
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class ConsensusContext:
+    """Collectives available to a policy inside the worker program.
+
+    Valid under both runtimes: vmap-with-axis-name (``SimulatedBackend``)
+    and shard_map over a mesh axis (``MeshBackend``).
+    """
+
+    axis_name: str
+    num_workers: int
+
+    def pmean(self, x: Array) -> Array:
+        return jax.lax.pmean(x, self.axis_name)
+
+    def psum(self, x: Array) -> Array:
+        return jax.lax.psum(x, self.axis_name)
+
+    def pmax(self, x: Array) -> Array:
+        return jax.lax.pmax(x, self.axis_name)
+
+    def ppermute(self, x: Array, perm) -> Array:
+        return jax.lax.ppermute(x, self.axis_name, perm)
+
+    def worker_index(self) -> Array:
+        return jax.lax.axis_index(self.axis_name)
+
+
+class ConsensusPolicy(abc.ABC):
+    """Strategy object for the paper's graph-average primitive.
+
+    Implementations must be hashable value objects (frozen dataclasses):
+    they ride in executable-cache keys, so two equal policies must share
+    one lowered program.
+    """
+
+    #: Short mode string, kept for the legacy ``backend.mode`` attribute
+    #: and CLI round-tripping.
+    mode_name: str = "policy"
+
+    #: Bits per scalar actually put on the wire (eq.-15 byte accounting).
+    wire_bits: int = 32
+
+    @property
+    @abc.abstractmethod
+    def exchanges_per_round(self) -> int:
+        """Peer messages each worker sends per ``mix`` call (eq. 15's B)."""
+
+    @property
+    def is_exact(self) -> bool:
+        """True if ``mix`` returns the true mean on every worker —
+        lets callers skip consensus-error collectives on the hot path."""
+        return False
+
+    def validate(self, num_workers: int) -> None:
+        """Raise ValueError if this policy cannot run on M workers."""
+
+    def init_state(self, x: Array, ctx: ConsensusContext) -> Any:
+        """Per-worker scan-carry state (PRNG keys, staleness buffers).
+
+        Called inside the worker program with an example message ``x``
+        (its shape/dtype are what matter).  Stateless policies return ().
+        """
+        return ()
+
+    @abc.abstractmethod
+    def mix(
+        self, x: Array, state: Any, ctx: ConsensusContext
+    ) -> Tuple[Array, Any]:
+        """One consensus round: this worker's estimate of the graph mean.
+
+        Runs inside the SPMD worker program; all cross-worker traffic
+        must go through ``ctx``.  Returns the mixed value and the
+        advanced state.
+        """
+
+    def one_shot(self, x: Array, ctx: ConsensusContext) -> Array:
+        """Single mix from a fresh state (diagnostics / compat paths).
+
+        Policies whose fresh state means "no history yet" (staleness
+        buffers) override this so a lone call still returns an average
+        rather than an artifact of the empty state.
+        """
+        out, _ = self.mix(x, self.init_state(x, ctx), ctx)
+        return out
+
+    def wire_bytes(self, *, scalars: int, num_consensus: int) -> int:
+        """Eq.-15 wire bytes per worker: ``scalars`` floats per exchange,
+        ``exchanges_per_round`` exchanges per consensus call,
+        ``num_consensus`` consensus calls, at this policy's link width.
+        The single accounting used by layerwise logs and benchmarks.
+        """
+        return (
+            scalars * self.exchanges_per_round * num_consensus
+            * self.wire_bits // 8
+        )
+
+    def describe(self) -> str:
+        return repr(self)
+
+
+def _worker_key(seed: int, ctx: ConsensusContext) -> Array:
+    """Per-worker PRNG key from a static seed: distinct streams per
+    worker, deterministic across runs and runtimes."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), ctx.worker_index())
+
+
+# --------------------------------------------------------------- exact
+
+@dataclass(frozen=True)
+class ExactMean(ConsensusPolicy):
+    """One all-reduce: the B -> infinity limit of gossip (paper §III)."""
+
+    mode_name = "exact"
+
+    @property
+    def exchanges_per_round(self) -> int:
+        return 1
+
+    @property
+    def is_exact(self) -> bool:
+        return True
+
+    def mix(self, x, state, ctx):
+        return ctx.pmean(x), state
+
+
+# -------------------------------------------------------------- gossip
+
+@dataclass(frozen=True)
+class RingGossip(ConsensusPolicy):
+    """B rounds of degree-d circular gossip (paper §III) via ppermute.
+
+    Equivalent to B applications of the dense doubly-stochastic
+    ``topology.circular_mixing_matrix(M, degree)`` but expressed as peer
+    exchanges on the device ring (ICI-torus native on TPU).
+    """
+
+    rounds: int = 1
+    degree: int = 1
+
+    mode_name = "gossip"
+
+    def __post_init__(self):
+        if self.degree < 1:
+            raise ValueError(f"gossip degree must be >= 1, got {self.degree}")
+        if self.rounds < 1:
+            raise ValueError(f"gossip rounds must be >= 1, got {self.rounds}")
+
+    def validate(self, num_workers: int) -> None:
+        if 2 * self.degree + 1 > num_workers:
+            # A larger degree would wrap the ring and double-count
+            # neighbours — no longer the paper's degree-d circulant H.
+            raise ValueError(
+                f"gossip degree {self.degree} needs 2*d+1 <= M distinct ring "
+                f"neighbours but M={num_workers}"
+            )
+
+    @property
+    def exchanges_per_round(self) -> int:
+        return 2 * self.degree * self.rounds
+
+    def mix(self, x, state, ctx):
+        out = consensus_lib.ring_gossip_average(
+            x,
+            ctx.axis_name,
+            degree=self.degree,
+            num_nodes=ctx.num_workers,
+            num_rounds=self.rounds,
+        )
+        return out, state
+
+
+# ----------------------------------------------------------- quantized
+
+@dataclass(frozen=True)
+class QuantizedGossip(ConsensusPolicy):
+    """k-bit links: every exchanged message is quantized before the
+    all-reduce (the first "class of algorithms" in the paper's
+    literature review).  ``stochastic=True`` uses unbiased stochastic
+    rounding — E[q(x)] = x — so the consensus preserves the
+    doubly-stochastic mean in expectation; eq.-15 traffic scales by
+    bits/32 (declared via ``wire_bits``)."""
+
+    bits: int = 8
+    stochastic: bool = True
+    seed: int = 0
+
+    mode_name = "quantized"
+
+    def __post_init__(self):
+        if not 1 <= self.bits <= 32:
+            raise ValueError(f"quantization bits must be in [1, 32], got {self.bits}")
+
+    @property
+    def wire_bits(self) -> int:  # type: ignore[override]
+        return self.bits
+
+    @property
+    def exchanges_per_round(self) -> int:
+        return 1
+
+    def init_state(self, x, ctx):
+        return _worker_key(self.seed, ctx)
+
+    def mix(self, x, state, ctx):
+        key, sub = jax.random.split(state)
+        if self.stochastic:
+            q = consensus_lib.quantize_stochastic(x, self.bits, sub)
+        else:
+            q = consensus_lib.quantize_nearest(x, self.bits)
+        return ctx.pmean(q), key
+
+
+# --------------------------------------------------------------- lossy
+
+@dataclass(frozen=True)
+class LossyGossip(ConsensusPolicy):
+    """Ring gossip over a lossy network: each incoming link fails
+    independently with probability ``drop_prob`` per round, and the
+    receiver renormalizes its mixing row over surviving links (self-link
+    never drops) — row-stochasticity is preserved per round but double
+    stochasticity is not, which is exactly why naive lossy gossip biases
+    the mean (paper §IV / ref [16] relaxed ADMM)."""
+
+    drop_prob: float = 0.1
+    rounds: int = 1
+    degree: int = 1
+    seed: int = 0
+
+    mode_name = "lossy"
+
+    def __post_init__(self):
+        if not 0.0 <= self.drop_prob < 1.0:
+            raise ValueError(
+                f"drop_prob must be in [0, 1), got {self.drop_prob}"
+            )
+        if self.degree < 1:
+            raise ValueError(f"gossip degree must be >= 1, got {self.degree}")
+        if self.rounds < 1:
+            raise ValueError(f"gossip rounds must be >= 1, got {self.rounds}")
+
+    def validate(self, num_workers: int) -> None:
+        RingGossip(self.rounds, self.degree).validate(num_workers)
+
+    @property
+    def exchanges_per_round(self) -> int:
+        return 2 * self.degree * self.rounds
+
+    def init_state(self, x, ctx):
+        return _worker_key(self.seed, ctx)
+
+    def mix(self, x, state, ctx):
+        def body(carry, _):
+            val, key = carry
+            key, sub = jax.random.split(key)
+            val = consensus_lib.lossy_ring_gossip_step(
+                val,
+                ctx.axis_name,
+                degree=self.degree,
+                num_nodes=ctx.num_workers,
+                drop_prob=self.drop_prob,
+                key=sub,
+            )
+            return (val, key), None
+
+        (out, key), _ = jax.lax.scan(
+            body, (x, state), None, length=self.rounds
+        )
+        return out, key
+
+
+# --------------------------------------------------------------- stale
+
+@dataclass(frozen=True)
+class StaleMixing(ConsensusPolicy):
+    """Bounded-staleness asynchrony model (ARock-style, paper ref [15]):
+    peers never see this worker's current value — they see the average
+    of its last ``delay`` *transmitted* iterates (message ages 1..delay,
+    the way asynchronously-arriving gossip messages span a staleness
+    window).  The buffer rides in the ADMM scan carry; each worker
+    substitutes its own fresh value for its own stale contribution.
+
+    ``delay=0`` is exactly ``ExactMean``; as the ADMM iterates converge,
+    the stale window mean converges to the true mean, so the fixed point
+    is unchanged.  Like any delayed-feedback loop, tolerance is bounded:
+    large ``delay`` combined with a large ADMM coupling ``mu`` can
+    oscillate (step-size-vs-staleness, the ARock condition) — delays up
+    to ~3 are stable at this repo's default hyper-parameters.
+    """
+
+    delay: int = 1
+
+    mode_name = "stale"
+
+    def __post_init__(self):
+        if self.delay < 0:
+            raise ValueError(f"staleness delay must be >= 0, got {self.delay}")
+
+    @property
+    def exchanges_per_round(self) -> int:
+        return 1
+
+    @property
+    def is_exact(self) -> bool:
+        return self.delay == 0
+
+    def init_state(self, x, ctx):
+        if self.delay == 0:
+            return ()
+        # The transmit buffer, oldest first: what peers can see over the
+        # next `delay` rounds.  Zeros match the ADMM zero-initialization
+        # (O^0 = Lam^0 = 0), i.e. "nothing sent yet".
+        return jnp.zeros((self.delay,) + x.shape, x.dtype)
+
+    def mix(self, x, state, ctx):
+        if self.delay == 0:
+            return ctx.pmean(x), state
+        # Strictly pre-push: the current x is NOT in the message.
+        msg = state.mean(axis=0)
+        new_buf = jnp.concatenate([state[1:], x[None]], axis=0)
+        # Peers average everyone's stale messages; replace our own stale
+        # term with the fresh one (we obviously know our current value).
+        avg = ctx.pmean(msg) + (x - msg) / ctx.num_workers
+        return avg, new_buf
+
+    def one_shot(self, x, ctx):
+        # A fresh init_state means "nothing transmitted yet" (zeros),
+        # which would make a lone mix return x/M — not an average.  For
+        # one-shot use, seed the window as if x had been transmitted all
+        # along: the steady state, whose mix is exactly the mean.
+        if self.delay == 0:
+            return ctx.pmean(x)
+        steady = jnp.broadcast_to(x, (self.delay,) + x.shape)
+        out, _ = self.mix(x, steady, ctx)
+        return out
+
+
+# ------------------------------------------------------------- parsing
+
+#: Mode-string -> policy class, for the deprecated string-mode aliases.
+_MODES = ("exact", "gossip", "quantized", "lossy", "stale")
+
+
+def policy_from_mode(
+    mode: str, *, degree: int = 1, num_rounds: int = 1
+) -> ConsensusPolicy:
+    """Legacy ``mode=`` strings -> policy objects (the thin alias layer
+    under ``ConsensusBackend(mode=...)`` / ``make_backend(mode=...)``)."""
+    if mode == "exact":
+        return ExactMean()
+    if mode == "gossip":
+        return RingGossip(rounds=num_rounds, degree=degree)
+    raise ValueError(
+        f"unknown consensus mode {mode!r}; expected one of {_MODES[:2]} "
+        f"(or pass a ConsensusPolicy for {_MODES[2:]})"
+    )
+
+
+#: Max ``:``-separated arguments each policy spec accepts — extra
+#: segments are an error, never silently dropped.
+_SPEC_MAX_ARGS = {"exact": 0, "gossip": 2, "quantized": 1, "lossy": 3, "stale": 1}
+
+
+def parse_policy(
+    spec: str, *, degree: int = 1, rounds: int = 1
+) -> ConsensusPolicy:
+    """CLI policy specs: ``exact | gossip[:B[:d]] | quantized:bits |
+    lossy:p[:B[:d]] | stale:delay``.
+
+    ``degree``/``rounds`` are the fallbacks for segments the spec leaves
+    out (the launcher feeds its legacy ``--degree``/``--rounds`` flags
+    here, so ``lossy:0.1 --rounds 10`` means 10 lossy rounds).
+
+    >>> parse_policy("gossip:3")
+    RingGossip(rounds=3, degree=1)
+    >>> parse_policy("quantized:4").wire_bits
+    4
+    """
+    name, _, rest = spec.partition(":")
+    args = [a for a in rest.split(":") if a] if rest else []
+    if name not in _MODES:
+        raise ValueError(
+            f"unknown consensus policy {name!r}; expected one of {_MODES} "
+            f"(spec {spec!r})"
+        )
+    if len(args) > _SPEC_MAX_ARGS[name]:
+        raise ValueError(
+            f"bad consensus policy spec {spec!r}: {name} takes at most "
+            f"{_SPEC_MAX_ARGS[name]} ':'-argument(s), got {len(args)}"
+        )
+    try:
+        if name == "exact":
+            return ExactMean()
+        if name == "gossip":
+            b = int(args[0]) if args else rounds
+            deg = int(args[1]) if len(args) > 1 else degree
+            return RingGossip(rounds=b, degree=deg)
+        if name == "quantized":
+            return QuantizedGossip(bits=int(args[0]) if args else 8)
+        if name == "lossy":
+            p = float(args[0]) if args else 0.1
+            b = int(args[1]) if len(args) > 1 else rounds
+            deg = int(args[2]) if len(args) > 2 else degree
+            return LossyGossip(drop_prob=p, rounds=b, degree=deg)
+        return StaleMixing(delay=int(args[0]) if args else 1)
+    except ValueError as e:
+        # int()/float() parse failures and constructor validation errors,
+        # re-raised with the offending spec attached.
+        raise ValueError(f"bad consensus policy spec {spec!r}: {e}") from e

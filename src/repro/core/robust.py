@@ -1,174 +1,47 @@
-"""Beyond-paper extensions along the paper's own future-work axis
-(§IV: "Extending this result to asynchronous and lossy peer-to-peer
-networks ... is a potential future direction", refs [15] ARock, [16]
-relaxed ADMM):
+"""Deprecated shim: non-ideal-network consensus is now policy objects.
 
-- ``lossy_gossip_average``: gossip where each directed link drops with
-  probability p per round.  Weights are renormalized per node over the
-  links that survived, preserving row-stochasticity (mass conservation /
-  double stochasticity is violated per-round, which is exactly why naive
-  lossy gossip biases the mean — quantified in tests/benchmarks).
-- ``async_admm_ridge_consensus``: ARock-style partially-asynchronous
-  consensus ADMM — per iteration only a random subset of workers refreshes
-  its primal/dual state; everyone still averages the latest iterates.
-  Converges to the same fixed point (slower), demonstrating the paper's
-  claim that the ADMM route tolerates asynchrony better than lockstep
-  gradient descent.
-- ``quantized_consensus_fn``: stochastic-rounding k-bit quantization of
-  every exchanged message (the first "class of algorithms" in the paper's
-  literature review) — lets the communication-load accounting of eq. 15
-  scale by k/32 while keeping the consensus unbiased.
+The paper's §IV future-work axis ("Extending this result to
+asynchronous and lossy peer-to-peer networks ... is a potential future
+direction") used to live here as *batched* simulations — dense-H
+``lossy_gossip_average``, ``make_quantized_consensus_fn``, an
+ARock-style ``async_admm_ridge_consensus`` — that only ran in the
+single-array worker layout and could never execute under ``MeshBackend``
+or the compile-once layer engine.
+
+Those code paths are gone.  Each non-ideal network is now a
+:mod:`repro.core.policy` ``ConsensusPolicy`` that runs *inside* the SPMD
+worker program under BOTH backends (vmap simulation and shard_map mesh),
+with its randomness/staleness state threaded through the ADMM scan
+carry:
+
+- quantized k-bit links   -> ``QuantizedGossip(bits, stochastic=True)``
+- lossy links             -> ``LossyGossip(drop_prob, rounds, degree)``
+- asynchronous/stale peers -> ``StaleMixing(delay)``
+
+and the stochastic quantizer reference implementation moved to
+``repro.core.consensus.quantize_stochastic``.  Usage::
+
+    from repro.core.policy import QuantizedGossip
+    admm.admm_ridge_consensus(yw, tw, ..., policy=QuantizedGossip(bits=8))
+
+This module re-exports the replacements so old imports keep resolving.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from repro.core.consensus import (  # noqa: F401  (re-exports)
+    quantize_nearest,
+    quantize_stochastic,
+)
+from repro.core.policy import (  # noqa: F401  (re-exports)
+    LossyGossip,
+    QuantizedGossip,
+    StaleMixing,
+)
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import admm as admm_lib
-
-Array = jax.Array
-
-
-# ------------------------------------------------------------ lossy gossip
-
-def lossy_gossip_average(
-    x_workers: Array,
-    h: Array,
-    num_rounds: int,
-    *,
-    drop_prob: float,
-    key: jax.Array,
-) -> Array:
-    """B gossip rounds over a lossy network: each off-diagonal link (i, j)
-    fails independently with probability ``drop_prob`` per round; node i
-    renormalizes its mixing row over surviving links (self-link never
-    drops)."""
-    h = jnp.asarray(h, x_workers.dtype)
-    m = x_workers.shape[0]
-    flat = x_workers.reshape(m, -1)
-    eye = jnp.eye(m, dtype=bool)
-
-    def body(carry, k):
-        vals = carry
-        alive = jax.random.bernoulli(k, 1.0 - drop_prob, (m, m)) | eye
-        h_eff = jnp.where(alive, h, 0.0)
-        h_eff = h_eff / jnp.maximum(h_eff.sum(axis=1, keepdims=True), 1e-12)
-        return h_eff @ vals, None
-
-    keys = jax.random.split(key, num_rounds)
-    out, _ = jax.lax.scan(body, flat, keys)
-    return out.reshape(x_workers.shape)
-
-
-def make_lossy_consensus_fn(
-    h: Array, num_rounds: int, drop_prob: float, key: jax.Array
-) -> Callable[[Array], Array]:
-    def fn(x_workers: Array) -> Array:
-        # Pure (scan-safe) per-call key: fold the message contents into the
-        # base key so every ADMM iteration sees a fresh drop pattern without
-        # any Python-side state.
-        digest = jnp.sum(x_workers.astype(jnp.float32)) * 1e3
-        sub = jax.random.fold_in(key, digest.astype(jnp.int32) & 0x7FFFFFFF)
-        return lossy_gossip_average(
-            x_workers, h, num_rounds, drop_prob=drop_prob, key=sub
-        )
-
-    return fn
-
-
-# ------------------------------------------------------ quantized consensus
-
-def quantize_stochastic(x: Array, bits: int, key: jax.Array) -> Array:
-    """Unbiased per-tensor stochastic-rounding quantization to 2^bits
-    levels over the tensor's dynamic range."""
-    levels = 2 ** bits - 1
-    lo = jnp.min(x)
-    hi = jnp.max(x)
-    scale = jnp.maximum(hi - lo, 1e-12) / levels
-    t = (x - lo) / scale
-    floor = jnp.floor(t)
-    prob = t - floor
-    up = jax.random.bernoulli(key, prob, x.shape)
-    q = floor + up.astype(x.dtype)
-    return lo + q * scale
-
-
-def make_quantized_consensus_fn(
-    base_fn: Callable[[Array], Array], bits: int, key: jax.Array
-) -> Callable[[Array], Array]:
-    """Quantize every worker's message before the consensus primitive —
-    models k-bit links; eq. 15's scalar count scales by bits/32."""
-
-    def fn(x_workers: Array) -> Array:
-        digest = jnp.sum(x_workers.astype(jnp.float32)) * 1e3
-        sub = jax.random.fold_in(key, digest.astype(jnp.int32) & 0x7FFFFFFF)
-        keys = jax.random.split(sub, x_workers.shape[0])
-        q = jax.vmap(lambda xw, k: quantize_stochastic(xw, bits, k))(
-            x_workers, keys
-        )
-        return base_fn(q)
-
-    return fn
-
-
-# -------------------------------------------------------------- async ADMM
-
-class AsyncADMMResult(NamedTuple):
-    o_star: Array
-    objective: Array      # (K,)
-    update_fraction: float
-
-
-def async_admm_ridge_consensus(
-    y_workers: Array,
-    t_workers: Array,
-    *,
-    mu: float,
-    eps_radius: float,
-    num_iters: int,
-    active_prob: float,
-    key: jax.Array,
-) -> AsyncADMMResult:
-    """Partially-asynchronous consensus ADMM (ARock-style): per iteration
-    each worker refreshes (O_m, Lam_m) only with probability
-    ``active_prob``; stale iterates still participate in the consensus
-    mean.  active_prob=1 recovers the synchronous algorithm."""
-    m, n = y_workers.shape[0], y_workers.shape[1]
-    q = t_workers.shape[1]
-    dtype = y_workers.dtype
-
-    a, chol = admm_lib._worker_stats(y_workers, t_workers, mu)
-
-    def o_update(z, lam):
-        rhs = a + (z[None] - lam) / mu
-        return jax.vmap(
-            lambda l_f, r: jax.scipy.linalg.cho_solve((l_f, True), r.T).T
-        )(chol, rhs)
-
-    def step(carry, k):
-        o, z, lam = carry
-        active = jax.random.bernoulli(k, active_prob, (m,))
-        o_new_full = o_update(z, lam)
-        o_new = jnp.where(active[:, None, None], o_new_full, o)
-        avg = jnp.mean(o_new + lam, axis=0)
-        z_new = admm_lib.project_frobenius(avg, eps_radius)
-        lam_new = jnp.where(
-            active[:, None, None], lam + o_new - z_new[None], lam
-        )
-        obj = jnp.sum(
-            jax.vmap(lambda t_m, y_m: jnp.sum((t_m - z_new @ y_m) ** 2))(
-                t_workers, y_workers
-            )
-        )
-        return (o_new, z_new, lam_new), obj
-
-    init = (
-        jnp.zeros((m, q, n), dtype),
-        jnp.zeros((q, n), dtype),
-        jnp.zeros((m, q, n), dtype),
-    )
-    keys = jax.random.split(key, num_iters)
-    (o, z, lam), objs = jax.lax.scan(step, init, keys)
-    return AsyncADMMResult(o_star=z, objective=objs, update_fraction=active_prob)
+__all__ = [
+    "LossyGossip",
+    "QuantizedGossip",
+    "StaleMixing",
+    "quantize_nearest",
+    "quantize_stochastic",
+]

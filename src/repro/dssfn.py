@@ -1,0 +1,139 @@
+"""repro.dssfn — the one-call facade for decentralized SSFN training.
+
+Launchers, benchmarks and examples used to hand-wire the same stack:
+build a mesh, build a backend, pick a consensus mode, publish sharding
+rules, call ``layerwise.train_decentralized_ssfn``.  This module folds
+that into a declarative :class:`TrainSpec` plus :func:`train`::
+
+    from repro import dssfn
+    from repro.core.policy import RingGossip
+
+    spec = dssfn.TrainSpec(
+        cfg=ssfn.SSFNConfig(input_dim=16, num_classes=6, num_layers=3,
+                            hidden=64),
+        backend="mesh",            # or "simulated", or a ConsensusBackend
+        workers=8,
+        policy=RingGossip(rounds=4, degree=2),   # or "gossip:4:2"
+    )
+    result = dssfn.train(spec, x_workers, t_workers, key)
+    acc = dssfn.evaluate(result, x_test, y_test)
+
+``policy`` accepts either a :mod:`repro.core.policy` object or a CLI
+spec string (``"exact" | "gossip:B[:d]" | "quantized:bits" |
+"lossy:p[:B[:d]]" | "stale:delay"``), so the same strings work from
+``train_dssfn --consensus ...`` and from Python.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+from repro.core import layerwise as layerwise_lib
+from repro.core import ssfn as ssfn_lib
+from repro.core.backend import ConsensusBackend, make_backend
+from repro.core.policy import ConsensusPolicy, ExactMean, parse_policy
+
+_BACKEND_KINDS = ("simulated", "mesh")
+
+
+@dataclass
+class TrainSpec:
+    """Everything that defines a dSSFN training run except the data."""
+
+    cfg: ssfn_lib.SSFNConfig
+    backend: str | ConsensusBackend = "simulated"
+    workers: int | None = None
+    #: ConsensusPolicy object or spec string.  None defers to the
+    #: backend: an existing ``ConsensusBackend`` instance keeps its own
+    #: configured policy; a backend built from a kind string gets
+    #: ``ExactMean``.  An explicit policy always wins.
+    policy: str | ConsensusPolicy | None = None
+    #: Optional mesh for ``backend="mesh"``; None = 1-D ``workers`` mesh
+    #: over the visible devices.
+    mesh: object | None = None
+    #: Self-size-estimation stop tolerance (paper §I); None = fixed depth.
+    size_estimation_tol: float | None = None
+
+    def resolve_policy(self) -> ConsensusPolicy:
+        if isinstance(self.policy, ConsensusPolicy):
+            return self.policy
+        if self.policy is None:
+            if isinstance(self.backend, ConsensusBackend):
+                return self.backend.policy
+            return ExactMean()
+        return parse_policy(self.policy)
+
+    def resolve_backend(self) -> ConsensusBackend:
+        if isinstance(self.backend, ConsensusBackend):
+            return self.backend
+        if self.backend not in _BACKEND_KINDS:
+            raise ValueError(
+                f"unknown backend kind {self.backend!r}; expected one of "
+                f"{_BACKEND_KINDS} or a ConsensusBackend instance"
+            )
+        mesh = self.mesh
+        if self.backend == "mesh" and mesh is None:
+            from repro.launch.mesh import make_worker_mesh
+
+            mesh = make_worker_mesh(self.workers)
+        return make_backend(
+            self.backend,
+            num_workers=self.workers,
+            mesh=mesh,
+            policy=self.resolve_policy(),
+        )
+
+
+class TrainResult(NamedTuple):
+    params: ssfn_lib.SSFNParams
+    log: layerwise_lib.LayerwiseLog
+    backend: ConsensusBackend
+    policy: ConsensusPolicy
+    spec: TrainSpec
+
+
+def train(spec: TrainSpec, x_workers, t_workers, key) -> TrainResult:
+    """Run layer-wise consensus-ADMM training as described by ``spec``.
+
+    x_workers: (M, P, J_m) column-stacked inputs per worker.
+    t_workers: (M, Q, J_m) one-hot targets per worker.
+    key: PRNG key seeding the shared random matrices {R_l}.
+    """
+    backend = spec.resolve_backend()
+    policy = spec.resolve_policy()
+    if spec.workers is not None and backend.num_workers != spec.workers:
+        raise ValueError(
+            f"spec.workers={spec.workers} but backend has "
+            f"{backend.num_workers} workers"
+        )
+    from repro.sharding.rules import AxisRules, use_rules
+
+    # Publish the worker mesh through the sharding-rules context so any
+    # model code invoked under the trainer resolves the 'workers' logical
+    # axis against the live mesh (no-op for SimulatedBackend).
+    rules = AxisRules(
+        mesh=getattr(backend, "mesh", None),
+        data_axes=(),
+        model_axis=None,
+        worker_axis=backend.axis_name,
+    )
+    with use_rules(rules):
+        params, log = layerwise_lib.train_decentralized_ssfn(
+            x_workers,
+            t_workers,
+            spec.cfg,
+            key,
+            backend=backend,
+            policy=policy,
+            size_estimation_tol=spec.size_estimation_tol,
+        )
+    return TrainResult(
+        params=params, log=log, backend=backend, policy=policy, spec=spec
+    )
+
+
+def evaluate(result: TrainResult, x_test, labels) -> float:
+    """Test accuracy of a trained run."""
+    return layerwise_lib.accuracy(
+        result.params, x_test, labels, result.spec.cfg.num_classes
+    )

@@ -10,10 +10,22 @@ Runs layer-wise consensus-ADMM training through a ``ConsensusBackend``:
                            mesh-native form of the paper's centralized-
                            equivalence experiment
 
+Consensus is a pluggable policy (``repro.core.policy``), selected by
+spec string::
+
+    --consensus exact           one all-reduce (the default)
+    --consensus gossip:10:2     10 rounds of degree-2 ring gossip
+    --consensus quantized:4     4-bit stochastically-quantized links
+    --consensus lossy:0.1       ring gossip with 10% link drops
+    --consensus stale:2         peers see 2-rounds-stale values
+
+(``--consensus gossip`` with no args keeps honouring the legacy
+``--degree``/``--rounds`` flags.)
+
 On CPU the mesh is faked with XLA host devices: the launcher sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=M`` BEFORE jax
 initializes (which is why every jax import in this module is deferred).
-On TPU the worker slots are real chips and ``--consensus gossip`` maps
+On TPU the worker slots are real chips and gossip-family policies map
 each degree-k hop onto an ICI collective_permute.
 
 Usage::
@@ -21,6 +33,8 @@ Usage::
     python -m repro.launch.train_dssfn --workers 8 --backend both
     python -m repro.launch.train_dssfn --workers 8 --consensus gossip \
         --degree 2 --rounds 10
+    python -m repro.launch.train_dssfn --workers 8 --backend mesh \
+        --consensus quantized:8
 """
 from __future__ import annotations
 
@@ -36,7 +50,12 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument(
         "--backend", default="both", choices=["simulated", "mesh", "both"]
     )
-    ap.add_argument("--consensus", default="exact", choices=["exact", "gossip"])
+    ap.add_argument(
+        "--consensus",
+        default="exact",
+        help="consensus policy spec: exact | gossip[:B[:d]] | "
+        "quantized:bits | lossy:p[:B[:d]] | stale:delay",
+    )
     ap.add_argument("--degree", type=int, default=2, help="gossip ring degree d")
     ap.add_argument("--rounds", type=int, default=10, help="gossip rounds B")
     ap.add_argument("--layers", type=int, default=3)
@@ -83,48 +102,35 @@ def ensure_devices(num_workers: int, *, allow_fake: bool = True) -> None:
         )
 
 
-def build_backend(kind: str, args):
-    from repro.core.backend import make_backend
-    from repro.launch.mesh import make_worker_mesh
+def build_policy(args):
+    """--consensus spec -> ConsensusPolicy.  The legacy --degree/--rounds
+    flags fill any segment the spec leaves out (so ``gossip`` and
+    ``lossy:0.1`` both honour them)."""
+    from repro.core.policy import parse_policy
 
-    mesh = make_worker_mesh(args.workers) if kind == "mesh" else None
-    return make_backend(
-        kind,
-        num_workers=args.workers,
-        mesh=mesh,
-        mode=args.consensus,
-        degree=args.degree,
-        num_rounds=args.rounds,
-    )
+    return parse_policy(args.consensus, degree=args.degree, rounds=args.rounds)
 
 
 def train_one(kind: str, args, data, xw, tw, cfg, key) -> dict:
     import jax
 
+    from repro import dssfn
     from repro.core import layerwise
-    from repro.sharding.rules import AxisRules, use_rules
 
-    backend = build_backend(kind, args)
-    # Publish the worker mesh through the sharding-rules context so any
-    # model code invoked under the launcher resolves the 'workers'
-    # logical axis against the live mesh (no-op for SimulatedBackend).
-    rules = AxisRules(
-        mesh=getattr(backend, "mesh", None),
-        data_axes=(),
-        model_axis=None,
-        worker_axis=backend.axis_name,
+    spec = dssfn.TrainSpec(
+        cfg=cfg, backend=kind, workers=args.workers, policy=build_policy(args)
     )
     t0 = time.perf_counter()
-    with use_rules(rules):
-        params, log = layerwise.train_decentralized_ssfn(
-            xw, tw, cfg, key, backend=backend
-        )
+    result = dssfn.train(spec, xw, tw, key)
+    params, log, backend = result.params, result.log, result.backend
     jax.block_until_ready(params.o[-1])
     wall = time.perf_counter() - t0
     acc = layerwise.accuracy(params, data.x_test, data.y_test, cfg.num_classes)
     return {
         "backend": backend.describe(),
         "kind": kind,
+        "policy": result.policy.describe(),
+        "wire_bits": result.policy.wire_bits,
         "wall_time_s": wall,
         "test_accuracy": acc,
         "final_objective": log.layer_costs[-1],

@@ -15,6 +15,7 @@ from repro.core.backend import (
     SimulatedBackend,
     make_backend,
 )
+from repro.core.policy import RingGossip
 
 
 def _problem(key, n, q, j, m):
@@ -59,7 +60,7 @@ def test_ring_gossip_consensus_matches_dense_h():
     x = jax.random.normal(jax.random.PRNGKey(2), (m, 4, 6))
     h = topology.circular_mixing_matrix(m, degree)
     want = consensus.gossip_average(x, h, rounds)
-    backend = SimulatedBackend(m, mode="gossip", degree=degree, num_rounds=rounds)
+    backend = SimulatedBackend(m, policy=RingGossip(rounds=rounds, degree=degree))
     got = backend.run(backend.consensus_mean, x)
     assert float(jnp.max(jnp.abs(got - want))) < 1e-5
 
@@ -69,7 +70,7 @@ def test_gossip_backend_converges_to_oracle():
     eps = 6.0
     h = topology.circular_mixing_matrix(8, 2)
     rounds = topology.gossip_rounds_for_tolerance(h, 1e-9)
-    backend = SimulatedBackend(8, mode="gossip", degree=2, num_rounds=rounds)
+    backend = SimulatedBackend(8, policy=RingGossip(rounds=rounds, degree=2))
     res = admm.admm_ridge_consensus(
         yw, tw, mu=1e-2, eps_radius=eps, num_iters=200, backend=backend
     )
@@ -137,7 +138,7 @@ def test_layerwise_gossip_backend_comm_accounting():
     xw = jax.random.normal(kx, (m, 8, 16))
     labels = jax.random.randint(kt, (m, 16), 0, 3)
     tw = jax.nn.one_hot(labels, 3).transpose(0, 2, 1)
-    backend = SimulatedBackend(m, mode="gossip", degree=1, num_rounds=3)
+    backend = SimulatedBackend(m, policy=RingGossip(rounds=3, degree=1))
     _, log = layerwise.train_decentralized_ssfn(xw, tw, cfg, kinit, backend=backend)
     # eq. 15 with B = 2*degree*rounds exchanges per consensus.
     assert backend.exchanges_per_consensus() == 6

@@ -1,0 +1,116 @@
+"""repro.dssfn facade: TrainSpec -> train -> evaluate without hand-wiring
+backends, plus policy/backend resolution and its error paths."""
+import jax
+import pytest
+
+from repro import dssfn
+from repro.core import layerwise, ssfn
+from repro.core.backend import SimulatedBackend
+from repro.core.policy import ExactMean, QuantizedGossip, RingGossip
+
+
+def _data(key, m=4, p=8, q=3, jm=16):
+    kx, kt = jax.random.split(key)
+    xw = jax.random.normal(kx, (m, p, jm))
+    labels = jax.random.randint(kt, (m, jm), 0, q)
+    tw = jax.nn.one_hot(labels, q).transpose(0, 2, 1)
+    return xw, tw
+
+
+def _cfg(**kw):
+    defaults = dict(
+        input_dim=8, num_classes=3, num_layers=1, hidden=20, admm_iters=30
+    )
+    defaults.update(kw)
+    return ssfn.SSFNConfig(**defaults)
+
+
+def test_train_matches_raw_layerwise_call():
+    xw, tw = _data(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    cfg = _cfg()
+    spec = dssfn.TrainSpec(cfg=cfg, backend="simulated", workers=4)
+    result = dssfn.train(spec, xw, tw, key)
+    p_raw, log_raw = layerwise.train_decentralized_ssfn(
+        xw, tw, cfg, key, backend=SimulatedBackend(4)
+    )
+    for a, b in zip(result.params.o, p_raw.o):
+        assert jax.numpy.allclose(a, b, atol=1e-6)
+    assert result.log.comm_scalars == log_raw.comm_scalars
+    assert result.policy == ExactMean()
+
+
+def test_policy_spec_strings_resolve():
+    spec = dssfn.TrainSpec(cfg=_cfg(), workers=8, policy="gossip:4:2")
+    assert spec.resolve_policy() == RingGossip(rounds=4, degree=2)
+    assert spec.resolve_backend().policy == RingGossip(rounds=4, degree=2)
+    spec_q = dssfn.TrainSpec(cfg=_cfg(), workers=4, policy="quantized:8")
+    assert spec_q.resolve_policy() == QuantizedGossip(bits=8)
+
+
+def test_policy_object_passthrough_and_training():
+    xw, tw = _data(jax.random.PRNGKey(2))
+    spec = dssfn.TrainSpec(
+        cfg=_cfg(), backend="simulated", workers=4,
+        policy=QuantizedGossip(bits=12),
+    )
+    result = dssfn.train(spec, xw, tw, jax.random.PRNGKey(3))
+    assert result.policy.wire_bits == 12
+    assert len(result.params.o) == 2
+    # evaluate() round-trips the trained params on held-out columns.
+    x_test = jax.random.normal(jax.random.PRNGKey(4), (8, 32))
+    labels = jax.random.randint(jax.random.PRNGKey(5), (32,), 0, 3)
+    acc = dssfn.evaluate(result, x_test, labels)
+    assert 0.0 <= acc <= 1.0
+
+
+def test_existing_backend_instance_is_reused():
+    backend = SimulatedBackend(4)
+    spec = dssfn.TrainSpec(cfg=_cfg(), backend=backend)
+    assert spec.resolve_backend() is backend
+    xw, tw = _data(jax.random.PRNGKey(6))
+    result = dssfn.train(spec, xw, tw, jax.random.PRNGKey(7))
+    assert result.backend is backend
+    assert backend.lowerings > 0
+
+
+def test_backend_policy_is_honored_when_spec_policy_unset():
+    """A configured backend's policy must survive the facade: the spec's
+    policy default is 'defer to the backend', not ExactMean."""
+    gossip = RingGossip(rounds=3, degree=1)
+    backend = SimulatedBackend(4, policy=gossip)
+    spec = dssfn.TrainSpec(cfg=_cfg(), backend=backend)
+    assert spec.resolve_policy() == gossip
+    xw, tw = _data(jax.random.PRNGKey(12))
+    result = dssfn.train(spec, xw, tw, jax.random.PRNGKey(13))
+    assert result.policy == gossip
+    # eq.-15 accounting reflects the gossip exchange count, not exact's 1.
+    assert result.log.comm_scalars == 3 * (8 + 20) * gossip.exchanges_per_round * 30
+    # ...and an explicit spec policy still wins over the backend's.
+    spec_override = dssfn.TrainSpec(
+        cfg=_cfg(), backend=backend, policy=ExactMean()
+    )
+    assert spec_override.resolve_policy() == ExactMean()
+
+
+def test_spec_error_paths():
+    with pytest.raises(ValueError, match="unknown backend kind"):
+        dssfn.TrainSpec(cfg=_cfg(), backend="tpu-pod").resolve_backend()
+    with pytest.raises(ValueError, match="unknown consensus policy"):
+        dssfn.TrainSpec(cfg=_cfg(), workers=4, policy="bogus").resolve_backend()
+    xw, tw = _data(jax.random.PRNGKey(8))
+    spec = dssfn.TrainSpec(
+        cfg=_cfg(), backend=SimulatedBackend(4), workers=8
+    )
+    with pytest.raises(ValueError, match="workers"):
+        dssfn.train(spec, xw, tw, jax.random.PRNGKey(9))
+
+
+def test_size_estimation_through_facade():
+    xw, tw = _data(jax.random.PRNGKey(10))
+    spec = dssfn.TrainSpec(
+        cfg=_cfg(num_layers=4), backend="simulated", workers=4,
+        size_estimation_tol=0.5,
+    )
+    result = dssfn.train(spec, xw, tw, jax.random.PRNGKey(11))
+    assert len(result.params.o) - 1 < 4

@@ -12,6 +12,7 @@ import pytest
 
 from repro.core import admm, engine, layerwise, ssfn
 from repro.core.backend import MeshBackend, SimulatedBackend
+from repro.core.policy import ExactMean, RingGossip
 
 
 def _problem(key, n, q, j, m):
@@ -211,11 +212,11 @@ def test_donate_index_validation():
 # Pallas kernel-path parity (128-aligned shapes; interpret mode on CPU)
 # ------------------------------------------------------------------
 
-@pytest.mark.parametrize("mode_kw", [
-    {},
-    {"mode": "gossip", "degree": 1, "num_rounds": 4},
+@pytest.mark.parametrize("policy", [
+    ExactMean(),
+    RingGossip(rounds=4, degree=1),
 ], ids=["exact", "gossip"])
-def test_use_kernels_training_parity_simulated(mode_kw):
+def test_use_kernels_training_parity_simulated(policy):
     """use_kernels=True == einsum path through the whole layer engine
     (fused propagate_gram + gram + matmul_relu vs plain jnp)."""
     m = 4
@@ -225,10 +226,10 @@ def test_use_kernels_training_parity_simulated(mode_kw):
     )
     cfg_k = dataclasses.replace(cfg, use_kernels=True)
     p_ref, _ = layerwise.train_decentralized_ssfn(
-        xw, tw, cfg, kinit, backend=SimulatedBackend(m, **mode_kw)
+        xw, tw, cfg, kinit, backend=SimulatedBackend(m, policy=policy)
     )
     p_k, _ = layerwise.train_decentralized_ssfn(
-        xw, tw, cfg_k, kinit, backend=SimulatedBackend(m, **mode_kw)
+        xw, tw, cfg_k, kinit, backend=SimulatedBackend(m, policy=policy)
     )
     for a, b in zip(p_ref.o, p_k.o):
         rel = float(jnp.linalg.norm(a - b) / jnp.maximum(jnp.linalg.norm(a), 1e-30))

@@ -110,6 +110,7 @@ def test_mesh_backend_matches_simulated_and_oracle():
     out = run_subprocess("""
     from repro.core import admm, layerwise, ssfn
     from repro.core.backend import MeshBackend, SimulatedBackend
+    from repro.core.policy import QuantizedGossip, RingGossip, StaleMixing
     from repro.launch.mesh import make_worker_mesh
 
     m, n, q, j = 8, 16, 3, 256
@@ -132,12 +133,33 @@ def test_mesh_backend_matches_simulated_and_oracle():
     rel_oracle = float(jnp.linalg.norm(msh.o_star - oracle) / jnp.linalg.norm(oracle))
     assert rel_oracle < 1e-3, rel_oracle
 
-    gkw = dict(mode="gossip", degree=2, num_rounds=6)
-    simg = admm.admm_ridge_consensus(yw, tw, backend=SimulatedBackend(m, **gkw), **kw)
-    mshg = admm.admm_ridge_consensus(yw, tw, backend=MeshBackend(mesh, **gkw), **kw)
+    gpol = RingGossip(rounds=6, degree=2)
+    simg = admm.admm_ridge_consensus(
+        yw, tw, backend=SimulatedBackend(m, policy=gpol), **kw)
+    mshg = admm.admm_ridge_consensus(
+        yw, tw, backend=MeshBackend(mesh, policy=gpol), **kw)
     rel_g = float(jnp.linalg.norm(simg.o_star - mshg.o_star)
                   / jnp.linalg.norm(simg.o_star))
     assert rel_g < 1e-4, rel_g
+
+    # The stranded-in-robust.py policies now run on the REAL mesh: the
+    # same stateful policy program (quantizer keys / staleness buffers in
+    # the scan carry) under vmap and shard_map.  StaleMixing is
+    # deterministic -> tight sim-vs-mesh parity; QuantizedGossip's
+    # stochastic rounding sits on bit-level thresholds, so runtime
+    # reduction-order ulps flip individual draws — assert statistical
+    # closeness and oracle proximity instead.
+    for pol, pair_tol in ((QuantizedGossip(bits=8), 2e-2), (StaleMixing(2), 1e-4)):
+        simp = admm.admm_ridge_consensus(
+            yw, tw, backend=SimulatedBackend(m), policy=pol, **kw)
+        mshp = admm.admm_ridge_consensus(
+            yw, tw, backend=MeshBackend(mesh), policy=pol, **kw)
+        rel_p = float(jnp.linalg.norm(simp.o_star - mshp.o_star)
+                      / jnp.linalg.norm(simp.o_star))
+        assert rel_p < pair_tol, (pol, rel_p)
+        rel_o = float(jnp.linalg.norm(mshp.o_star - oracle)
+                      / jnp.linalg.norm(oracle))
+        assert rel_o < 5e-2, (pol, rel_o)
 
     # Full layer-wise training: shards stay device-local end to end.
     cfg = ssfn.SSFNConfig(input_dim=10, num_classes=3, num_layers=2,
@@ -166,6 +188,7 @@ def test_layer_engine_on_8_devices():
     import dataclasses
     from repro.core import layerwise, ssfn
     from repro.core.backend import MeshBackend, SimulatedBackend
+    from repro.core.policy import ExactMean, RingGossip
     from repro.launch.mesh import make_worker_mesh
 
     m = 8
@@ -178,20 +201,20 @@ def test_layer_engine_on_8_devices():
     labels = jax.random.randint(kt, (m, 128), 0, 3)
     tw = jax.nn.one_hot(labels, 3).transpose(0, 2, 1)
 
-    for mode_kw in ({}, dict(mode="gossip", degree=2, num_rounds=6)):
-        mesh_be = MeshBackend(wmesh, **mode_kw)
+    for pol in (ExactMean(), RingGossip(rounds=6, degree=2)):
+        mesh_be = MeshBackend(wmesh, policy=pol)
         pk, _ = layerwise.train_decentralized_ssfn(
             xw, tw, cfg_k, kinit, backend=mesh_be)
         pr, _ = layerwise.train_decentralized_ssfn(
-            xw, tw, cfg, kinit, backend=MeshBackend(wmesh, **mode_kw))
+            xw, tw, cfg, kinit, backend=MeshBackend(wmesh, policy=pol))
         ps, _ = layerwise.train_decentralized_ssfn(
-            xw, tw, cfg_k, kinit, backend=SimulatedBackend(m, **mode_kw))
+            xw, tw, cfg_k, kinit, backend=SimulatedBackend(m, policy=pol))
         for a, b in zip(pk.o, pr.o):   # kernels == einsum on the mesh
             rel = float(jnp.linalg.norm(a - b) / jnp.linalg.norm(a))
-            assert rel < 1e-6, (mode_kw, rel)
+            assert rel < 1e-6, (pol, rel)
         for a, b in zip(pk.o, ps.o):   # sim == mesh through the engine
             rel = float(jnp.linalg.norm(a - b) / jnp.linalg.norm(a))
-            assert rel < 1e-4, (mode_kw, rel)
+            assert rel < 1e-4, (pol, rel)
         # 3 layer solves, 3 distinct programs even though l=1 and l=2
         # share W shape (128,128) here: l=0 has no W, l=1 must not donate
         # the caller-reachable Y, l=2 donates the engine-owned carry.

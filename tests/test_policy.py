@@ -1,0 +1,297 @@
+"""ConsensusPolicy API: strategy objects, parsing, deprecated aliases,
+per-(program, policy) executable caching, and the quantization
+properties (property-based via the repro.testing hypothesis shim)."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import admm, consensus, topology
+from repro.core.backend import MeshBackend, SimulatedBackend, make_backend
+from repro.core.policy import (
+    ConsensusPolicy,
+    ExactMean,
+    LossyGossip,
+    QuantizedGossip,
+    RingGossip,
+    StaleMixing,
+    parse_policy,
+    policy_from_mode,
+)
+from repro.testing import given, settings, st
+
+
+def _problem(key, n=16, q=3, j=160, m=4):
+    ky, kt = jax.random.split(key)
+    y = jax.random.normal(ky, (n, j))
+    t = jax.random.normal(kt, (q, j))
+    yw = y.reshape(n, m, j // m).transpose(1, 0, 2)
+    tw = t.reshape(q, m, j // m).transpose(1, 0, 2)
+    return y, t, yw, tw
+
+
+# ------------------------------------------------------------------
+# Declared communication footprint (eq. 15)
+# ------------------------------------------------------------------
+
+def test_policy_declared_footprints():
+    assert ExactMean().exchanges_per_round == 1
+    assert ExactMean().wire_bits == 32
+    assert RingGossip(rounds=3, degree=2).exchanges_per_round == 12
+    assert QuantizedGossip(bits=4).exchanges_per_round == 1
+    assert QuantizedGossip(bits=4).wire_bits == 4
+    assert LossyGossip(drop_prob=0.1, rounds=2, degree=2).exchanges_per_round == 8
+    assert StaleMixing(2).exchanges_per_round == 1
+    assert ExactMean().is_exact and StaleMixing(0).is_exact
+    assert not StaleMixing(1).is_exact and not RingGossip().is_exact
+
+
+def test_policies_are_hashable_value_objects():
+    assert ExactMean() == ExactMean()
+    assert hash(RingGossip(2, 1)) == hash(RingGossip(2, 1))
+    assert QuantizedGossip(bits=8) != QuantizedGossip(bits=4)
+    assert isinstance(ExactMean(), ConsensusPolicy)
+
+
+# ------------------------------------------------------------------
+# Parsing + validation
+# ------------------------------------------------------------------
+
+def test_parse_policy_specs():
+    assert parse_policy("exact") == ExactMean()
+    assert parse_policy("gossip:3") == RingGossip(rounds=3, degree=1)
+    assert parse_policy("gossip:3:2") == RingGossip(rounds=3, degree=2)
+    assert parse_policy("gossip", degree=2) == RingGossip(rounds=1, degree=2)
+    assert parse_policy("quantized:4") == QuantizedGossip(bits=4)
+    assert parse_policy("lossy:0.1") == LossyGossip(drop_prob=0.1)
+    assert parse_policy("lossy:0.2:3:2") == LossyGossip(
+        drop_prob=0.2, rounds=3, degree=2
+    )
+    assert parse_policy("stale:2") == StaleMixing(delay=2)
+
+
+def test_parse_policy_error_paths():
+    with pytest.raises(ValueError, match="unknown consensus policy"):
+        parse_policy("telepathy")
+    with pytest.raises(ValueError, match="bad consensus policy spec"):
+        parse_policy("gossip:many")
+    with pytest.raises(ValueError, match="bad consensus policy spec"):
+        parse_policy("lossy:1.5")
+    # Trailing segments are an error, never silently dropped.
+    with pytest.raises(ValueError, match="at most"):
+        parse_policy("quantized:8:4")
+    with pytest.raises(ValueError, match="at most"):
+        parse_policy("exact:whatever")
+    with pytest.raises(ValueError, match="at most"):
+        parse_policy("stale:2:1")
+
+
+def test_parse_policy_flag_fallbacks():
+    """The launcher's --degree/--rounds flags fill unspecified segments
+    for every gossip-family spec, not just bare 'gossip'."""
+    assert parse_policy("gossip", rounds=10, degree=2) == RingGossip(
+        rounds=10, degree=2
+    )
+    assert parse_policy("lossy:0.1", rounds=10, degree=2) == LossyGossip(
+        drop_prob=0.1, rounds=10, degree=2
+    )
+    # Explicit spec segments beat the flag fallbacks.
+    assert parse_policy("gossip:3", rounds=10) == RingGossip(rounds=3, degree=1)
+
+
+def test_policy_from_mode_maps_legacy_strings():
+    assert policy_from_mode("exact") == ExactMean()
+    assert policy_from_mode("gossip", degree=2, num_rounds=4) == RingGossip(
+        rounds=4, degree=2
+    )
+    with pytest.raises(ValueError, match="unknown consensus mode"):
+        policy_from_mode("psum")
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="degree"):
+        RingGossip(rounds=1, degree=0)
+    with pytest.raises(ValueError, match="rounds"):
+        RingGossip(rounds=0)
+    with pytest.raises(ValueError, match="bits"):
+        QuantizedGossip(bits=0)
+    with pytest.raises(ValueError, match="drop_prob"):
+        LossyGossip(drop_prob=1.0)
+    with pytest.raises(ValueError, match="delay"):
+        StaleMixing(-1)
+    with pytest.raises(ValueError, match="neighbours"):
+        SimulatedBackend(4, policy=RingGossip(rounds=1, degree=2))
+    with pytest.raises(ValueError, match="neighbours"):
+        SimulatedBackend(4, policy=LossyGossip(drop_prob=0.1, degree=2))
+
+
+# ------------------------------------------------------------------
+# Deprecated string-mode aliases
+# ------------------------------------------------------------------
+
+def test_mode_string_is_deprecated_alias():
+    with pytest.warns(DeprecationWarning, match="deprecated alias"):
+        b = SimulatedBackend(8, mode="gossip", degree=2, num_rounds=5)
+    assert b.policy == RingGossip(rounds=5, degree=2)
+    assert (b.mode, b.degree, b.num_rounds) == ("gossip", 2, 5)
+    with pytest.warns(DeprecationWarning, match="deprecated alias"):
+        b = make_backend("simulated", 4, mode="exact")
+    assert b.policy == ExactMean()
+
+
+def test_make_consensus_fn_is_deprecated_alias():
+    with pytest.warns(DeprecationWarning, match="make_consensus_fn is deprecated"):
+        fn = consensus.make_consensus_fn("exact")
+    x = jnp.arange(12.0).reshape(4, 3)
+    assert jnp.allclose(fn(x), jnp.broadcast_to(x.mean(0), x.shape))
+
+
+def test_policy_and_mode_mutually_exclusive():
+    with pytest.raises(ValueError, match="not both"):
+        SimulatedBackend(4, policy=ExactMean(), mode="exact")
+
+
+def test_default_backend_has_exact_policy_without_warning():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        b = SimulatedBackend(4)
+    assert b.policy == ExactMean()
+
+
+# ------------------------------------------------------------------
+# ExactMean == legacy 'exact' mode, bit for bit
+# ------------------------------------------------------------------
+
+def test_exact_mean_policy_bit_identical_to_default():
+    _, _, yw, tw = _problem(jax.random.PRNGKey(0))
+    kw = dict(mu=1e-2, eps_radius=6.0, num_iters=50)
+    a = admm.admm_ridge_consensus(yw, tw, backend=SimulatedBackend(4), **kw)
+    b = admm.admm_ridge_consensus(
+        yw, tw, backend=SimulatedBackend(4), policy=ExactMean(), **kw
+    )
+    assert jnp.array_equal(a.o_star, b.o_star)
+    assert jnp.array_equal(a.trace.objective, b.trace.objective)
+
+
+def test_ring_gossip_policy_matches_dense_h():
+    m, degree, rounds = 8, 2, 5
+    x = jax.random.normal(jax.random.PRNGKey(2), (m, 4, 6))
+    h = topology.circular_mixing_matrix(m, degree)
+    want = consensus.gossip_average(x, h, rounds)
+    backend = SimulatedBackend(m, policy=RingGossip(rounds=rounds, degree=degree))
+    got = backend.run(backend.consensus_mean, x)
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-5
+
+
+# ------------------------------------------------------------------
+# Executable cache: one lowering per (program, policy)
+# ------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["simulated", "mesh"])
+def test_one_lowering_per_policy_no_per_call_retrace(kind):
+    if kind == "mesh":
+        from repro.launch.mesh import make_worker_mesh
+
+        backend = MeshBackend(make_worker_mesh(1))
+        m = 1
+    else:
+        backend = SimulatedBackend(4)
+        m = 4
+    _, _, yw, tw = _problem(jax.random.PRNGKey(3), m=m)
+    kw = dict(mu=1e-2, eps_radius=6.0, num_iters=10, backend=backend)
+    policies = [ExactMean(), StaleMixing(2), QuantizedGossip(bits=8)]
+    for pol in policies:
+        admm.admm_ridge_consensus(yw, tw, policy=pol, **kw)
+    assert backend.lowerings == len(policies), backend.cache_info()
+    # Second sweep over the same policies: zero new lowerings.
+    for pol in policies:
+        admm.admm_ridge_consensus(yw, tw, policy=pol, **kw)
+    assert backend.lowerings == len(policies), backend.cache_info()
+    assert backend.cache_hits == len(policies)
+
+
+def test_fused_layer_step_policy_in_cache_key():
+    from repro.core import engine
+
+    m = 4
+    _, _, yw, tw = _problem(jax.random.PRNGKey(4), m=m)
+    backend = SimulatedBackend(m)
+    kw = dict(mu=1e-2, eps_radius=6.0, num_iters=10)
+    engine.fused_layer_step(backend, yw, tw, None, **kw)
+    engine.fused_layer_step(backend, yw, tw, None, policy=StaleMixing(1), **kw)
+    assert backend.lowerings == 2, backend.cache_info()
+    engine.fused_layer_step(backend, yw, tw, None, policy=StaleMixing(1), **kw)
+    assert backend.lowerings == 2, backend.cache_info()
+
+
+# ------------------------------------------------------------------
+# Quantization properties (repro.testing hypothesis shim)
+# ------------------------------------------------------------------
+
+@given(bits=st.sampled_from([4, 8, 12]), seed=st.integers(0, 3))
+@settings(max_examples=9, deadline=None)
+def test_quantize_stochastic_unbiased_and_bounded(bits, seed):
+    """E[q(x)] = x and |q(x) - x| <= one quantization step per draw."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64, 64))
+    keys = jax.random.split(jax.random.PRNGKey(seed + 100), 32)
+    qs = jnp.stack([consensus.quantize_stochastic(x, bits, k) for k in keys])
+    step = float((x.max() - x.min()) / (2 ** bits - 1))
+    assert float(jnp.max(jnp.abs(qs[0] - x))) <= step + 1e-6
+    bias = float(jnp.max(jnp.abs(qs.mean(0) - x)))
+    assert bias < 4 * step / np.sqrt(32) + 1e-3
+
+
+@given(bits=st.sampled_from([4, 6, 8]), seed=st.integers(0, 2))
+@settings(max_examples=6, deadline=None)
+def test_quantized_gossip_preserves_mean_in_expectation(bits, seed):
+    """The doubly-stochastic invariant in expectation: averaging the
+    QuantizedGossip output over many PRNG draws recovers the true worker
+    mean, because each message is unbiasedly quantized before the
+    all-reduce."""
+    m, reps = 4, 64
+    policy = QuantizedGossip(bits=bits, seed=seed)
+    backend = SimulatedBackend(m, policy=policy)
+    ctx = backend.ctx()
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, 6, 5))
+
+    def worker(x_m):
+        state = policy.init_state(x_m, ctx)
+
+        def body(s, _):
+            y, s = policy.mix(x_m, s, ctx)
+            return s, y
+
+        _, ys = jax.lax.scan(body, state, None, length=reps)
+        return ys.mean(0)
+
+    out = backend.run(worker, x, key=("quant-mean", bits, seed, reps))
+    exact = jnp.broadcast_to(x.mean(0), x.shape)
+    # Per-worker quantization step bounds the variance of each draw.
+    step = float(
+        jnp.max(jnp.max(x, axis=(1, 2)) - jnp.min(x, axis=(1, 2)))
+    ) / (2 ** bits - 1)
+    tol = 4 * step / np.sqrt(reps) + 1e-3
+    assert float(jnp.max(jnp.abs(out - exact))) < tol
+
+
+def test_stale_one_shot_returns_the_mean():
+    """consensus_mean (one_shot) under a stale policy must still be an
+    average: the window is seeded at steady state, not with the empty
+    zero buffer (which would return x/M)."""
+    m = 4
+    x = jnp.arange(float(m)).reshape(m, 1)
+    for delay in (0, 1, 2):
+        backend = SimulatedBackend(m, policy=StaleMixing(delay))
+        out = backend.run(backend.consensus_mean, x)
+        assert jnp.allclose(out, 1.5), (delay, out)
+
+
+def test_deterministic_quantizer_has_zero_variance():
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 32))
+    a = consensus.quantize_nearest(x, 6)
+    b = consensus.quantize_nearest(x, 6)
+    assert jnp.array_equal(a, b)
+    step = float((x.max() - x.min()) / (2 ** 6 - 1))
+    assert float(jnp.max(jnp.abs(a - x))) <= 0.5 * step + 1e-6
