@@ -34,7 +34,12 @@ is tracked across PRs:
 plus a ``policies`` section — one row per ConsensusPolicy (exact /
 gossip / quantized / lossy / stale) through a single shared mesh backend
 (one lowering per policy), with ``bytes_per_worker`` scaled by the
-policy's declared ``wire_bits``.
+policy's declared ``wire_bits`` — and a ``topologies`` section relating
+each first-class mixing graph (ring / torus / hypercube / full /
+geometric) to its predicted spectral gap: per topology the predicted
+``spectral_gap``/``rounds_for_tolerance``, the measured ``iter_ms`` and
+``oracle_rel`` convergence of a fixed-round ``Gossip`` solve, and the
+eq.-15 ``bytes_per_worker`` derived from ``edges_per_node``.
 
 Standalone (fakes an 8-device host mesh before jax initializes)::
 
@@ -62,10 +67,19 @@ BYTES_PER_SCALAR = 4  # float32
 DEFAULT_JSON = "BENCH_mesh.json"
 
 
-def _consensus_bytes(policy, n: int, q: int, num_iters: int) -> int:
+def _consensus_bytes(policy, n: int, q: int, num_iters: int, m: int) -> int:
     """Eq.-15 wire bytes per worker for one ADMM solve, at the policy's
-    declared link width (``ConsensusPolicy.wire_bytes``)."""
-    return policy.wire_bytes(scalars=q * n, num_consensus=num_iters)
+    declared link width (``ConsensusPolicy.wire_bytes``); M-aware since
+    topology degree can depend on the worker count."""
+    return policy.wire_bytes(scalars=q * n, num_consensus=num_iters, num_workers=m)
+
+
+def _torus_shape(m: int) -> tuple[int, int] | None:
+    """Most-square rows x cols factorization with both sides >= 2."""
+    for r in range(int(m ** 0.5), 1, -1):
+        if m % r == 0 and m // r >= 2:
+            return r, m // r
+    return None
 
 
 def run(
@@ -158,7 +172,7 @@ def run(
         rel_oracle = float(
             jnp.linalg.norm(res.o_star - oracle) / jnp.linalg.norm(oracle)
         )
-        nbytes = _consensus_bytes(backend.policy, n, q, k)
+        nbytes = _consensus_bytes(backend.policy, n, q, k, m)
         report["backends"][name] = {
             "compile_s": round(compile_s, 4),
             "iter_ms": round(iter_ms, 4),
@@ -236,7 +250,7 @@ def run(
 
         res, p_compile_s = timed(policy_solve)   # trace + compile + run
         res, dt = timed(policy_solve)            # steady state (cache hit)
-        nbytes = _consensus_bytes(pol, n, q, k)
+        nbytes = _consensus_bytes(pol, n, q, k, m)
         rel_oracle = float(
             jnp.linalg.norm(res.o_star - oracle) / jnp.linalg.norm(oracle)
         )
@@ -246,7 +260,7 @@ def run(
             "iter_ms": round(dt / k * 1e3, 4),
             "bytes_per_worker": nbytes,
             "wire_bits": pol.wire_bits,
-            "exchanges_per_round": pol.exchanges_per_round,
+            "exchanges_per_round": pol.exchanges_for(m),
             "oracle_rel": rel_oracle,
         }
         rows.append(csv_row(
@@ -260,6 +274,73 @@ def run(
     # compile-count invariant of the policy seam.
     report["policy_lowerings"] = policy_backend.lowerings
     assert policy_backend.lowerings == len(policies), policy_backend.cache_info()
+
+    # Per-topology rows: the SAME fixed-round Gossip policy over every
+    # first-class mixing graph that fits M workers, relating measured
+    # convergence (oracle_rel after K iters) and cost (iter_ms, eq.-15
+    # bytes) to the predicted spectral gap.  Denser graphs buy a larger
+    # gap (faster mixing) with more bytes per round — the topology
+    # seam's version of the paper's degree sweep.
+    from repro.core.policy import Gossip
+    from repro.core.topology import (
+        FullyConnected,
+        Hypercube,
+        RandomGeometric,
+        Ring,
+        Torus,
+    )
+
+    candidates = {}
+    if degree >= 1:
+        candidates[f"ring:{degree}"] = Ring(degree)
+    shape = _torus_shape(m)
+    if shape is not None:
+        candidates[f"torus:{shape[0]}x{shape[1]}"] = Torus(*shape)
+    candidates["hypercube"] = Hypercube()
+    candidates["full"] = FullyConnected()
+    candidates["geometric:0.5"] = RandomGeometric(radius=0.5, seed=0)
+    report["topologies"] = {}
+    topo_backend = make("mesh")
+    for tname, topo in candidates.items():
+        try:
+            topo.validate(m)
+        except ValueError as e:
+            if verbose:
+                print(f"# topology {tname} skipped on M={m}: {e}", flush=True)
+            continue
+        tpol = Gossip(rounds=GOSSIP_ROUNDS, topology=topo)
+
+        def topo_solve(tpol=tpol):
+            return admm.admm_ridge_consensus(
+                yw, tw, mu=1e-2, eps_radius=eps, num_iters=k,
+                backend=topo_backend, policy=tpol,
+            )
+
+        res, t_compile_s = timed(topo_solve)     # trace + compile + run
+        res, dt = timed(topo_solve)              # steady state (cache hit)
+        nbytes = _consensus_bytes(tpol, n, q, k, m)
+        gap = topo.spectral_gap(m)
+        rel_oracle = float(
+            jnp.linalg.norm(res.o_star - oracle) / jnp.linalg.norm(oracle)
+        )
+        report["topologies"][tname] = {
+            "topology": topo.describe(),
+            "spectral_gap": round(gap, 6),
+            "rounds_for_tolerance_1e6": topo.rounds_for_tolerance(m, 1e-6),
+            "edges_per_node": topo.edges_per_node(m),
+            "gossip_rounds": GOSSIP_ROUNDS,
+            "compile_s": round(t_compile_s, 4),
+            "iter_ms": round(dt / k * 1e3, 4),
+            "bytes_per_worker": nbytes,
+            "oracle_rel": rel_oracle,
+        }
+        rows.append(csv_row(
+            f"mesh_topology_{tname.replace(':', '_')}", dt * 1e6,
+            f"M={m};iter_us={dt / k * 1e6:.1f};gap={gap:.4f};"
+            f"comm_bytes={nbytes};oracle_rel={rel_oracle:.2e}",
+        ))
+        if verbose:
+            print(rows[-1], flush=True)
 
     # Centralized-equivalence parity: same mode, different runtime.
     report["parity"] = {}

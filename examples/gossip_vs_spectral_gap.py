@@ -1,67 +1,91 @@
-"""RingGossip rounds vs the spectral-gap prediction (paper §III).
+"""Gossip rounds vs the spectral-gap prediction, across topologies
+(paper §III).
 
 Gossip converges to the mean geometrically at rate |lambda_2(H)| (Boyd
 et al.): after B rounds the worst-case deviation from the true mean
-shrinks like lambda_2^B.  This script sweeps ``RingGossip(rounds=1..8)``
-on an M=8 degree-2 circular topology, measures the actual consensus
-error through the backend seam, and checks it against the
-``core.topology.spectral_gap`` prediction — including the B that
-``gossip_rounds_for_tolerance`` says should reach a target tolerance.
+shrinks like lambda_2^B.  This script sweeps ``Gossip(rounds=1..8)``
+over every first-class mixing graph on M=8 workers — ring, torus,
+hypercube, fully-connected, Birkhoff-compiled geometric — measures the
+actual consensus error through the backend seam, and checks it against
+each topology's ``spectral_gap`` prediction, including the B that
+``rounds_for_tolerance`` says should reach a target tolerance.
 
     PYTHONPATH=src python examples/gossip_vs_spectral_gap.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import topology
 from repro.core.backend import SimulatedBackend
-from repro.core.policy import RingGossip
+from repro.core.policy import Gossip
+from repro.core.topology import (
+    FullyConnected,
+    Hypercube,
+    RandomGeometric,
+    Ring,
+    Torus,
+)
 
 M = 8
-DEGREE = 2
 MAX_ROUNDS = 8
 
+TOPOLOGIES = (
+    Ring(1),
+    Ring(2),
+    Torus(2, 4),
+    Hypercube(),
+    FullyConnected(),
+    RandomGeometric(radius=0.5, seed=1),
+)
 
-def consensus_error(rounds: int, x) -> float:
-    """Max deviation from the true mean after B gossip rounds."""
-    backend = SimulatedBackend(M, policy=RingGossip(rounds=rounds, degree=DEGREE))
+
+def consensus_error(topo, rounds: int, x) -> float:
+    """Max deviation from the true mean after B gossip rounds over topo."""
+    backend = SimulatedBackend(M, policy=Gossip(rounds=rounds, topology=topo))
     mixed = backend.run(backend.consensus_mean, x)
     return float(jnp.max(jnp.abs(mixed - jnp.mean(x, axis=0, keepdims=True))))
 
 
-def main():
-    h = topology.circular_mixing_matrix(M, DEGREE)
-    gap = topology.spectral_gap(h)
+def sweep(topo, x, err0: float) -> None:
+    gap = topo.spectral_gap(M)
     lam2 = 1.0 - gap
-    x = jax.random.normal(jax.random.PRNGKey(0), (M, 16))
-    err0 = float(jnp.max(jnp.abs(x - jnp.mean(x, axis=0, keepdims=True))))
-
-    print(f"M={M} degree-{DEGREE} circular topology: "
-          f"spectral gap {gap:.3f} (lambda_2 = {lam2:.3f})\n")
+    print(f"\n{topo.describe()}: spectral gap {gap:.3f} "
+          f"(lambda_2 = {lam2:.3f}, {topo.edges_per_node(M)} edges/node)")
     print(f"{'B':>3} {'measured err':>14} {'lambda_2^B * err0':>18}")
     errs = []
     for rounds in range(1, MAX_ROUNDS + 1):
-        err = consensus_error(rounds, x)
-        pred = lam2 ** rounds * err0
+        err = consensus_error(topo, rounds, x)
         errs.append(err)
-        print(f"{rounds:3d} {err:14.3e} {pred:18.3e}")
+        print(f"{rounds:3d} {err:14.3e} {lam2 ** rounds * err0:18.3e}")
 
     # The trend the spectral gap predicts: geometric decay (monotone
-    # non-increasing, and within a constant factor of lambda_2^B).
+    # non-increasing, and within a constant factor of lambda_2^B) — up
+    # to the fp32 noise floor, where fast mixers park immediately.
+    floor = 1e-6 * err0
     for b in range(1, len(errs)):
-        assert errs[b] <= errs[b - 1] * (1 + 1e-6), (b, errs)
+        assert errs[b] <= errs[b - 1] * (1 + 1e-6) + floor, (topo, b, errs)
     for b, err in enumerate(errs, start=1):
-        assert err <= 10.0 * lam2 ** b * err0, (b, err)
+        assert err <= 10.0 * lam2 ** b * err0 + floor, (topo, b, err)
 
-    # And the B that gossip_rounds_for_tolerance prescribes for 1e-6
-    # relative consensus must actually deliver it.
+
+def main():
+    x = jax.random.normal(jax.random.PRNGKey(0), (M, 16))
+    err0 = float(jnp.max(jnp.abs(x - jnp.mean(x, axis=0, keepdims=True))))
+
+    for topo in TOPOLOGIES:
+        sweep(topo, x, err0)
+
+    # And the B that rounds_for_tolerance prescribes for 1e-6 relative
+    # consensus must actually deliver it (the README's "choosing a
+    # topology" guidance), on the paper's ring.
     tol = 1e-6
-    b_star = topology.gossip_rounds_for_tolerance(h, tol)
-    err_star = consensus_error(b_star, x)
-    print(f"\nB* = {b_star} rounds for tol {tol:.0e}: measured err "
-          f"{err_star:.3e} (err0 {err0:.3e})")
+    ring = Ring(2)
+    b_star = ring.rounds_for_tolerance(M, tol)
+    err_star = consensus_error(ring, b_star, x)
+    print(f"\n{ring.describe()}: B* = {b_star} rounds for tol {tol:.0e}: "
+          f"measured err {err_star:.3e} (err0 {err0:.3e})")
     assert err_star <= 10.0 * tol * err0, (b_star, err_star)
-    print("gossip-error trend matches the spectral-gap prediction")
+    print("gossip-error trend matches the spectral-gap prediction "
+          "for every topology")
 
 
 if __name__ == "__main__":

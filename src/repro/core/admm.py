@@ -121,10 +121,11 @@ def admm_ridge_consensus(
         ``MeshBackend`` (shard_map, one worker per mesh slot).  Defaults
         to ``SimulatedBackend(M)``.
     policy: the ``ConsensusPolicy`` deciding *how* they reach consensus
-        (``ExactMean``, ``RingGossip``, ``QuantizedGossip``,
-        ``LossyGossip``, ``StaleMixing``); defaults to the backend's own
-        policy.  Policy state (quantizer keys, staleness buffers) is
-        threaded through the ADMM scan carry.
+        (``ExactMean``; ``Gossip`` over any ``repro.core.topology``
+        graph, with ``RingGossip`` as the paper's circular alias;
+        ``QuantizedGossip``, ``LossyGossip``, ``StaleMixing``); defaults
+        to the backend's own policy.  Policy state (quantizer keys,
+        staleness buffers) is threaded through the ADMM scan carry.
     consensus_fn: legacy batched (M, Q, n) -> (M, Q, n) averaging
         primitive for simulations with an *arbitrary* dense mixing matrix
         H (``make_consensus_fn('gossip', h=...)``).  Mutually exclusive

@@ -23,12 +23,14 @@ the mesh — which is the point of the paper.
 
 Consensus (both backends) is a pluggable :class:`~repro.core.policy.
 ConsensusPolicy` strategy object: ``ExactMean`` (one all-reduce, the
-B -> infinity limit), ``RingGossip`` (B rounds of degree-d circular
-gossip via ``lax.ppermute`` — the dense doubly-stochastic
-``topology.circular_mixing_matrix`` expressed as peer exchanges),
-``QuantizedGossip``, ``LossyGossip`` and ``StaleMixing``.  The legacy
-string modes (``mode='exact'|'gossip'`` plus ``degree``/``num_rounds``)
-remain as thin deprecated aliases over the first two policies.
+B -> infinity limit), ``Gossip`` (B rounds of doubly-stochastic gossip
+over a first-class ``repro.core.topology.Topology`` — ring, torus,
+hypercube, fully-connected, random-geometric, time-varying — whose
+static exchange schedule runs as ``lax.ppermute`` hops),
+``QuantizedGossip``, ``LossyGossip`` and ``StaleMixing`` (each of which
+also takes ``topology=``).  ``RingGossip`` is the bit-identical
+ring-topology alias; the legacy string modes (``mode='exact'|'gossip'``
+plus ``degree``/``num_rounds``) remain as thin deprecated aliases.
 
 Executable cache
 ----------------
@@ -326,10 +328,12 @@ class ConsensusBackend(abc.ABC):
         """Peer messages each worker sends per ``consensus_mean`` call.
 
         Exact consensus is one all-reduce (B=1 in the eq. 15 accounting);
-        degree-d gossip sends to 2d neighbours for each of B rounds.
-        Delegates to the policy's declared ``exchanges_per_round``.
+        topology gossip sends to ``edges_per_node`` neighbours for each
+        of B rounds.  Delegates to the policy's M-aware
+        ``exchanges_for`` (graph degree can depend on the worker count —
+        hypercube, fully-connected).
         """
-        return self.policy.exchanges_per_round
+        return self.policy.exchanges_for(self.num_workers)
 
     def describe(self) -> str:
         return (

@@ -14,6 +14,14 @@ quantity over the graph" primitive (Algorithm 1, line 8):
    torus).  On production meshes one would instead use ``jax.lax.pmean``
    (a single all-reduce == exact consensus); we keep gossip to reproduce
    the paper's degree sweep.
+4. ``schedule_gossip_step``/``schedule_gossip_average`` — the general
+   in-program form: execute a ``repro.core.topology.ExchangeSchedule``
+   (any doubly-stochastic H compiled to static ``(permutation, weight)``
+   ppermute steps) along a mesh axis.  The ring functions above are the
+   hand-written special case this generalizes; uniform equal-weight
+   schedules run the identical sum-then-divide hop sequence, so
+   ``Gossip(topology=Ring(d))`` stays bit-identical to the legacy
+   ``RingGossip``.
 
 This module holds the *reference implementations*; how they are selected
 and composed per training run is the job of the ``ConsensusPolicy``
@@ -93,6 +101,75 @@ def ring_gossip_average(
     # ppermute with python-level loop inside fori_loop body is fine: the
     # permutation tables are static.
     return jax.lax.fori_loop(0, num_rounds, body, x)
+
+
+def schedule_gossip_step(
+    x: jax.Array,
+    axis_name: str,
+    schedule,
+    *,
+    self_value: jax.Array | None = None,
+) -> jax.Array:
+    """One gossip round of an arbitrary doubly-stochastic H, expressed as
+    the static ppermute steps of a ``topology.ExchangeSchedule``:
+
+        x' = self_weight * self + sum_k weight_k * ppermute(x, perm_k)
+
+    ``self_value`` substitutes a different array for the worker's OWN
+    contribution (peers still receive ``x``) — quantized gossip keeps the
+    local value full-precision, stale mixing keeps it fresh.  Uniform
+    equal-weight schedules (the paper's h_ij = 1/|N_i| rule) take the
+    sum-then-divide path, which reproduces ``ring_gossip_step``'s float
+    ops exactly — the bit-identity guarantee for ``Ring`` topologies.
+    """
+    own = x if self_value is None else self_value
+    if schedule.uniform:
+        acc = own
+        for perm in schedule.perms:
+            acc = acc + jax.lax.ppermute(x, axis_name, perm)
+        return acc / (len(schedule.perms) + 1)
+    acc = schedule.self_weight * own
+    for perm, w in zip(schedule.perms, schedule.weights):
+        acc = acc + w * jax.lax.ppermute(x, axis_name, perm)
+    return acc
+
+
+def schedule_gossip_average(
+    x: jax.Array, axis_name: str, schedule, num_rounds: int
+) -> jax.Array:
+    """B rounds of exchange-schedule gossip inside an SPMD region."""
+    def body(_, val):
+        return schedule_gossip_step(val, axis_name, schedule)
+
+    # The permutation tables are static, so a python-level loop inside
+    # the fori_loop body is fine (same pattern as ring_gossip_average).
+    return jax.lax.fori_loop(0, num_rounds, body, x)
+
+
+def lossy_schedule_gossip_step(
+    x: jax.Array,
+    axis_name: str,
+    schedule,
+    *,
+    drop_prob: float,
+    key: jax.Array,
+) -> jax.Array:
+    """One exchange-schedule gossip round over a lossy network: each
+    incoming step fails independently with probability ``drop_prob`` and
+    the receiver renormalizes its mixing row over the surviving weights
+    (the self term never drops) — the generalization of
+    :func:`lossy_ring_gossip_step` to arbitrary topologies.  ``key`` must
+    be a per-worker key (each node observes its own link failures)."""
+    keys = jax.random.split(key, max(len(schedule.perms), 1))
+    self_w = jnp.asarray(schedule.self_weight, x.dtype)
+    acc = self_w * x
+    wsum = self_w
+    for i, (perm, w) in enumerate(zip(schedule.perms, schedule.weights)):
+        msg = jax.lax.ppermute(x, axis_name, perm)
+        alive = jax.random.bernoulli(keys[i], 1.0 - drop_prob).astype(x.dtype)
+        acc = acc + alive * w * msg
+        wsum = wsum + alive * w
+    return acc / wsum
 
 
 def lossy_ring_gossip_step(

@@ -104,6 +104,9 @@ def fused_layer_step(
     policy: consensus strategy for the ADMM scan inside this program
         (default: the backend's policy).  Part of the cache key — one
         lowering per (layer shape, policy), never a per-call re-trace.
+        Gossip-family policies carry their ``Topology``, so the graph's
+        exchange schedule is compiled into this fused program and two
+        policies differing only in topology get distinct executables.
 
     The executable cache key covers every closed-over trace-affecting
     value; W is an operand, so the (n, n)-shaped program compiled for

@@ -76,10 +76,11 @@ def train_decentralized_ssfn(
         all run as ONE fused SPMD program per layer under the backend's
         executable cache.
     policy: how the workers reach consensus — a ``repro.core.policy``
-        strategy object (``ExactMean``, ``RingGossip``,
-        ``QuantizedGossip``, ``LossyGossip``, ``StaleMixing``); defaults
-        to the backend's policy.  Drives the eq.-15 communication
-        accounting via its declared ``exchanges_per_round``.
+        strategy object (``ExactMean``, ``Gossip`` over any
+        ``repro.core.topology.Topology``, ``QuantizedGossip``,
+        ``LossyGossip``, ``StaleMixing``); defaults to the backend's
+        policy.  Drives the eq.-15 communication accounting via its
+        M-aware ``exchanges_for``.
     consensus_fn: legacy dense-H consensus primitive for the Z-update
         (mutually exclusive with ``backend``/``policy``).
     gossip_rounds: B, used only for the communication-load accounting when a
@@ -112,7 +113,11 @@ def train_decentralized_ssfn(
     # legacy ``gossip_rounds`` convention.
     explicit = backend is not None or policy is not None
     policy = policy if policy is not None else engine_backend.policy
-    exchanges = policy.exchanges_per_round if explicit else gossip_rounds
+    # M-aware: topology degree can depend on the worker count.
+    exchanges = (
+        policy.exchanges_for(engine_backend.num_workers)
+        if explicit else gossip_rounds
+    )
     x_workers = engine_backend.shard_workers(x_workers)
     t_workers = engine_backend.shard_workers(t_workers)
 

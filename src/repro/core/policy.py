@@ -20,27 +20,37 @@ special cases.
 
 Shipped policies
 ----------------
-==============================  ==========================  ==========
-policy                          exchanges/round             wire bits
-==============================  ==========================  ==========
-``ExactMean()``                 1 (one all-reduce)          32
-``RingGossip(rounds, degree)``  2 * degree * rounds         32
-``QuantizedGossip(bits)``       1                           ``bits``
-``LossyGossip(drop_prob, ...)`` 2 * degree * rounds         32
-``StaleMixing(delay)``          1                           32
-==============================  ==========================  ==========
+==================================  ==============================  ==========
+policy                              exchanges/round                 wire bits
+==================================  ==============================  ==========
+``ExactMean()``                     1 (one all-reduce)              32
+``Gossip(rounds, topology)``        rounds * topology edges         32
+``RingGossip(rounds, degree)``      2 * degree * rounds             32
+``QuantizedGossip(bits, ...)``      1 (or rounds * edges)           ``bits``
+``LossyGossip(drop_prob, ...)``     2 * degree * rounds             32
+``StaleMixing(delay, ...)``         1 (or topology edges)           32
+==================================  ==============================  ==========
 
 ``ExactMean`` is the B -> infinity limit (bit-identical to the old
-``mode='exact'``); ``RingGossip`` is the paper's degree-d circular
-topology expressed as ``ppermute`` hops; the last three are the paper's
-§IV future-work axis (quantized / lossy / asynchronous peer-to-peer
-networks), previously stranded in ``core/robust.py`` as batched
-simulations that could not run under ``MeshBackend``.
+``mode='exact'``).  ``Gossip`` is the paper's H-matrix gossip over a
+first-class :class:`repro.core.topology.Topology` — ``Ring``, ``Torus``,
+``Hypercube``, ``FullyConnected``, ``RandomGeometric``, ``TimeVarying``
+— whose static exchange schedule runs as ``ppermute`` hops inside the
+worker program; ``RingGossip(rounds, degree)`` is the bit-identical
+alias for ``Gossip(rounds, topology=Ring(degree))`` (the paper's
+degree-d circular experiments).  The quantized / lossy / stale policies
+(the paper's §IV future-work axis) also take ``topology=``: ``None``
+keeps their original single-all-reduce / ring behaviour, a topology
+object runs them over that graph's exchange schedule.
 
-The numeric primitives (ring hops, stochastic quantization) live in
-``repro.core.consensus`` — policies are thin strategy objects over those
-reference implementations, which is what keeps a new consensus variant
-at ~50 lines.
+Because graph degree can depend on M (hypercube: log2 M), the eq.-15
+accounting has an M-aware entry point ``exchanges_for(num_workers)``;
+the legacy ``exchanges_per_round`` property remains for M-free policies.
+
+The numeric primitives (ring hops, exchange-schedule execution,
+stochastic quantization) live in ``repro.core.consensus`` — policies are
+thin strategy objects over those reference implementations, which is
+what keeps a new consensus variant at ~50 lines.
 
 Policies are frozen dataclasses: hashable (they participate in the
 backend executable-cache key — one lowering per (layer shape, policy)),
@@ -59,6 +69,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import consensus as consensus_lib
+from repro.core.topology import Ring, Topology, parse_topology
 
 Array = jax.Array
 
@@ -108,7 +119,17 @@ class ConsensusPolicy(abc.ABC):
     @property
     @abc.abstractmethod
     def exchanges_per_round(self) -> int:
-        """Peer messages each worker sends per ``mix`` call (eq. 15's B)."""
+        """Peer messages each worker sends per ``mix`` call (eq. 15's B).
+
+        Raises ValueError for policies whose graph degree depends on the
+        worker count (hypercube, fully-connected, geometric) — callers
+        that know M should use :meth:`exchanges_for`.
+        """
+
+    def exchanges_for(self, num_workers: int | None) -> int:
+        """M-aware exchange count — the accounting entry point backends
+        and trainers use (topology degree can depend on M)."""
+        return self.exchanges_per_round
 
     @property
     def is_exact(self) -> bool:
@@ -148,14 +169,17 @@ class ConsensusPolicy(abc.ABC):
         out, _ = self.mix(x, self.init_state(x, ctx), ctx)
         return out
 
-    def wire_bytes(self, *, scalars: int, num_consensus: int) -> int:
+    def wire_bytes(
+        self, *, scalars: int, num_consensus: int,
+        num_workers: int | None = None,
+    ) -> int:
         """Eq.-15 wire bytes per worker: ``scalars`` floats per exchange,
-        ``exchanges_per_round`` exchanges per consensus call,
+        ``exchanges_for(M)`` exchanges per consensus call,
         ``num_consensus`` consensus calls, at this policy's link width.
         The single accounting used by layerwise logs and benchmarks.
         """
         return (
-            scalars * self.exchanges_per_round * num_consensus
+            scalars * self.exchanges_for(num_workers) * num_consensus
             * self.wire_bits // 8
         )
 
@@ -167,6 +191,23 @@ def _worker_key(seed: int, ctx: ConsensusContext) -> Array:
     """Per-worker PRNG key from a static seed: distinct streams per
     worker, deterministic across runs and runtimes."""
     return jax.random.fold_in(jax.random.PRNGKey(seed), ctx.worker_index())
+
+
+def _cycle_exchanges(
+    topology: Topology, rounds: int, num_workers: int | None
+) -> int:
+    """Eq.-15 peer messages for B gossip rounds over a (possibly
+    time-varying) topology: round b talks on cycle[b % L]'s edges."""
+    cycle = topology.cycle()
+    return sum(
+        cycle[b % len(cycle)].edges_per_node(num_workers)
+        for b in range(rounds)
+    )
+
+
+def _cycle_schedules(topology: Topology, ctx: ConsensusContext) -> list:
+    """Per-round exchange schedules; round b uses schedules[b % L]."""
+    return [t.exchange_schedule(ctx.num_workers) for t in topology.cycle()]
 
 
 # --------------------------------------------------------------- exact
@@ -192,69 +233,105 @@ class ExactMean(ConsensusPolicy):
 # -------------------------------------------------------------- gossip
 
 @dataclass(frozen=True)
-class RingGossip(ConsensusPolicy):
-    """B rounds of degree-d circular gossip (paper §III) via ppermute.
+class Gossip(ConsensusPolicy):
+    """B rounds of doubly-stochastic gossip x <- H x over an arbitrary
+    :class:`~repro.core.topology.Topology` (paper §III).
 
-    Equivalent to B applications of the dense doubly-stochastic
-    ``topology.circular_mixing_matrix(M, degree)`` but expressed as peer
-    exchanges on the device ring (ICI-torus native on TPU).
+    The topology's static exchange schedule — ``(permutation, weight)``
+    ppermute steps — is compiled into the SPMD worker program at trace
+    time, so ``Torus``/``Hypercube``/``RandomGeometric``/``TimeVarying``
+    graphs run through exactly the in-program peer-exchange path the
+    paper's ring did, on both backends.  ``TimeVarying`` topologies cycle
+    one sub-schedule per round.
     """
 
     rounds: int = 1
-    degree: int = 1
+    topology: Topology = Ring(1)
 
     mode_name = "gossip"
 
     def __post_init__(self):
-        if self.degree < 1:
-            raise ValueError(f"gossip degree must be >= 1, got {self.degree}")
         if self.rounds < 1:
             raise ValueError(f"gossip rounds must be >= 1, got {self.rounds}")
-
-    def validate(self, num_workers: int) -> None:
-        if 2 * self.degree + 1 > num_workers:
-            # A larger degree would wrap the ring and double-count
-            # neighbours — no longer the paper's degree-d circulant H.
-            raise ValueError(
-                f"gossip degree {self.degree} needs 2*d+1 <= M distinct ring "
-                f"neighbours but M={num_workers}"
+        if not isinstance(self.topology, Topology):
+            raise TypeError(
+                f"topology must be a Topology, got {type(self.topology).__name__}"
             )
 
     @property
+    def degree(self) -> int:
+        """Legacy ``backend.degree`` view (ring topologies only)."""
+        return getattr(self.topology, "degree", 1)
+
+    def validate(self, num_workers: int) -> None:
+        self.topology.validate(num_workers)
+
+    @property
     def exchanges_per_round(self) -> int:
-        return 2 * self.degree * self.rounds
+        return self.exchanges_for(None)
+
+    def exchanges_for(self, num_workers: int | None) -> int:
+        return _cycle_exchanges(self.topology, self.rounds, num_workers)
 
     def mix(self, x, state, ctx):
-        out = consensus_lib.ring_gossip_average(
-            x,
-            ctx.axis_name,
-            degree=self.degree,
-            num_nodes=ctx.num_workers,
-            num_rounds=self.rounds,
-        )
+        scheds = _cycle_schedules(self.topology, ctx)
+        if len(scheds) == 1:
+            # fori_loop over the single schedule: the bit-identity path
+            # for Ring (mirrors ring_gossip_average exactly).
+            out = consensus_lib.schedule_gossip_average(
+                x, ctx.axis_name, scheds[0], self.rounds
+            )
+        else:
+            out = x
+            for b in range(self.rounds):
+                out = consensus_lib.schedule_gossip_step(
+                    out, ctx.axis_name, scheds[b % len(scheds)]
+                )
         return out, state
+
+
+def RingGossip(rounds: int = 1, degree: int = 1) -> Gossip:
+    """The paper's degree-d circular gossip: a bit-identical alias for
+    ``Gossip(rounds, topology=Ring(degree))`` (uniform ring schedules
+    execute the exact hop sequence of the PR-3 ``ring_gossip_average``).
+    """
+    return Gossip(rounds=rounds, topology=Ring(degree=degree))
 
 
 # ----------------------------------------------------------- quantized
 
 @dataclass(frozen=True)
 class QuantizedGossip(ConsensusPolicy):
-    """k-bit links: every exchanged message is quantized before the
-    all-reduce (the first "class of algorithms" in the paper's
+    """k-bit links: every exchanged message is quantized before it goes
+    on the wire (the first "class of algorithms" in the paper's
     literature review).  ``stochastic=True`` uses unbiased stochastic
     rounding — E[q(x)] = x — so the consensus preserves the
     doubly-stochastic mean in expectation; eq.-15 traffic scales by
-    bits/32 (declared via ``wire_bits``)."""
+    bits/32 (declared via ``wire_bits``).
+
+    ``topology=None`` (default) keeps the original form: one quantized
+    all-reduce per ``mix``.  With a topology, each of ``rounds`` gossip
+    rounds quantizes the outgoing message and mixes it over the graph's
+    exchange schedule — the receiver's own contribution stays
+    full-precision (only the wire is narrow)."""
 
     bits: int = 8
     stochastic: bool = True
     seed: int = 0
+    rounds: int = 1
+    topology: Topology | None = None
 
     mode_name = "quantized"
 
     def __post_init__(self):
         if not 1 <= self.bits <= 32:
             raise ValueError(f"quantization bits must be in [1, 32], got {self.bits}")
+        if self.rounds < 1:
+            raise ValueError(f"gossip rounds must be >= 1, got {self.rounds}")
+
+    def validate(self, num_workers: int) -> None:
+        if self.topology is not None:
+            self.topology.validate(num_workers)
 
     @property
     def wire_bits(self) -> int:  # type: ignore[override]
@@ -262,35 +339,57 @@ class QuantizedGossip(ConsensusPolicy):
 
     @property
     def exchanges_per_round(self) -> int:
-        return 1
+        return self.exchanges_for(None)
+
+    def exchanges_for(self, num_workers: int | None) -> int:
+        if self.topology is None:
+            return 1
+        return _cycle_exchanges(self.topology, self.rounds, num_workers)
 
     def init_state(self, x, ctx):
         return _worker_key(self.seed, ctx)
 
-    def mix(self, x, state, ctx):
-        key, sub = jax.random.split(state)
+    def _quantize(self, x, key):
         if self.stochastic:
-            q = consensus_lib.quantize_stochastic(x, self.bits, sub)
-        else:
-            q = consensus_lib.quantize_nearest(x, self.bits)
-        return ctx.pmean(q), key
+            return consensus_lib.quantize_stochastic(x, self.bits, key)
+        return consensus_lib.quantize_nearest(x, self.bits)
+
+    def mix(self, x, state, ctx):
+        if self.topology is None:
+            key, sub = jax.random.split(state)
+            return ctx.pmean(self._quantize(x, sub)), key
+        scheds = _cycle_schedules(self.topology, ctx)
+        key = state
+        for b in range(self.rounds):
+            key, sub = jax.random.split(key)
+            q = self._quantize(x, sub)
+            x = consensus_lib.schedule_gossip_step(
+                q, ctx.axis_name, scheds[b % len(scheds)], self_value=x
+            )
+        return x, key
 
 
 # --------------------------------------------------------------- lossy
 
 @dataclass(frozen=True)
 class LossyGossip(ConsensusPolicy):
-    """Ring gossip over a lossy network: each incoming link fails
+    """Gossip over a lossy network: each incoming link fails
     independently with probability ``drop_prob`` per round, and the
     receiver renormalizes its mixing row over surviving links (self-link
     never drops) — row-stochasticity is preserved per round but double
     stochasticity is not, which is exactly why naive lossy gossip biases
-    the mean (paper §IV / ref [16] relaxed ADMM)."""
+    the mean (paper §IV / ref [16] relaxed ADMM).
+
+    ``topology=None`` (default) keeps the original degree-d ring link
+    model; with a topology, the same per-link failure process runs over
+    that graph's exchange schedule (weighted links renormalize by
+    surviving weight)."""
 
     drop_prob: float = 0.1
     rounds: int = 1
     degree: int = 1
     seed: int = 0
+    topology: Topology | None = None
 
     mode_name = "lossy"
 
@@ -305,16 +404,35 @@ class LossyGossip(ConsensusPolicy):
             raise ValueError(f"gossip rounds must be >= 1, got {self.rounds}")
 
     def validate(self, num_workers: int) -> None:
-        RingGossip(self.rounds, self.degree).validate(num_workers)
+        if self.topology is None:
+            Ring(self.degree).validate(num_workers)
+        else:
+            self.topology.validate(num_workers)
 
     @property
     def exchanges_per_round(self) -> int:
-        return 2 * self.degree * self.rounds
+        return self.exchanges_for(None)
+
+    def exchanges_for(self, num_workers: int | None) -> int:
+        if self.topology is None:
+            return 2 * self.degree * self.rounds
+        return _cycle_exchanges(self.topology, self.rounds, num_workers)
 
     def init_state(self, x, ctx):
         return _worker_key(self.seed, ctx)
 
     def mix(self, x, state, ctx):
+        if self.topology is not None:
+            scheds = _cycle_schedules(self.topology, ctx)
+            key = state
+            for b in range(self.rounds):
+                key, sub = jax.random.split(key)
+                x = consensus_lib.lossy_schedule_gossip_step(
+                    x, ctx.axis_name, scheds[b % len(scheds)],
+                    drop_prob=self.drop_prob, key=sub,
+                )
+            return x, key
+
         def body(carry, _):
             val, key = carry
             key, sub = jax.random.split(key)
@@ -351,9 +469,17 @@ class StaleMixing(ConsensusPolicy):
     large ``delay`` combined with a large ADMM coupling ``mu`` can
     oscillate (step-size-vs-staleness, the ARock condition) — delays up
     to ~3 are stable at this repo's default hyper-parameters.
+
+    ``topology=None`` (default) mixes the stale messages with one exact
+    all-reduce; a topology mixes them over its exchange schedule instead
+    — each worker still substitutes its own FRESH value for its own
+    stale contribution (the schedule executor's ``self_value`` hook).
+    Time-varying topologies are rejected: one ``mix`` is one schedule
+    application, there is no round index to cycle on.
     """
 
     delay: int = 1
+    topology: Topology | None = None
 
     mode_name = "stale"
 
@@ -361,13 +487,39 @@ class StaleMixing(ConsensusPolicy):
         if self.delay < 0:
             raise ValueError(f"staleness delay must be >= 0, got {self.delay}")
 
+    def validate(self, num_workers: int) -> None:
+        if self.topology is not None:
+            if len(self.topology.cycle()) > 1:
+                raise ValueError(
+                    "StaleMixing applies one schedule per mix; time-varying "
+                    "topologies have no round to cycle on"
+                )
+            self.topology.validate(num_workers)
+
     @property
     def exchanges_per_round(self) -> int:
-        return 1
+        return self.exchanges_for(None)
+
+    def exchanges_for(self, num_workers: int | None) -> int:
+        if self.topology is None:
+            return 1
+        return self.topology.edges_per_node(num_workers)
 
     @property
     def is_exact(self) -> bool:
-        return self.delay == 0
+        return self.delay == 0 and self.topology is None
+
+    def _mix_messages(self, msg: Array, fresh: Array, ctx: ConsensusContext):
+        """Average the peers' (stale) messages, substituting this
+        worker's fresh value for its own stale term."""
+        if self.topology is None:
+            if fresh is msg:  # delay=0: the message IS the fresh value
+                return ctx.pmean(msg)
+            return ctx.pmean(msg) + (fresh - msg) / ctx.num_workers
+        sched = self.topology.exchange_schedule(ctx.num_workers)
+        return consensus_lib.schedule_gossip_step(
+            msg, ctx.axis_name, sched, self_value=fresh
+        )
 
     def init_state(self, x, ctx):
         if self.delay == 0:
@@ -379,22 +531,20 @@ class StaleMixing(ConsensusPolicy):
 
     def mix(self, x, state, ctx):
         if self.delay == 0:
-            return ctx.pmean(x), state
+            return self._mix_messages(x, x, ctx), state
         # Strictly pre-push: the current x is NOT in the message.
         msg = state.mean(axis=0)
         new_buf = jnp.concatenate([state[1:], x[None]], axis=0)
-        # Peers average everyone's stale messages; replace our own stale
-        # term with the fresh one (we obviously know our current value).
-        avg = ctx.pmean(msg) + (x - msg) / ctx.num_workers
-        return avg, new_buf
+        return self._mix_messages(msg, x, ctx), new_buf
 
     def one_shot(self, x, ctx):
         # A fresh init_state means "nothing transmitted yet" (zeros),
         # which would make a lone mix return x/M — not an average.  For
         # one-shot use, seed the window as if x had been transmitted all
-        # along: the steady state, whose mix is exactly the mean.
+        # along: the steady state, whose mix is exactly the mean (or the
+        # topology's one-round H-average of it).
         if self.delay == 0:
-            return ctx.pmean(x)
+            return self._mix_messages(x, x, ctx)
         steady = jnp.broadcast_to(x, (self.delay,) + x.shape)
         out, _ = self.mix(x, steady, ctx)
         return out
@@ -427,7 +577,11 @@ _SPEC_MAX_ARGS = {"exact": 0, "gossip": 2, "quantized": 1, "lossy": 3, "stale": 
 
 
 def parse_policy(
-    spec: str, *, degree: int = 1, rounds: int = 1
+    spec: str,
+    *,
+    degree: int = 1,
+    rounds: int = 1,
+    topology: "Topology | str | None" = None,
 ) -> ConsensusPolicy:
     """CLI policy specs: ``exact | gossip[:B[:d]] | quantized:bits |
     lossy:p[:B[:d]] | stale:delay``.
@@ -436,11 +590,21 @@ def parse_policy(
     out (the launcher feeds its legacy ``--degree``/``--rounds`` flags
     here, so ``lossy:0.1 --rounds 10`` means 10 lossy rounds).
 
+    ``topology`` (a ``Topology`` object or ``parse_topology`` spec
+    string — the launcher's ``--topology`` flag) replaces the default
+    ring for every gossip-family policy.  Combining it with an explicit
+    ring-degree spec segment is ambiguous and rejected; combining it
+    with ``exact`` is rejected (an all-reduce has no graph — use
+    ``gossip`` with ``topology=FullyConnected()`` for the dense-graph
+    gossip form).
+
     >>> parse_policy("gossip:3")
-    RingGossip(rounds=3, degree=1)
+    Gossip(rounds=3, topology=Ring(degree=1))
     >>> parse_policy("quantized:4").wire_bits
     4
     """
+    if isinstance(topology, str):
+        topology = parse_topology(topology)
     name, _, rest = spec.partition(":")
     args = [a for a in rest.split(":") if a] if rest else []
     if name not in _MODES:
@@ -453,21 +617,46 @@ def parse_policy(
             f"bad consensus policy spec {spec!r}: {name} takes at most "
             f"{_SPEC_MAX_ARGS[name]} ':'-argument(s), got {len(args)}"
         )
+    if topology is not None and name == "exact":
+        raise ValueError(
+            f"bad consensus policy spec {spec!r}: exact consensus is a "
+            "single all-reduce and takes no topology (use a gossip-family "
+            "policy)"
+        )
     try:
         if name == "exact":
             return ExactMean()
         if name == "gossip":
             b = int(args[0]) if args else rounds
+            if topology is not None:
+                if len(args) > 1:
+                    raise ValueError(
+                        "pass either a ring degree segment or topology=, "
+                        "not both"
+                    )
+                return Gossip(rounds=b, topology=topology)
             deg = int(args[1]) if len(args) > 1 else degree
             return RingGossip(rounds=b, degree=deg)
         if name == "quantized":
-            return QuantizedGossip(bits=int(args[0]) if args else 8)
+            bits = int(args[0]) if args else 8
+            if topology is not None:
+                return QuantizedGossip(bits=bits, rounds=rounds, topology=topology)
+            return QuantizedGossip(bits=bits)
         if name == "lossy":
             p = float(args[0]) if args else 0.1
             b = int(args[1]) if len(args) > 1 else rounds
+            if topology is not None:
+                if len(args) > 2:
+                    raise ValueError(
+                        "pass either a ring degree segment or topology=, "
+                        "not both"
+                    )
+                return LossyGossip(drop_prob=p, rounds=b, topology=topology)
             deg = int(args[2]) if len(args) > 2 else degree
             return LossyGossip(drop_prob=p, rounds=b, degree=deg)
-        return StaleMixing(delay=int(args[0]) if args else 1)
+        return StaleMixing(
+            delay=int(args[0]) if args else 1, topology=topology
+        )
     except ValueError as e:
         # int()/float() parse failures and constructor validation errors,
         # re-raised with the offending spec attached.

@@ -1,8 +1,10 @@
 from repro.data.synthetic import (
     PAPER_DATASETS,
+    PARTITIONS,
     Dataset,
     make_classification,
     paper_dataset,
+    partition_by_spec,
     partition_workers,
     partition_workers_noniid,
 )
@@ -10,9 +12,11 @@ from repro.data.tokens import TokenStream
 
 __all__ = [
     "PAPER_DATASETS",
+    "PARTITIONS",
     "Dataset",
     "make_classification",
     "paper_dataset",
+    "partition_by_spec",
     "partition_workers",
     "partition_workers_noniid",
     "TokenStream",

@@ -12,6 +12,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 
@@ -109,16 +110,78 @@ def partition_workers(x: Array, t: Array, num_workers: int) -> tuple[Array, Arra
 
 
 def partition_workers_noniid(
-    x: Array, t: Array, num_workers: int
+    x: Array, t: Array, num_workers: int, alpha: float = 1.0
 ) -> tuple[Array, Array]:
-    """Pathologically non-IID split: samples sorted by class label before
-    sharding, so each worker sees only a few classes.
+    """Non-IID split with label skew ``alpha`` in (0, 1].
+
+    ``alpha`` is the fraction of each worker's shard drawn from the
+    class-sorted sample stream as a contiguous block (so the worker sees
+    only a few classes there); the remaining ``1 - alpha`` fraction is
+    strided across the leftover stream, which spans all classes evenly.
+    ``alpha=1`` (default) is the pathological fully-sorted split.
 
     Consensus ADMM solves the GLOBAL problem exactly regardless of how the
     data is distributed (the objective is a sum over samples — unlike
     FedAvg-style local-steps methods, shard skew changes nothing at the
     fixed point).  Used to demonstrate that dSSFN's centralized
-    equivalence is distribution-free."""
+    equivalence is distribution-free — topology sweeps run against these
+    skewed shards via ``train_dssfn --partition noniid[:alpha]``."""
+    if not 0.0 < alpha <= 1.0:
+        raise ValueError(f"noniid alpha must be in (0, 1], got {alpha}")
     labels = jnp.argmax(t, axis=0)
     order = jnp.argsort(labels, stable=True)
-    return partition_workers(x[:, order], t[:, order], num_workers)
+    if alpha == 1.0:
+        return partition_workers(x[:, order], t[:, order], num_workers)
+    j = x.shape[1]
+    per = j // num_workers
+    n_skew = int(round(alpha * per))
+    n_iid = per - n_skew
+    used = per * num_workers
+    order = np.asarray(order[:used])
+    # Mark n_iid of every per consecutive stream positions as the IID
+    # pool — evenly spread over the whole class-sorted stream, so the
+    # pool covers all classes proportionally.
+    p = np.arange(used)
+    iid_mark = ((p + 1) * n_iid) // per - (p * n_iid) // per == 1
+    # IID pool strided across workers (each worker spans all classes)...
+    iid_idx = order[iid_mark].reshape(n_iid, num_workers).T if n_iid else None
+    # ...skew pool as contiguous class blocks (few classes per worker).
+    skew_idx = order[~iid_mark].reshape(num_workers, n_skew)
+    idx = jnp.asarray(
+        skew_idx if iid_idx is None
+        else np.concatenate([skew_idx, iid_idx], axis=1)
+    )
+    xw = x[:, idx].transpose(1, 0, 2)
+    tw = t[:, idx].transpose(1, 0, 2)
+    return xw, tw
+
+
+#: ``--partition`` spec names (see ``partition_by_spec``).
+PARTITIONS = ("iid", "noniid")
+
+
+def partition_by_spec(
+    x: Array, t: Array, num_workers: int, spec: str = "iid"
+) -> tuple[Array, Array]:
+    """CLI partition specs: ``iid | noniid[:alpha]``.
+
+    The single dispatcher behind ``train_dssfn --partition`` and
+    ``dssfn.TrainSpec(partition=...)``.
+
+    >>> # partition_by_spec(x, t, 8, "noniid:0.75")
+    """
+    name, _, rest = spec.partition(":")
+    if name == "iid":
+        if rest:
+            raise ValueError(f"bad partition spec {spec!r}: iid takes no args")
+        return partition_workers(x, t, num_workers)
+    if name == "noniid":
+        try:
+            alpha = float(rest) if rest else 1.0
+            return partition_workers_noniid(x, t, num_workers, alpha=alpha)
+        except ValueError as e:
+            raise ValueError(f"bad partition spec {spec!r}: {e}") from e
+    raise ValueError(
+        f"unknown partition {name!r}; expected one of {PARTITIONS} "
+        f"(spec {spec!r})"
+    )

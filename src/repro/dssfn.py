@@ -14,26 +14,51 @@ that into a declarative :class:`TrainSpec` plus :func:`train`::
         backend="mesh",            # or "simulated", or a ConsensusBackend
         workers=8,
         policy=RingGossip(rounds=4, degree=2),   # or "gossip:4:2"
+        topology="torus:2x4",      # or a core.topology.Topology object
+        partition="noniid:0.75",   # worker-shard skew for partition_data
     )
+    x_workers, t_workers = spec.partition_data(x_train, t_train)
     result = dssfn.train(spec, x_workers, t_workers, key)
     acc = dssfn.evaluate(result, x_test, y_test)
 
 ``policy`` accepts either a :mod:`repro.core.policy` object or a CLI
 spec string (``"exact" | "gossip:B[:d]" | "quantized:bits" |
-"lossy:p[:B[:d]]" | "stale:delay"``), so the same strings work from
-``train_dssfn --consensus ...`` and from Python.
+"lossy:p[:B[:d]]" | "stale:delay"``); ``topology`` a
+:mod:`repro.core.topology` object or spec string (``"ring:d" |
+"torus:RxC" | "hypercube" | "geometric:r[:seed]" | "full"``, ``+``-joined
+for time-varying cycles) applied to the gossip-family policy; and
+``partition`` a ``repro.data`` spec (``"iid" | "noniid[:alpha]"``) —
+so the same strings work from ``train_dssfn --consensus/--topology/
+--partition`` and from Python.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, fields, replace
 from typing import NamedTuple
 
 from repro.core import layerwise as layerwise_lib
 from repro.core import ssfn as ssfn_lib
 from repro.core.backend import ConsensusBackend, make_backend
-from repro.core.policy import ConsensusPolicy, ExactMean, parse_policy
+from repro.core.policy import ConsensusPolicy, ExactMean, Gossip, parse_policy
+from repro.core.topology import Topology, parse_topology
 
 _BACKEND_KINDS = ("simulated", "mesh")
+
+
+def apply_topology(policy: ConsensusPolicy, topology: Topology) -> ConsensusPolicy:
+    """Return ``policy`` running over ``topology``.
+
+    Gossip-family policies (anything with a ``topology`` field) are
+    rebuilt with the graph swapped in; ``ExactMean`` is rejected — a
+    single all-reduce has no graph (use ``Gossip`` with
+    ``FullyConnected()`` for the dense-graph gossip form).
+    """
+    if any(f.name == "topology" for f in fields(policy)):
+        return replace(policy, topology=topology)
+    raise ValueError(
+        f"policy {policy.describe()} does not take a topology; use a "
+        "gossip-family policy (gossip / quantized / lossy / stale)"
+    )
 
 
 @dataclass
@@ -46,22 +71,43 @@ class TrainSpec:
     #: ConsensusPolicy object or spec string.  None defers to the
     #: backend: an existing ``ConsensusBackend`` instance keeps its own
     #: configured policy; a backend built from a kind string gets
-    #: ``ExactMean``.  An explicit policy always wins.
+    #: ``ExactMean`` (or one ``Gossip`` round when ``topology`` is set).
+    #: An explicit policy always wins.
     policy: str | ConsensusPolicy | None = None
+    #: Communication graph for the gossip-family policy: a
+    #: ``repro.core.topology.Topology`` object or spec string
+    #: (``parse_topology`` grammar).  None keeps the policy's own graph
+    #: (the paper's ring for ``RingGossip``, all-reduce for the rest).
+    topology: str | Topology | None = None
+    #: Worker-shard layout ``partition_data`` uses: ``"iid"`` or
+    #: ``"noniid[:alpha]"`` (``repro.data.partition_by_spec`` grammar).
+    partition: str = "iid"
     #: Optional mesh for ``backend="mesh"``; None = 1-D ``workers`` mesh
     #: over the visible devices.
     mesh: object | None = None
     #: Self-size-estimation stop tolerance (paper §I); None = fixed depth.
     size_estimation_tol: float | None = None
 
+    def resolve_topology(self) -> Topology | None:
+        if self.topology is None or isinstance(self.topology, Topology):
+            return self.topology
+        return parse_topology(self.topology)
+
     def resolve_policy(self) -> ConsensusPolicy:
+        topo = self.resolve_topology()
         if isinstance(self.policy, ConsensusPolicy):
-            return self.policy
-        if self.policy is None:
+            pol = self.policy
+        elif self.policy is None:
+            if topo is not None:
+                # Topology with no policy = one plain gossip round over
+                # that graph per consensus (raise rounds via policy=).
+                return Gossip(rounds=1, topology=topo)
             if isinstance(self.backend, ConsensusBackend):
                 return self.backend.policy
             return ExactMean()
-        return parse_policy(self.policy)
+        else:
+            return parse_policy(self.policy, topology=topo)
+        return pol if topo is None else apply_topology(pol, topo)
 
     def resolve_backend(self) -> ConsensusBackend:
         if isinstance(self.backend, ConsensusBackend):
@@ -82,6 +128,22 @@ class TrainSpec:
             mesh=mesh,
             policy=self.resolve_policy(),
         )
+
+    def partition_data(self, x, t):
+        """Shard column-stacked (P, J) data into this spec's (M, P, J/M)
+        worker layout under the spec's ``partition`` scheme."""
+        from repro.data import partition_by_spec
+
+        workers = self.workers
+        if workers is None:
+            if isinstance(self.backend, ConsensusBackend):
+                workers = self.backend.num_workers
+            else:
+                raise ValueError(
+                    "partition_data needs spec.workers (or a backend "
+                    "instance that knows its worker count)"
+                )
+        return partition_by_spec(x, t, workers, self.partition)
 
 
 class TrainResult(NamedTuple):

@@ -22,6 +22,21 @@ spec string::
 (``--consensus gossip`` with no args keeps honouring the legacy
 ``--degree``/``--rounds`` flags.)
 
+The communication graph is a first-class axis (``repro.core.topology``)::
+
+    --topology ring:2           the paper's degree-2 circular graph
+    --topology torus:2x4        2x4 wraparound grid (ICI-mesh native)
+    --topology hypercube        log2(M)-dimensional hypercube
+    --topology geometric:0.5    random geometric graph, Metropolis weights
+    --topology full             complete graph (one round == exact mean)
+    --topology ring:1+hypercube time-varying: alternate per round
+
+With the default ``--consensus exact`` a ``--topology`` implies gossip
+over that graph (``--rounds`` rounds); with an explicit gossip-family
+policy it swaps that policy's graph.  ``--partition iid|noniid[:alpha]``
+controls worker-shard label skew, so topology sweeps can run against
+non-IID shards (centralized equivalence is distribution-free).
+
 On CPU the mesh is faked with XLA host devices: the launcher sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=M`` BEFORE jax
 initializes (which is why every jax import in this module is deferred).
@@ -56,7 +71,28 @@ def parse_args(argv=None) -> argparse.Namespace:
         help="consensus policy spec: exact | gossip[:B[:d]] | "
         "quantized:bits | lossy:p[:B[:d]] | stale:delay",
     )
-    ap.add_argument("--degree", type=int, default=2, help="gossip ring degree d")
+    ap.add_argument(
+        "--topology",
+        default=None,
+        help="communication graph for gossip-family policies: ring[:d] | "
+        "torus:RxC | hypercube | geometric:r[:seed] | full "
+        "('+'-joined specs cycle round-by-round).  With the default "
+        "--consensus exact this implies gossip over the graph "
+        "(--rounds rounds).",
+    )
+    ap.add_argument(
+        "--partition",
+        default="iid",
+        help="worker data partition: iid | noniid[:alpha] (alpha in (0,1] "
+        "= label-skew fraction per shard)",
+    )
+    # default=None so build_policy can tell an explicit --degree from the
+    # implicit 2 and reject the --degree + --topology combination instead
+    # of silently ignoring one of them.
+    ap.add_argument(
+        "--degree", type=int, default=None,
+        help="gossip ring degree d (default 2; incompatible with --topology)",
+    )
     ap.add_argument("--rounds", type=int, default=10, help="gossip rounds B")
     ap.add_argument("--layers", type=int, default=3)
     ap.add_argument("--hidden", type=int, default=64)
@@ -103,12 +139,29 @@ def ensure_devices(num_workers: int, *, allow_fake: bool = True) -> None:
 
 
 def build_policy(args):
-    """--consensus spec -> ConsensusPolicy.  The legacy --degree/--rounds
-    flags fill any segment the spec leaves out (so ``gossip`` and
-    ``lossy:0.1`` both honour them)."""
+    """--consensus + --topology -> ConsensusPolicy.  The legacy
+    --degree/--rounds flags fill any segment the spec leaves out (so
+    ``gossip`` and ``lossy:0.1`` both honour them); --topology swaps the
+    gossip-family graph, and with the default ``--consensus exact`` it
+    implies ``gossip`` over that graph."""
     from repro.core.policy import parse_policy
+    from repro.core.topology import parse_topology
 
-    return parse_policy(args.consensus, degree=args.degree, rounds=args.rounds)
+    topo = parse_topology(args.topology) if args.topology else None
+    if topo is not None and args.degree is not None:
+        raise ValueError(
+            "--degree configures the default ring; pass either --degree or "
+            "--topology (ring degree spells ring:d), not both"
+        )
+    consensus = args.consensus
+    if topo is not None and consensus == "exact":
+        consensus = "gossip"
+    return parse_policy(
+        consensus,
+        degree=args.degree if args.degree is not None else 2,
+        rounds=args.rounds,
+        topology=topo,
+    )
 
 
 def train_one(kind: str, args, data, xw, tw, cfg, key) -> dict:
@@ -150,7 +203,7 @@ def main(argv=None) -> dict:
     import jax.numpy as jnp
 
     from repro.core import ssfn
-    from repro.data import make_classification, partition_workers
+    from repro.data import make_classification, partition_by_spec
 
     print(f"devices: {len(jax.devices())} ({jax.default_backend()})", flush=True)
 
@@ -161,7 +214,9 @@ def main(argv=None) -> dict:
         input_dim=args.input_dim,
         num_classes=args.classes,
     )
-    xw, tw = partition_workers(data.x_train, data.t_train, args.workers)
+    xw, tw = partition_by_spec(
+        data.x_train, data.t_train, args.workers, args.partition
+    )
     cfg = ssfn.SSFNConfig(
         input_dim=args.input_dim,
         num_classes=args.classes,
@@ -174,6 +229,26 @@ def main(argv=None) -> dict:
 
     kinds = ["simulated", "mesh"] if args.backend == "both" else [args.backend]
     results: dict = {"config": vars(args), "runs": []}
+    # Predicted mixing behaviour of the selected graph (paper §III):
+    # what BENCH_mesh.json's "topologies" section measures end to end.
+    policy = build_policy(args)
+    topo = getattr(policy, "topology", None)
+    if topo is not None:
+        results["topology"] = {
+            "spec": topo.describe(),
+            "spectral_gap": topo.spectral_gap(args.workers),
+            "edges_per_node": topo.edges_per_node(args.workers),
+            "rounds_for_tolerance_1e6": topo.rounds_for_tolerance(
+                args.workers, 1e-6
+            ),
+        }
+        print(
+            f"topology {topo.describe()}: gap="
+            f"{results['topology']['spectral_gap']:.3f} "
+            f"edges/node={results['topology']['edges_per_node']} "
+            f"B*(1e-6)={results['topology']['rounds_for_tolerance_1e6']}",
+            flush=True,
+        )
     params_by_kind = {}
     for kind in kinds:
         run = train_one(kind, args, data, xw, tw, cfg, key)

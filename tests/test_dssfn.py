@@ -1,12 +1,21 @@
 """repro.dssfn facade: TrainSpec -> train -> evaluate without hand-wiring
-backends, plus policy/backend resolution and its error paths."""
+backends, plus policy/backend/topology/partition resolution and its
+error paths."""
 import jax
+import jax.numpy as jnp
 import pytest
 
 from repro import dssfn
 from repro.core import layerwise, ssfn
 from repro.core.backend import SimulatedBackend
-from repro.core.policy import ExactMean, QuantizedGossip, RingGossip
+from repro.core.policy import (
+    ExactMean,
+    Gossip,
+    QuantizedGossip,
+    RingGossip,
+    StaleMixing,
+)
+from repro.core.topology import Hypercube, Torus
 
 
 def _data(key, m=4, p=8, q=3, jm=16):
@@ -91,6 +100,76 @@ def test_backend_policy_is_honored_when_spec_policy_unset():
         cfg=_cfg(), backend=backend, policy=ExactMean()
     )
     assert spec_override.resolve_policy() == ExactMean()
+
+
+def test_spec_topology_resolution():
+    """TrainSpec(topology=...) swaps the gossip-family graph, whether the
+    policy is a spec string, an object, or absent entirely."""
+    spec = dssfn.TrainSpec(
+        cfg=_cfg(), workers=8, policy="gossip:4", topology="torus:2x4"
+    )
+    assert spec.resolve_policy() == Gossip(rounds=4, topology=Torus(2, 4))
+    spec_obj = dssfn.TrainSpec(
+        cfg=_cfg(), workers=8,
+        policy=StaleMixing(2), topology=Hypercube(),
+    )
+    assert spec_obj.resolve_policy() == StaleMixing(2, topology=Hypercube())
+    # Topology alone implies one gossip round over the graph.
+    spec_bare = dssfn.TrainSpec(cfg=_cfg(), workers=8, topology=Hypercube())
+    assert spec_bare.resolve_policy() == Gossip(rounds=1, topology=Hypercube())
+    assert spec_bare.resolve_backend().policy == Gossip(
+        rounds=1, topology=Hypercube()
+    )
+    # Exact consensus has no graph.
+    with pytest.raises(ValueError, match="topology"):
+        dssfn.TrainSpec(
+            cfg=_cfg(), workers=8, policy=ExactMean(), topology="hypercube"
+        ).resolve_policy()
+
+
+def test_train_over_topology_through_facade():
+    xw, tw = _data(jax.random.PRNGKey(20), m=8)
+    spec = dssfn.TrainSpec(
+        cfg=_cfg(), backend="simulated", workers=8,
+        policy="gossip:6", topology="hypercube",
+    )
+    result = dssfn.train(spec, xw, tw, jax.random.PRNGKey(21))
+    assert result.policy == Gossip(rounds=6, topology=Hypercube())
+    # eq.-15 accounting uses the hypercube's log2(M) edges per round.
+    assert result.log.comm_scalars == 3 * (8 + 20) * (6 * 3) * 30
+
+
+def test_spec_partition_data():
+    q, m, j = 4, 4, 48  # 12 samples/class == 12 samples/worker: aligned
+    key = jax.random.PRNGKey(22)
+    x = jax.random.normal(key, (8, j))
+    labels = jnp.arange(j) % q
+    t = jax.nn.one_hot(labels, q).T
+    spec = dssfn.TrainSpec(cfg=_cfg(), workers=m, partition="noniid")
+    xw, tw = spec.partition_data(x, t)
+    assert xw.shape == (m, 8, j // m) and tw.shape == (m, q, j // m)
+    # Fully-sorted split: each worker sees exactly one class.
+    per_worker_classes = [
+        int(jnp.unique(jnp.argmax(tw[i], axis=0)).size) for i in range(m)
+    ]
+    assert per_worker_classes == [1, 1, 1, 1]
+    # Partial skew keeps every class on every worker's strided remainder.
+    spec_half = dssfn.TrainSpec(cfg=_cfg(), workers=m, partition="noniid:0.5")
+    _, tw_half = spec_half.partition_data(x, t)
+    for i in range(m):
+        assert int(jnp.unique(jnp.argmax(tw_half[i], axis=0)).size) == q
+    # IID default matches the plain partitioner.
+    from repro.data import partition_workers
+
+    spec_iid = dssfn.TrainSpec(cfg=_cfg(), workers=m)
+    xw_iid, _ = spec_iid.partition_data(x, t)
+    assert jnp.array_equal(xw_iid, partition_workers(x, t, m)[0])
+    with pytest.raises(ValueError, match="unknown partition"):
+        dssfn.TrainSpec(cfg=_cfg(), workers=m, partition="sharded").partition_data(x, t)
+    with pytest.raises(ValueError, match="alpha"):
+        dssfn.TrainSpec(cfg=_cfg(), workers=m, partition="noniid:1.5").partition_data(x, t)
+    with pytest.raises(ValueError, match="workers"):
+        dssfn.TrainSpec(cfg=_cfg()).partition_data(x, t)
 
 
 def test_spec_error_paths():

@@ -180,6 +180,73 @@ def test_mesh_backend_matches_simulated_and_oracle():
     assert "MESHBACKEND_OK" in out
 
 
+def test_topology_gossip_mesh_parity_on_8_devices():
+    """The topology-seam acceptance test: non-ring mixing graphs (torus,
+    hypercube, time-varying, Birkhoff-compiled geometric) run their
+    exchange schedules as real collective_permutes on an M=8 ``workers``
+    mesh, match the vmap simulation, match the dense H^B reference, and
+    RingGossip stays bit-identical to the raw PR-3 ring hops."""
+    out = run_subprocess("""
+    from repro.core import admm, consensus
+    from repro.core.backend import MeshBackend, SimulatedBackend
+    from repro.core.policy import Gossip, RingGossip
+    from repro.core.topology import (
+        Hypercube, RandomGeometric, Ring, TimeVarying, Torus)
+    from repro.launch.mesh import make_worker_mesh
+
+    m, n, q, j = 8, 16, 3, 256
+    wmesh = make_worker_mesh(m)
+    y = jax.random.normal(jax.random.PRNGKey(0), (n, j))
+    t = jax.random.normal(jax.random.PRNGKey(1), (q, j))
+    yw = y.reshape(n, m, j // m).transpose(1, 0, 2)
+    tw = t.reshape(q, m, j // m).transpose(1, 0, 2)
+    kw = dict(mu=1e-2, eps_radius=6.0, num_iters=300)
+    oracle = admm.exact_constrained_ridge(y, t, eps_radius=6.0)
+
+    # Raw mixing parity on the mesh: schedule hops == dense H^B.
+    x = jax.random.normal(jax.random.PRNGKey(2), (m, 4, 6))
+    topos = (Torus(2, 4), Hypercube(), TimeVarying((Ring(1), Hypercube())),
+             RandomGeometric(radius=0.5, seed=1))
+    for topo in topos:
+        rounds = 4
+        pol = Gossip(rounds=rounds, topology=topo)
+        mesh_be = MeshBackend(wmesh, policy=pol)
+        got = mesh_be.run(mesh_be.consensus_mean, x)
+        cycle = topo.cycle()  # round b mixes with cycle[b % L]'s H
+        want = x
+        for b in range(rounds):
+            want = consensus.gossip_average(
+                want, cycle[b % len(cycle)].mixing_matrix(m), 1)
+        err = float(jnp.max(jnp.abs(got - want)))
+        assert err < 1e-5, (topo, err)
+
+    # Full ADMM solves: sim-vs-mesh parity + oracle proximity per graph.
+    for topo in (Torus(2, 4), Hypercube()):
+        pol = Gossip(rounds=6, topology=topo)
+        sim = admm.admm_ridge_consensus(
+            yw, tw, backend=SimulatedBackend(m, policy=pol), **kw)
+        msh = admm.admm_ridge_consensus(
+            yw, tw, backend=MeshBackend(wmesh, policy=pol), **kw)
+        rel = float(jnp.linalg.norm(sim.o_star - msh.o_star)
+                    / jnp.linalg.norm(sim.o_star))
+        assert rel < 1e-4, (topo, rel)
+        rel_o = float(jnp.linalg.norm(msh.o_star - oracle)
+                      / jnp.linalg.norm(oracle))
+        assert rel_o < 5e-2, (topo, rel_o)
+
+    # RingGossip == raw ring hops, bit for bit, on the real mesh.
+    ring_be = MeshBackend(wmesh, policy=RingGossip(rounds=5, degree=2))
+    got = ring_be.run(ring_be.consensus_mean, x)
+    def raw(v):
+        return consensus.ring_gossip_average(
+            v, ring_be.axis_name, degree=2, num_nodes=m, num_rounds=5)
+    want = ring_be.run(raw, x, key="raw-ring")
+    assert jnp.array_equal(got, want)
+    print("TOPOLOGY8_OK")
+    """)
+    assert "TOPOLOGY8_OK" in out
+
+
 def test_layer_engine_on_8_devices():
     """Compile-once layer engine on a real M=8 ``workers`` mesh: kernel-path
     parity (use_kernels=True vs einsum, exact AND gossip consensus) and the

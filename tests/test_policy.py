@@ -13,12 +13,21 @@ from repro.core.backend import MeshBackend, SimulatedBackend, make_backend
 from repro.core.policy import (
     ConsensusPolicy,
     ExactMean,
+    Gossip,
     LossyGossip,
     QuantizedGossip,
     RingGossip,
     StaleMixing,
     parse_policy,
     policy_from_mode,
+)
+from repro.core.topology import (
+    FullyConnected,
+    Hypercube,
+    RandomGeometric,
+    Ring,
+    TimeVarying,
+    Torus,
 )
 from repro.testing import given, settings, st
 
@@ -224,6 +233,185 @@ def test_fused_layer_step_policy_in_cache_key():
     assert backend.lowerings == 2, backend.cache_info()
     engine.fused_layer_step(backend, yw, tw, None, policy=StaleMixing(1), **kw)
     assert backend.lowerings == 2, backend.cache_info()
+
+
+# ------------------------------------------------------------------
+# Topology-first gossip: the mixing graph as a policy parameter
+# ------------------------------------------------------------------
+
+def test_ring_gossip_is_gossip_over_ring_topology():
+    """The PR-3 constructor is now a value-equal alias of the
+    topology-parameterized policy."""
+    pol = RingGossip(rounds=3, degree=2)
+    assert isinstance(pol, Gossip)
+    assert pol == Gossip(rounds=3, topology=Ring(2))
+    assert (pol.rounds, pol.degree) == (3, 2)
+    assert hash(pol) == hash(Gossip(rounds=3, topology=Ring(2)))
+
+
+def test_ring_gossip_alias_bit_identical_to_raw_ring_hops():
+    """Gossip(B, Ring(d)) must produce the exact float sequence of the
+    PR-3 ppermute implementation (consensus.ring_gossip_average)."""
+    m, degree, rounds = 8, 2, 5
+    x = jax.random.normal(jax.random.PRNGKey(2), (m, 4, 6))
+    backend = SimulatedBackend(m, policy=RingGossip(rounds=rounds, degree=degree))
+    got = backend.run(backend.consensus_mean, x)
+
+    def raw(v):
+        return consensus.ring_gossip_average(
+            v, backend.axis_name, degree=degree, num_nodes=m, num_rounds=rounds
+        )
+
+    want = backend.run(raw, x, key="raw-ring-hops")
+    assert jnp.array_equal(got, want)
+
+
+@pytest.mark.parametrize(
+    "topo",
+    [
+        Torus(2, 4),
+        Hypercube(),
+        FullyConnected(),
+        RandomGeometric(radius=0.5, seed=1),
+    ],
+    ids=lambda t: t.name,
+)
+def test_gossip_topology_matches_dense_h(topo):
+    """B rounds of in-program exchange-schedule gossip == H^B @ x."""
+    m, rounds = 8, 3
+    x = jax.random.normal(jax.random.PRNGKey(3), (m, 4, 6))
+    backend = SimulatedBackend(m, policy=Gossip(rounds=rounds, topology=topo))
+    got = backend.run(backend.consensus_mean, x)
+    want = consensus.gossip_average(x, topo.mixing_matrix(m), rounds)
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-5
+
+
+def test_time_varying_gossip_cycles_schedules():
+    tv = TimeVarying((Ring(1), Hypercube()))
+    m = 8
+    x = jax.random.normal(jax.random.PRNGKey(4), (m, 3, 5))
+    backend = SimulatedBackend(m, policy=Gossip(rounds=2, topology=tv))
+    got = backend.run(backend.consensus_mean, x)
+    want = consensus.gossip_average(
+        consensus.gossip_average(x, Ring(1).mixing_matrix(m), 1),
+        Hypercube().mixing_matrix(m), 1,
+    )
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-5
+
+
+def test_lossy_gossip_over_topology_drop_zero_equals_gossip():
+    m = 8
+    x = jax.random.normal(jax.random.PRNGKey(5), (m, 4, 4))
+    lossy = SimulatedBackend(
+        m, policy=LossyGossip(drop_prob=0.0, rounds=3, topology=Torus(2, 4))
+    )
+    clean = SimulatedBackend(m, policy=Gossip(rounds=3, topology=Torus(2, 4)))
+    a = lossy.run(lossy.consensus_mean, x)
+    b = clean.run(clean.consensus_mean, x)
+    assert float(jnp.max(jnp.abs(a - b))) < 1e-6
+
+
+def test_stale_mixing_over_topology_one_shot_is_h_average():
+    """Steady-state stale mix over a graph = one H-average (the fresh-
+    value substitution collapses when msg == x)."""
+    m = 8
+    x = jax.random.normal(jax.random.PRNGKey(6), (m, 3, 4))
+    topo = Hypercube()
+    backend = SimulatedBackend(m, policy=StaleMixing(2, topology=topo))
+    got = backend.run(backend.consensus_mean, x)
+    want = consensus.gossip_average(x, topo.mixing_matrix(m), 1)
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-5
+
+
+def test_quantized_gossip_over_topology_tracks_mean():
+    """High-bit quantized topology gossip stays within a few quantization
+    steps of the plain gossip result."""
+    m = 8
+    x = jax.random.normal(jax.random.PRNGKey(7), (m, 4, 4))
+    topo = FullyConnected()
+    qb = SimulatedBackend(
+        m, policy=QuantizedGossip(bits=16, rounds=1, topology=topo)
+    )
+    got = qb.run(qb.consensus_mean, x)
+    want = consensus.gossip_average(x, topo.mixing_matrix(m), 1)
+    step = float(x.max() - x.min()) / (2 ** 16 - 1)
+    assert float(jnp.max(jnp.abs(got - want))) < 8 * step
+
+
+def test_topology_exchange_accounting():
+    assert Gossip(rounds=3, topology=Ring(2)).exchanges_per_round == 12
+    assert Gossip(rounds=2, topology=Torus(2, 4)).exchanges_per_round == 6
+    assert Gossip(rounds=2, topology=Hypercube()).exchanges_for(8) == 6
+    assert Gossip(rounds=1, topology=FullyConnected()).exchanges_for(8) == 7
+    tv = Gossip(rounds=4, topology=TimeVarying((Ring(1), Hypercube())))
+    assert tv.exchanges_for(8) == 2 + 3 + 2 + 3
+    assert QuantizedGossip(bits=4).exchanges_for(8) == 1
+    assert QuantizedGossip(
+        bits=4, rounds=2, topology=Hypercube()
+    ).exchanges_for(8) == 6
+    assert StaleMixing(1, topology=Torus(2, 4)).exchanges_for(8) == 3
+    # M-dependent degree without M is an explicit error, never a guess.
+    with pytest.raises(ValueError, match="num_workers"):
+        Gossip(rounds=1, topology=Hypercube()).exchanges_per_round
+    # wire_bytes threads M through.
+    pol = Gossip(rounds=2, topology=Hypercube())
+    assert pol.wire_bytes(scalars=10, num_consensus=5, num_workers=8) == (
+        10 * 6 * 5 * 32 // 8
+    )
+
+
+def test_policy_topology_validation():
+    with pytest.raises(ValueError, match="torus"):
+        SimulatedBackend(8, policy=Gossip(topology=Torus(3, 3)))
+    with pytest.raises(ValueError, match="power-of-two"):
+        SimulatedBackend(6, policy=Gossip(topology=Hypercube()))
+    with pytest.raises(ValueError, match="time-varying"):
+        SimulatedBackend(
+            8, policy=StaleMixing(1, topology=TimeVarying((Ring(1), Ring(2))))
+        )
+    with pytest.raises(TypeError, match="Topology"):
+        Gossip(rounds=1, topology="ring:2")
+
+
+def test_parse_policy_with_topology():
+    topo = Torus(2, 4)
+    assert parse_policy("gossip:4", topology=topo) == Gossip(4, topo)
+    assert parse_policy("gossip:4", topology="torus:2x4") == Gossip(4, topo)
+    assert parse_policy("quantized:4", topology=topo, rounds=2) == (
+        QuantizedGossip(bits=4, rounds=2, topology=topo)
+    )
+    assert parse_policy("lossy:0.1:3", topology=topo) == LossyGossip(
+        drop_prob=0.1, rounds=3, topology=topo
+    )
+    assert parse_policy("stale:2", topology=topo) == StaleMixing(
+        delay=2, topology=topo
+    )
+    with pytest.raises(ValueError, match="no topology"):
+        parse_policy("exact", topology=topo)
+    with pytest.raises(ValueError, match="not both"):
+        parse_policy("gossip:4:2", topology=topo)
+    with pytest.raises(ValueError, match="not both"):
+        parse_policy("lossy:0.1:3:2", topology=topo)
+
+
+def test_gossip_topology_in_executable_cache_key():
+    """Two policies differing only in topology lower separately and hit
+    the cache on repeats — the graph is part of the compiled program."""
+    m = 8
+    _, _, yw, tw = _problem(jax.random.PRNGKey(5), m=m)
+    backend = SimulatedBackend(m)
+    kw = dict(mu=1e-2, eps_radius=6.0, num_iters=10, backend=backend)
+    pols = [
+        Gossip(rounds=2, topology=Ring(2)),
+        Gossip(rounds=2, topology=Torus(2, 4)),
+        Gossip(rounds=2, topology=Hypercube()),
+    ]
+    for pol in pols:
+        admm.admm_ridge_consensus(yw, tw, policy=pol, **kw)
+    assert backend.lowerings == len(pols), backend.cache_info()
+    for pol in pols:
+        admm.admm_ridge_consensus(yw, tw, policy=pol, **kw)
+    assert backend.lowerings == len(pols), backend.cache_info()
 
 
 # ------------------------------------------------------------------

@@ -1,10 +1,46 @@
-"""Unit + property tests for mixing matrices and consensus."""
+"""Unit + property tests for mixing matrices, Topology strategy objects
+and their exchange-schedule compilation, and consensus."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from repro.testing import given, settings, st
 
 from repro.core import consensus, topology
+from repro.core.topology import (
+    FullyConnected,
+    Hypercube,
+    RandomGeometric,
+    Ring,
+    TimeVarying,
+    Torus,
+    parse_topology,
+)
+
+#: One representative per topology family (Torus shapes picked so at
+#: least one fits every even M in the property sweep).
+ALL_TOPOLOGIES = (
+    Ring(1),
+    Ring(2),
+    Torus(2, 4),
+    Torus(3, 3),
+    Torus(2, 2),
+    Hypercube(),
+    FullyConnected(),
+    RandomGeometric(radius=0.5, seed=1),
+    RandomGeometric(radius=0.3, seed=7),
+)
+
+
+def _apply_schedule_numpy(sched, x):
+    """Numpy model of ppermute semantics: one exchange-schedule round."""
+    acc = sched.self_weight * x
+    for perm, w in zip(sched.perms, sched.weights):
+        moved = np.zeros_like(x)
+        for src, dst in perm:
+            moved[dst] = x[src]
+        acc = acc + w * moved
+    return acc
 
 
 @given(
@@ -70,6 +106,191 @@ def test_degree_saturates_at_dmax():
     m = 10
     h = topology.circular_mixing_matrix(m, 5)   # d_max for M=10
     assert np.allclose(h, topology.fully_connected_mixing_matrix(m))
+
+
+# ------------------------------------------------------------------
+# Topology strategy objects: H properties and schedule compilation
+# ------------------------------------------------------------------
+
+@given(
+    m=st.integers(min_value=2, max_value=16),
+    ti=st.integers(min_value=0, max_value=len(ALL_TOPOLOGIES) - 1),
+)
+@settings(max_examples=60, deadline=None)
+def test_topology_h_is_doubly_stochastic_and_symmetric(m, ti):
+    """Every Topology's H (for every M up to 16 it validates on) is
+    doubly stochastic, non-negative and symmetric."""
+    topo = ALL_TOPOLOGIES[ti]
+    try:
+        topo.validate(m)
+    except ValueError:
+        return  # graph does not fit this M — that's what validate is for
+    h = topo.mixing_matrix(m)
+    assert np.allclose(h.sum(axis=0), 1.0)
+    assert np.allclose(h.sum(axis=1), 1.0)
+    assert np.all(h >= -1e-12)
+    assert np.allclose(h, h.T)
+
+
+@given(
+    m=st.integers(min_value=2, max_value=16),
+    ti=st.integers(min_value=0, max_value=len(ALL_TOPOLOGIES) - 1),
+)
+@settings(max_examples=60, deadline=None)
+def test_exchange_schedule_equals_dense_h(m, ti):
+    """One gossip round over the exchange schedule == H @ x: the
+    compiled ppermute steps implement exactly the dense mixing matrix
+    (fp32 tolerance), for every topology and M up to 16."""
+    topo = ALL_TOPOLOGIES[ti]
+    try:
+        topo.validate(m)
+    except ValueError:
+        return
+    sched = topo.exchange_schedule(m)
+    assert sched.num_workers == m
+    for perm in sched.perms:
+        # Every worker sends and receives exactly once per step.
+        assert sorted(s for s, _ in perm) == list(range(m))
+        assert sorted(d for _, d in perm) == list(range(m))
+    rng = np.random.default_rng(m * 31 + ti)
+    x = rng.standard_normal((m, 5)).astype(np.float32)
+    want = topo.mixing_matrix(m).astype(np.float32) @ x
+    got = _apply_schedule_numpy(sched, x)
+    assert np.allclose(got, want, atol=1e-5), (topo, m)
+
+
+def test_ring_topology_matches_legacy_circular_matrix():
+    for m, d in ((5, 1), (8, 2), (9, 4), (16, 3)):
+        assert np.allclose(
+            Ring(d).mixing_matrix(m), topology.circular_mixing_matrix(m, d)
+        )
+
+
+def test_fully_connected_topology_matrix():
+    assert np.allclose(
+        FullyConnected().mixing_matrix(6),
+        topology.fully_connected_mixing_matrix(6),
+    )
+
+
+def test_topology_validation_errors():
+    with pytest.raises(ValueError, match="neighbours"):
+        Ring(2).validate(4)
+    with pytest.raises(ValueError, match="degree"):
+        Ring(0)
+    with pytest.raises(ValueError, match="torus"):
+        Torus(2, 4).validate(9)
+    with pytest.raises(ValueError, match="rows"):
+        Torus(1, 8)
+    with pytest.raises(ValueError, match="power-of-two"):
+        Hypercube().validate(6)
+    with pytest.raises(ValueError, match="radius"):
+        RandomGeometric(radius=0.0)
+    with pytest.raises(ValueError, match="nest"):
+        TimeVarying((TimeVarying((Ring(1),)),))
+    with pytest.raises(ValueError, match="phase"):
+        TimeVarying(())
+
+
+def test_edges_per_node_accounting():
+    assert Ring(2).edges_per_node() == 4            # M-free
+    assert Torus(2, 4).edges_per_node() == 3        # short axis merges +/-
+    assert Torus(3, 3).edges_per_node() == 4
+    assert Hypercube().edges_per_node(8) == 3
+    assert FullyConnected().edges_per_node(8) == 7
+    with pytest.raises(ValueError, match="num_workers"):
+        Hypercube().edges_per_node()
+    with pytest.raises(ValueError, match="num_workers"):
+        FullyConnected().edges_per_node()
+
+
+def test_fully_connected_schedule_one_round_is_mean():
+    sched = FullyConnected().exchange_schedule(8)
+    x = np.random.default_rng(0).standard_normal((8, 3)).astype(np.float32)
+    out = _apply_schedule_numpy(sched, x)
+    assert np.allclose(out, x.mean(axis=0, keepdims=True), atol=1e-6)
+
+
+def test_time_varying_cycle_product():
+    tv = TimeVarying((Ring(1), Hypercube()))
+    assert tv.cycle() == (Ring(1), Hypercube())
+    h = tv.mixing_matrix(8)
+    want = Hypercube().mixing_matrix(8) @ Ring(1).mixing_matrix(8)
+    assert np.allclose(h, want)
+    # Per-round gap sits between the phases' own gaps.
+    gap = tv.spectral_gap(8)
+    assert 0.0 < gap < 1.0
+    with pytest.raises(ValueError, match="cycle"):
+        tv.exchange_schedule(8)
+
+
+def test_birkhoff_decomposition_reconstructs_h():
+    h = topology.random_geometric_mixing_matrix(10, radius=0.4, seed=3)
+    mats, weights = topology.birkhoff_decomposition(h)
+    recon = sum(w * p for w, p in zip(weights, mats))
+    assert np.allclose(recon, h, atol=1e-8)
+    assert abs(sum(weights) - 1.0) < 1e-8
+    # And the schedule form (identity peeled into self_weight) agrees.
+    sched = topology.birkhoff_schedule(h)
+    assert np.allclose(sched.as_matrix(), h, atol=1e-8)
+
+
+def test_parse_topology_specs():
+    assert parse_topology("ring") == Ring(1)
+    assert parse_topology("ring:3") == Ring(3)
+    assert parse_topology("torus:2x4") == Torus(2, 4)
+    assert parse_topology("hypercube") == Hypercube()
+    assert parse_topology("full") == FullyConnected()
+    assert parse_topology("geometric:0.4") == RandomGeometric(radius=0.4)
+    assert parse_topology("geometric:0.4:7") == RandomGeometric(
+        radius=0.4, seed=7
+    )
+    assert parse_topology("ring:1+hypercube") == TimeVarying(
+        (Ring(1), Hypercube())
+    )
+
+
+def test_parse_topology_error_paths():
+    with pytest.raises(ValueError, match="unknown topology"):
+        parse_topology("moebius")
+    with pytest.raises(ValueError, match="bad topology spec"):
+        parse_topology("torus:8")
+    with pytest.raises(ValueError, match="bad topology spec"):
+        parse_topology("ring:two")
+    with pytest.raises(ValueError, match="bad topology spec"):
+        parse_topology("hypercube:3")
+
+
+def test_topologies_are_hashable_value_objects():
+    assert hash(Torus(2, 4)) == hash(Torus(2, 4))
+    assert Ring(2) != Ring(1)
+    assert TimeVarying((Ring(1),)) == TimeVarying((Ring(1),))
+
+
+# ------------------------------------------------------------------
+# Satellite fixes: eigvalsh on symmetric H, ValueError not assert
+# ------------------------------------------------------------------
+
+def test_check_doubly_stochastic_raises_value_error():
+    bad_rows = np.array([[0.5, 0.6], [0.5, 0.4]])
+    with pytest.raises(ValueError, match="rows do not sum"):
+        topology.check_doubly_stochastic(bad_rows)
+    with pytest.raises(ValueError, match="columns do not sum"):
+        topology.check_doubly_stochastic(bad_rows.T)
+    with pytest.raises(ValueError, match="negative"):
+        topology.check_doubly_stochastic(np.array([[1.5, -0.5], [-0.5, 1.5]]))
+    with pytest.raises(ValueError, match="square"):
+        topology.check_doubly_stochastic(np.ones((2, 3)) / 3)
+
+
+def test_spectral_gap_symmetric_uses_stable_path():
+    # Ring M=4 d=1: eigenvalues (1 + 2cos(2*pi*k/4))/3 -> gap = 2/3.
+    h = topology.circular_mixing_matrix(4, 1)
+    assert abs(topology.spectral_gap(h) - 2.0 / 3.0) < 1e-12
+    # Asymmetric (time-varying cycle product) still goes through.
+    hv = TimeVarying((Ring(1), Hypercube())).mixing_matrix(8)
+    assert not np.allclose(hv, hv.T)
+    assert 0.0 < topology.spectral_gap(hv) <= 1.0
 
 
 def test_ring_gossip_matches_dense_gossip():
