@@ -41,9 +41,26 @@ geometric) to its predicted spectral gap: per topology the predicted
 ``oracle_rel`` convergence of a fixed-round ``Gossip`` solve, and the
 eq.-15 ``bytes_per_worker`` derived from ``edges_per_node``.
 
+The ``wire`` section tracks the wire-efficient consensus engine:
+
+  schedule     compressed (ONE H^B mix via power_schedule) vs serial
+               (B hop-by-hop rounds) gossip at rounds=4 over the ring —
+               iter_ms, hops_per_mix, and the compression speedup;
+  dtypes       the same gossip under f32 / bf16 / f16 link payloads —
+               iter_ms, wire_bits-scaled bytes_per_worker, oracle_rel;
+  trace_every  traced (per-iteration psum/pmax trio) vs hot
+               (trace_every=0, policy exchanges only) solve cost.
+
+Regression gate: ``--check-regression`` (or env
+``BENCH_CHECK_REGRESSION=1``, used by the CI smoke job) loads the
+previously committed JSON before overwriting it and fails if any
+backend's ``iter_ms`` regressed more than ``BENCH_REGRESSION_FACTOR``
+(default 0.25 = +25%).
+
 Standalone (fakes an 8-device host mesh before jax initializes)::
 
     python -m benchmarks.bench_mesh [--workers 8] [--json BENCH_mesh.json]
+        [--check-regression]
 
 Under ``python -m benchmarks.run`` the harness uses whatever devices
 exist (the CI multi-device job exports XLA_FLAGS for 8).
@@ -82,10 +99,36 @@ def _torus_shape(m: int) -> tuple[int, int] | None:
     return None
 
 
+def check_regression(
+    baseline: dict, fresh: dict, threshold: float = 0.25
+) -> list[str]:
+    """Per-backend iter_ms regressions beyond ``threshold`` (fractional).
+
+    Compares every backend name present in BOTH reports; new backends
+    and removed backends never fail the gate.  Returns human-readable
+    regression descriptions (empty = pass).
+    """
+    problems = []
+    for name, base_row in baseline.get("backends", {}).items():
+        fresh_row = fresh.get("backends", {}).get(name)
+        if not fresh_row:
+            continue
+        base, new = base_row.get("iter_ms"), fresh_row.get("iter_ms")
+        if not base or not new:
+            continue
+        if new > base * (1.0 + threshold):
+            problems.append(
+                f"{name}: iter_ms {base:.4f} -> {new:.4f} "
+                f"(+{(new / base - 1) * 100:.0f}% > +{threshold * 100:.0f}%)"
+            )
+    return problems
+
+
 def run(
     verbose: bool = True,
     num_workers: int | None = None,
     json_path: str | None = DEFAULT_JSON,
+    check: bool | None = None,
 ) -> list[str]:
     import jax
     import jax.numpy as jnp
@@ -101,6 +144,17 @@ def run(
         StaleMixing,
     )
     from repro.launch.mesh import make_worker_mesh
+
+    def steady(fn, *args, repeats=5):
+        """Steady-state timing: best of ``repeats`` cached calls.  The
+        shared CI runners throttle in bursts; the min is the robust
+        estimator of the program's actual cost (and what keeps the
+        --check-regression gate meaningful at a 25% threshold)."""
+        out, best = timed(fn, *args)
+        for _ in range(repeats - 1):
+            out, dt = timed(fn, *args)
+            best = min(best, dt)
+        return out, best
 
     m = num_workers or len(jax.devices())
     n, q, k = N_FEATURES, NUM_CLASSES, ADMM_ITERS
@@ -156,7 +210,7 @@ def run(
         # Compile-once engine: one backend, executable cached across calls.
         backend = make(kind, **spec)
         res, compile_s = timed(solve, backend)    # trace + compile + run
-        res, dt = timed(solve, backend)           # steady state (cache hit)
+        res, dt = steady(solve, backend)          # steady state (cache hit)
         # Cache-off baseline: a fresh backend per call re-traces and
         # re-jits the whole worker program.  For the MESH rows this is
         # exactly the pre-engine behaviour (a per-call
@@ -212,7 +266,7 @@ def run(
             )
 
         res, compile_s = timed(layer_step, kw_shape)
-        res, dt = timed(layer_step, kw_shape)
+        res, dt = steady(layer_step, kw_shape)
         step_objs[name] = float(res.trace.objective[-1])
         report["backends"][name] = {
             "compile_s": round(compile_s, 4),
@@ -249,7 +303,7 @@ def run(
             )
 
         res, p_compile_s = timed(policy_solve)   # trace + compile + run
-        res, dt = timed(policy_solve)            # steady state (cache hit)
+        res, dt = steady(policy_solve)           # steady state (cache hit)
         nbytes = _consensus_bytes(pol, n, q, k, m)
         rel_oracle = float(
             jnp.linalg.norm(res.o_star - oracle) / jnp.linalg.norm(oracle)
@@ -317,7 +371,7 @@ def run(
             )
 
         res, t_compile_s = timed(topo_solve)     # trace + compile + run
-        res, dt = timed(topo_solve)              # steady state (cache hit)
+        res, dt = steady(topo_solve)             # steady state (cache hit)
         nbytes = _consensus_bytes(tpol, n, q, k, m)
         gap = topo.spectral_gap(m)
         rel_oracle = float(
@@ -341,6 +395,97 @@ def run(
         ))
         if verbose:
             print(rows[-1], flush=True)
+
+    # Wire-efficient consensus: compressed-vs-serial schedules, low-
+    # precision wire formats, and the collective-free hot path.  The
+    # schedule/dtype rows run trace_every=0 — the production hot path
+    # this engine ships — so the exchange schedule dominates what's
+    # measured rather than the trace psum/pmax trio.
+    report["wire"] = {}
+    wire_backend = make("mesh")
+
+    def wire_solve(pol, trace_every=0):
+        return admm.admm_ridge_consensus(
+            yw, tw, mu=1e-2, eps_radius=eps, num_iters=k,
+            backend=wire_backend, policy=pol, trace_every=trace_every,
+        )
+
+    if degree >= 1:
+        # (1) schedule compression: ONE H^B mix vs B serial rounds.
+        sched_rows = {}
+        for tag, pol in (
+            ("serial", RingGossip(rounds=GOSSIP_ROUNDS, degree=degree,
+                                  compress=False)),
+            ("compressed", RingGossip(rounds=GOSSIP_ROUNDS, degree=degree)),
+        ):
+            res, w_compile_s = timed(wire_solve, pol)
+            res, dt = steady(wire_solve, pol)
+            rel_oracle = float(
+                jnp.linalg.norm(res.o_star - oracle) / jnp.linalg.norm(oracle)
+            )
+            sched_rows[tag] = {
+                "policy": pol.describe(),
+                "compile_s": round(w_compile_s, 4),
+                "iter_ms": round(dt / k * 1e3, 4),
+                "hops_per_mix": pol.hops_for(m),
+                "oracle_rel": rel_oracle,
+            }
+            rows.append(csv_row(
+                f"mesh_wire_schedule_{tag}", dt * 1e6,
+                f"M={m};iter_us={dt / k * 1e6:.1f};"
+                f"hops={pol.hops_for(m)};oracle_rel={rel_oracle:.2e}",
+            ))
+            if verbose:
+                print(rows[-1], flush=True)
+        sched_rows["speedup"] = round(
+            sched_rows["serial"]["iter_ms"]
+            / max(sched_rows["compressed"]["iter_ms"], 1e-9), 2
+        )
+        sched_rows["gossip_rounds"] = GOSSIP_ROUNDS
+        report["wire"]["schedule"] = sched_rows
+
+        # (2) low-precision wire formats on the same gossip schedule.
+        dtype_rows = {}
+        for wd in ("float32", "bfloat16", "float16"):
+            pol = RingGossip(rounds=GOSSIP_ROUNDS, degree=degree, wire_dtype=wd)
+            res, w_compile_s = timed(wire_solve, pol)
+            res, dt = steady(wire_solve, pol)
+            nbytes = _consensus_bytes(pol, n, q, k, m)
+            rel_oracle = float(
+                jnp.linalg.norm(res.o_star - oracle) / jnp.linalg.norm(oracle)
+            )
+            dtype_rows[wd] = {
+                "iter_ms": round(dt / k * 1e3, 4),
+                "wire_bits": pol.wire_bits,
+                "bytes_per_worker": nbytes,
+                "oracle_rel": rel_oracle,
+            }
+            rows.append(csv_row(
+                f"mesh_wire_dtype_{wd}", dt * 1e6,
+                f"M={m};iter_us={dt / k * 1e6:.1f};comm_bytes={nbytes};"
+                f"wire_bits={pol.wire_bits};oracle_rel={rel_oracle:.2e}",
+            ))
+            if verbose:
+                print(rows[-1], flush=True)
+        report["wire"]["dtypes"] = dtype_rows
+
+    # (3) collective-free hot path: trace_every=0 drops the per-iteration
+    # psum/pmax trio (and the cerr probe) from the lowered program.
+    hot_rows = {}
+    for tag, te in (("traced", 1), ("hot", 0)):
+        res, w_compile_s = timed(wire_solve, ExactMean(), te)
+        res, dt = steady(wire_solve, ExactMean(), te)
+        hot_rows[f"{tag}_iter_ms"] = round(dt / k * 1e3, 4)
+        rows.append(csv_row(
+            f"mesh_wire_trace_{tag}", dt * 1e6,
+            f"M={m};iter_us={dt / k * 1e6:.1f};trace_every={te}",
+        ))
+        if verbose:
+            print(rows[-1], flush=True)
+    hot_rows["speedup"] = round(
+        hot_rows["traced_iter_ms"] / max(hot_rows["hot_iter_ms"], 1e-9), 2
+    )
+    report["wire"]["trace_every"] = hot_rows
 
     # Centralized-equivalence parity: same mode, different runtime.
     report["parity"] = {}
@@ -368,6 +513,38 @@ def run(
     report["legacy_iter_ms"] = headline["legacy_iter_ms"]
     report["bytes_per_worker"] = headline["bytes_per_worker"]
 
+    if check is None:
+        check = os.environ.get("BENCH_CHECK_REGRESSION", "") not in ("", "0")
+    baseline = None
+    if check and json_path and os.path.exists(json_path):
+        with open(json_path) as f:
+            baseline = json.load(f)
+
+    if baseline is not None:
+        # Gate BEFORE overwriting: a failed run must leave the committed
+        # baseline intact (else an immediate re-run would compare against
+        # the regressed numbers and pass silently).  The fresh report
+        # still lands next to it for inspection.
+        threshold = float(os.environ.get("BENCH_REGRESSION_FACTOR", "0.25"))
+        problems = check_regression(baseline, report, threshold)
+        if problems:
+            rejected = json_path + ".rejected"
+            with open(rejected, "w") as f:
+                json.dump(report, f, indent=2)
+            raise SystemExit(
+                f"benchmark regression vs committed {json_path} "
+                f"(fresh results written to {rejected}, baseline kept):\n  "
+                + "\n  ".join(problems)
+            )
+        if verbose:
+            print(
+                f"# regression gate OK (no backend iter_ms regressed "
+                f">{threshold * 100:.0f}% vs committed {json_path})",
+                flush=True,
+            )
+    elif check and verbose:
+        print("# regression gate skipped: no committed baseline", flush=True)
+
     if json_path:
         with open(json_path, "w") as f:
             json.dump(report, f, indent=2)
@@ -382,13 +559,23 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--json", default=DEFAULT_JSON, help="output JSON path")
+    ap.add_argument(
+        "--check-regression",
+        action="store_true",
+        help="compare fresh results against the committed JSON (read "
+        "before overwriting) and exit non-zero if any backend's iter_ms "
+        "regressed more than BENCH_REGRESSION_FACTOR (default +25%%)",
+    )
     args = ap.parse_args()
     flags = os.environ.get("XLA_FLAGS", "")
     if "--xla_force_host_platform_device_count" not in flags:
         os.environ["XLA_FLAGS"] = (
             f"{flags} --xla_force_host_platform_device_count={args.workers}".strip()
         )
-    run(num_workers=args.workers, json_path=args.json)
+    run(
+        num_workers=args.workers, json_path=args.json,
+        check=args.check_regression or None,
+    )
 
 
 if __name__ == "__main__":

@@ -64,7 +64,7 @@ class ADMMResult(NamedTuple):
     o_star: Array   # (Q, n) final consensus solution Z^K
     o_workers: Array
     lam: Array
-    trace: ADMMTrace
+    trace: "ADMMTrace | None"   # None when trace_every=0 (hot path)
 
 
 def _worker_stats(y_workers: Array, t_workers: Array, mu: float, use_kernels: bool = False):
@@ -110,6 +110,7 @@ def admm_ridge_consensus(
     policy: ConsensusPolicy | None = None,
     z0: Array | None = None,
     use_kernels: bool = False,
+    trace_every: int = 1,
 ) -> ADMMResult:
     """Run K iterations of consensus ADMM (paper Algorithm 1, lines 5-10).
 
@@ -132,6 +133,10 @@ def admm_ridge_consensus(
         with ``backend``/``policy``; ring topologies should prefer a
         gossip-policy backend, which expresses the same mixing as peer
         exchanges.
+    trace_every: convergence-trace stride (``worker_admm_iterations``):
+        1 = per-iteration traces (default), 0 = no traces and NO
+        trace collectives in the lowered program (``result.trace`` is
+        None), N > 1 = every N-th iteration.  Backend path only.
     """
     if consensus_fn is not None and (backend is not None or policy is not None):
         raise ValueError("pass either consensus_fn or backend/policy, not both")
@@ -150,6 +155,12 @@ def admm_ridge_consensus(
             num_iters=num_iters,
             z0=z0,
             use_kernels=use_kernels,
+            trace_every=trace_every,
+        )
+    if trace_every != 1:
+        raise ValueError(
+            "trace_every is a backend-path knob; the legacy consensus_fn "
+            "simulation always traces every iteration"
         )
     m, n = y_workers.shape[0], y_workers.shape[1]
     q = t_workers.shape[1]
@@ -210,6 +221,24 @@ def _worker_stats_local(y_m: Array, t_m: Array, mu: float, use_kernels: bool):
     return a, chol
 
 
+def validate_trace_every(trace_every: int, num_iters: int) -> int:
+    """Validate the trace-collection stride (shared by every entry point).
+
+    ``1`` traces every ADMM iteration (the default), ``0`` disables
+    trace collection entirely, ``N > 1`` traces every N-th iteration and
+    requires ``num_iters % N == 0`` (traces are emitted at iterations
+    N, 2N, ..., K).
+    """
+    trace_every = int(trace_every)
+    if trace_every < 0:
+        raise ValueError(f"trace_every must be >= 0, got {trace_every}")
+    if trace_every > 1 and num_iters % trace_every != 0:
+        raise ValueError(
+            f"trace_every={trace_every} must divide num_iters={num_iters}"
+        )
+    return trace_every
+
+
 def worker_admm_iterations(
     backend: "ConsensusBackend",
     a: Array,
@@ -222,6 +251,7 @@ def worker_admm_iterations(
     eps_radius: float,
     num_iters: int,
     policy: ConsensusPolicy | None = None,
+    trace_every: int = 1,
 ):
     """K eq.-11 iterations as a worker-local scan over the cached factor.
 
@@ -232,18 +262,38 @@ def worker_admm_iterations(
     keys, staleness buffers — rides in the scan carry.  Each worker
     evaluates the objective against its OWN consensus estimate Z_m (they
     coincide under exact consensus).
-    Returns ``(o, z, lam), (objs, primals, duals, cerrs)``.
+
+    ``trace_every`` gates the convergence traces: every trace scalar
+    costs collectives (``psum`` objective, ``psum`` primal, and — for
+    inexact policies — an ``exact_mean``+``pmax`` consensus-error probe),
+    so ``trace_every=0`` drops them all and the lowered program contains
+    ONLY the policy's own exchanges (the production hot path; the final
+    iterate is bit-identical since no trace value feeds the carry).
+    ``N > 1`` traces every N-th iteration (K/N-long traces).
+
+    Returns ``(o, z, lam), traces`` where ``traces`` is the
+    ``(objs, primals, duals, cerrs)`` tuple, or ``None`` when
+    ``trace_every=0``.
     """
     policy = policy if policy is not None else backend.policy
+    trace_every = validate_trace_every(trace_every, num_iters)
     ctx = backend.ctx()
     q, n = a.shape
     dtype = a.dtype
 
-    def step(carry, _):
+    def iterate(carry):
+        """One eq.-11 iteration; also returns what tracing needs."""
         (_, z, lam), pstate = carry
         rhs = a + (z - lam) / mu
         o = jax.scipy.linalg.cho_solve((chol, True), rhs.T).T
         avg, pstate = policy.mix(o + lam, pstate, ctx)
+        z_new = project_frobenius(avg, eps_radius)
+        lam_new = lam + o - z_new
+        return ((o, z_new, lam_new), pstate), (avg, z)
+
+    def trace(carry, avg, z_prev):
+        """The collective trio the hot path omits (plus the local dual)."""
+        ((o, z_new, _), _) = carry
         if policy.is_exact:
             # avg IS the pmean: the deviation is zero by construction,
             # and computing it would cost two extra collectives per
@@ -251,16 +301,42 @@ def worker_admm_iterations(
             cerr = jnp.zeros((), avg.dtype)
         else:
             cerr = backend.pmax(jnp.max(jnp.abs(avg - backend.exact_mean(avg))))
-        z_new = project_frobenius(avg, eps_radius)
-        lam_new = lam + o - z_new
         obj = backend.psum(jnp.sum((t_m - z_new @ y_m) ** 2))
         primal = jnp.sqrt(backend.psum(jnp.sum((o - z_new) ** 2)))
-        dual = jnp.linalg.norm(z_new - z)
-        return ((o, z_new, lam_new), pstate), (obj, primal, dual, cerr)
+        dual = jnp.linalg.norm(z_new - z_prev)
+        return (obj, primal, dual, cerr)
+
+    def step_untraced(carry, _):
+        carry, _ = iterate(carry)
+        return carry, None
+
+    def step_traced(carry, _):
+        carry, (avg, z_prev) = iterate(carry)
+        return carry, trace(carry, avg, z_prev)
 
     zeros = jnp.zeros((q, n), dtype)
     init = ((zeros, z_init, zeros), policy.init_state(zeros, ctx))
-    (state, _), traces = jax.lax.scan(step, init, None, length=num_iters)
+    if trace_every == 0:
+        (state, _), _ = jax.lax.scan(
+            step_untraced, init, None, length=num_iters
+        )
+        return state, None
+    if trace_every == 1:
+        (state, _), traces = jax.lax.scan(
+            step_traced, init, None, length=num_iters
+        )
+        return state, traces
+
+    def chunk(carry, _):
+        # trace_every - 1 collective-free iterations, then one traced.
+        carry, _ = jax.lax.scan(
+            step_untraced, carry, None, length=trace_every - 1
+        )
+        return step_traced(carry, None)
+
+    (state, _), traces = jax.lax.scan(
+        chunk, init, None, length=num_iters // trace_every
+    )
     return state, traces
 
 
@@ -275,6 +351,7 @@ def _admm_backend_path(
     z0: Array | None,
     use_kernels: bool,
     policy: ConsensusPolicy | None = None,
+    trace_every: int = 1,
 ) -> ADMMResult:
     """Eq.-11 iteration as a worker-local SPMD program.
 
@@ -292,6 +369,7 @@ def _admm_backend_path(
         )
     policy = policy if policy is not None else backend.policy
     policy.validate(backend.num_workers)
+    trace_every = validate_trace_every(trace_every, num_iters)
     q, n = t_workers.shape[1], y_workers.shape[1]
     dtype = y_workers.dtype
     z_init = jnp.zeros((q, n), dtype) if z0 is None else z0.astype(dtype)
@@ -301,16 +379,23 @@ def _admm_backend_path(
         return worker_admm_iterations(
             backend, a, chol, y_m, t_m, z_init_rep,
             mu=mu, eps_radius=eps_radius, num_iters=num_iters, policy=policy,
+            trace_every=trace_every,
         )
 
+    # trace_every changes the traced output pytree (no trace leaves at
+    # 0, K/N-long leaves at N>1), so it must key the executable cache.
     cache_key = (
-        "admm_ridge", float(mu), float(eps_radius), int(num_iters), bool(use_kernels)
+        "admm_ridge", float(mu), float(eps_radius), int(num_iters),
+        bool(use_kernels), trace_every,
     )
-    (o_w, z_w, lam_w), (objs, primals, duals, cerrs) = backend.run(
+    (o_w, z_w, lam_w), traces = backend.run(
         worker, y_workers, t_workers, replicated=(z_init,), key=cache_key,
         policy=policy,
     )
-    trace = ADMMTrace(objs[0], primals[0], duals[0], cerrs[0])
+    trace = None
+    if traces is not None:
+        objs, primals, duals, cerrs = traces
+        trace = ADMMTrace(objs[0], primals[0], duals[0], cerrs[0])
     return ADMMResult(o_star=z_w[0], o_workers=o_w, lam=lam_w, trace=trace)
 
 

@@ -229,9 +229,10 @@ class ConsensusBackend(abc.ABC):
     # ------------------------------------------------------------------
     # Executable cache
     # ------------------------------------------------------------------
-    def _cached_call(
+    def _lookup_executable(
         self, fn, stacked_args, replicated, key, donate, collective, policy=None
     ):
+        """The jitted callable for this program, via the FIFO cache."""
         self._check_stacked(stacked_args)
         donate = tuple(sorted(donate))
         if any(i < 0 or i >= len(stacked_args) for i in donate):
@@ -241,30 +242,77 @@ class ConsensusBackend(abc.ABC):
             # into the first trace; keep the pre-cache per-call semantics
             # for this pattern (callers wanting the cache pass arrays as
             # operands with an explicit key — see the module docstring).
+            return self._build_executable(
+                fn, len(stacked_args), len(replicated), donate, collective
+            )
+        cache_key = (
+            key if key is not None else fn,
+            len(stacked_args),
+            len(replicated),
+            donate,
+            collective,
+            policy,
+        )
+        jitted = self._exec_cache.get(cache_key)
+        if jitted is None:
             jitted = self._build_executable(
                 fn, len(stacked_args), len(replicated), donate, collective
             )
+            self._exec_cache[cache_key] = jitted
+            while len(self._exec_cache) > _EXEC_CACHE_SIZE:
+                self._exec_cache.popitem(last=False)
         else:
-            cache_key = (
-                key if key is not None else fn,
-                len(stacked_args),
-                len(replicated),
-                donate,
-                collective,
-                policy,
-            )
-            jitted = self._exec_cache.get(cache_key)
-            if jitted is None:
-                jitted = self._build_executable(
-                    fn, len(stacked_args), len(replicated), donate, collective
-                )
-                self._exec_cache[cache_key] = jitted
-                while len(self._exec_cache) > _EXEC_CACHE_SIZE:
-                    self._exec_cache.popitem(last=False)
-            else:
-                self.cache_hits += 1
+            self.cache_hits += 1
+        return jitted
+
+    def _cached_call(
+        self, fn, stacked_args, replicated, key, donate, collective, policy=None
+    ):
+        jitted = self._lookup_executable(
+            fn, stacked_args, replicated, key, donate, collective, policy
+        )
         args = tuple(self.shard_workers(a) for a in stacked_args)
         return jitted(*args, *self._place_replicated(replicated))
+
+    def lowering_stats(
+        self,
+        fn: Callable[..., Any],
+        *stacked_args: Array,
+        replicated: tuple = (),
+        key: Hashable | None = None,
+        donate: tuple[int, ...] = (),
+        policy: ConsensusPolicy | None = None,
+    ) -> dict:
+        """Compile the worker program WITHOUT running it and report what
+        the lowering actually contains.
+
+        Returns ``{"collective_counts": {op: count}, "collective_wire_bytes":
+        float, "flops": float}`` from the compiled (post-SPMD) HLO via
+        ``repro.launch.hlo_analysis`` — counts include while-loop trip
+        multipliers, so a K-iteration ADMM scan with one all-reduce per
+        iteration reports ``K`` all-reduces.  This is the assertion
+        surface for the collective-free hot path: a ``trace_every=0``
+        program must contain only the policy's own exchanges.
+
+        Collectives resolve to HLO ops only under :class:`MeshBackend`
+        (vmap's named-axis collectives are traced away); call it on the
+        mesh backend you intend to run on.  Shares the executable cache
+        with :meth:`run` — same arguments, same cached jit object.
+        """
+        from repro.launch.hlo_analysis import analyze_module
+
+        jitted = self._lookup_executable(
+            fn, stacked_args, replicated, key, donate, collective=True,
+            policy=policy,
+        )
+        args = tuple(self.shard_workers(a) for a in stacked_args)
+        compiled = jitted.lower(*args, *self._place_replicated(replicated)).compile()
+        analysis = analyze_module(compiled.as_text())
+        return {
+            "collective_counts": analysis.collective_counts(),
+            "collective_wire_bytes": analysis.collective_wire_bytes,
+            "flops": analysis.flops,
+        }
 
     def _count_trace(self) -> None:
         # Runs at trace time only: executions served from jit's dispatch

@@ -27,8 +27,8 @@ This module holds the *reference implementations*; how they are selected
 and composed per training run is the job of the ``ConsensusPolicy``
 strategy objects in ``repro.core.policy`` (``ExactMean``, ``RingGossip``,
 ``QuantizedGossip``, ``LossyGossip``, ``StaleMixing``), which call back
-into these primitives.  The SPMD-side extras — the lossy ring hop and the
-stochastic quantizer — live here for the same reason.
+into these primitives.  The SPMD-side extras — the lossy schedule hop and
+the stochastic quantizer — live here for the same reason.
 
 ``make_consensus_fn`` (the legacy batched dense-H factory) is deprecated:
 prefer a policy plus a backend, which run the identical mixing as peer
@@ -103,12 +103,33 @@ def ring_gossip_average(
     return jax.lax.fori_loop(0, num_rounds, body, x)
 
 
+#: Wire widths the low-precision gossip link formats support (bits per
+#: exchanged scalar, the eq.-15 ``wire_bits`` of a wire_dtype policy).
+WIRE_DTYPES = {"float32": 32, "bfloat16": 16, "float16": 16}
+
+#: Spec-grammar shorthands (``--wire-dtype bf16``).
+_WIRE_ALIASES = {"f32": "float32", "bf16": "bfloat16", "f16": "float16"}
+
+
+def canonical_wire_dtype(name: str) -> str:
+    """Normalize a wire-dtype spec (``f32/bf16/f16`` or the full jax
+    dtype names) to the canonical dtype string, or raise ValueError."""
+    full = _WIRE_ALIASES.get(name, name)
+    if full not in WIRE_DTYPES:
+        raise ValueError(
+            f"unknown wire dtype {name!r}; expected one of "
+            f"{sorted(WIRE_DTYPES)} (or {sorted(_WIRE_ALIASES)})"
+        )
+    return full
+
+
 def schedule_gossip_step(
     x: jax.Array,
     axis_name: str,
     schedule,
     *,
     self_value: jax.Array | None = None,
+    wire_dtype: str | None = None,
 ) -> jax.Array:
     """One gossip round of an arbitrary doubly-stochastic H, expressed as
     the static ppermute steps of a ``topology.ExchangeSchedule``:
@@ -121,8 +142,23 @@ def schedule_gossip_step(
     equal-weight schedules (the paper's h_ij = 1/|N_i| rule) take the
     sum-then-divide path, which reproduces ``ring_gossip_step``'s float
     ops exactly — the bit-identity guarantee for ``Ring`` topologies.
+
+    ``wire_dtype`` (``"bfloat16"``/``"float16"``) narrows the WIRE only:
+    the outgoing payload is cast once before the hops, every received
+    message is widened back and accumulated in the input precision, and
+    the worker's own contribution never leaves full precision.  None (or
+    ``"float32"``) keeps the bit-identical full-width path.
     """
     own = x if self_value is None else self_value
+    if wire_dtype is not None and wire_dtype != str(x.dtype):
+        wire = x.astype(wire_dtype)
+        # Narrow links always take the weighted form: the sum-then-divide
+        # shortcut would accumulate at wire precision.
+        acc = jnp.asarray(schedule.self_weight, own.dtype) * own
+        for perm, w in zip(schedule.perms, schedule.weights):
+            msg = jax.lax.ppermute(wire, axis_name, perm).astype(own.dtype)
+            acc = acc + w * msg
+        return acc
     if schedule.uniform:
         acc = own
         for perm in schedule.perms:
@@ -135,11 +171,18 @@ def schedule_gossip_step(
 
 
 def schedule_gossip_average(
-    x: jax.Array, axis_name: str, schedule, num_rounds: int
+    x: jax.Array,
+    axis_name: str,
+    schedule,
+    num_rounds: int,
+    *,
+    wire_dtype: str | None = None,
 ) -> jax.Array:
     """B rounds of exchange-schedule gossip inside an SPMD region."""
     def body(_, val):
-        return schedule_gossip_step(val, axis_name, schedule)
+        return schedule_gossip_step(
+            val, axis_name, schedule, wire_dtype=wire_dtype
+        )
 
     # The permutation tables are static, so a python-level loop inside
     # the fori_loop body is fine (same pattern as ring_gossip_average).
@@ -153,59 +196,27 @@ def lossy_schedule_gossip_step(
     *,
     drop_prob: float,
     key: jax.Array,
+    wire_dtype: str | None = None,
 ) -> jax.Array:
     """One exchange-schedule gossip round over a lossy network: each
     incoming step fails independently with probability ``drop_prob`` and
     the receiver renormalizes its mixing row over the surviving weights
-    (the self term never drops) — the generalization of
-    :func:`lossy_ring_gossip_step` to arbitrary topologies.  ``key`` must
-    be a per-worker key (each node observes its own link failures)."""
+    (the self term never drops; ``drop_prob=0`` reduces to
+    :func:`schedule_gossip_step` up to float association).  ``key`` must
+    be a per-worker key (each node observes its own link failures).
+    ``wire_dtype`` narrows the link payloads as in
+    :func:`schedule_gossip_step` (receive widens back to ``x.dtype``)."""
     keys = jax.random.split(key, max(len(schedule.perms), 1))
+    wire = x if wire_dtype is None else x.astype(wire_dtype)
     self_w = jnp.asarray(schedule.self_weight, x.dtype)
     acc = self_w * x
     wsum = self_w
     for i, (perm, w) in enumerate(zip(schedule.perms, schedule.weights)):
-        msg = jax.lax.ppermute(x, axis_name, perm)
+        msg = jax.lax.ppermute(wire, axis_name, perm).astype(x.dtype)
         alive = jax.random.bernoulli(keys[i], 1.0 - drop_prob).astype(x.dtype)
         acc = acc + alive * w * msg
         wsum = wsum + alive * w
     return acc / wsum
-
-
-def lossy_ring_gossip_step(
-    x: jax.Array,
-    axis_name: str,
-    *,
-    degree: int,
-    num_nodes: int,
-    drop_prob: float,
-    key: jax.Array,
-) -> jax.Array:
-    """One degree-d ring gossip round where each incoming link fails
-    independently with probability ``drop_prob``.
-
-    The receiver renormalizes its equal-weight mixing row over surviving
-    links (the self-link never drops), preserving row-stochasticity —
-    the same failure model as the old batched ``lossy_gossip_average``
-    but expressed with collectives, so it runs under both backends.
-    ``key`` must be a per-worker key (each node observes its own link
-    failures); ``drop_prob=0`` reduces to :func:`ring_gossip_step`.
-    """
-    num_links = 2 * degree
-    keys = jax.random.split(key, num_links)
-    acc = x
-    count = jnp.ones((), x.dtype)  # self-link
-    i = 0
-    for k in range(1, degree + 1):
-        fwd = [(s, (s + k) % num_nodes) for s in range(num_nodes)]
-        bwd = [(s, (s - k) % num_nodes) for s in range(num_nodes)]
-        for perm in (fwd, bwd):
-            msg = jax.lax.ppermute(x, axis_name, perm)
-            alive = jax.random.bernoulli(keys[i], 1.0 - drop_prob).astype(x.dtype)
-            acc = acc + alive * msg
-            count = count + alive
-            i += 1
-    return acc / count
 
 
 def quantize_stochastic(x: jax.Array, bits: int, key: jax.Array) -> jax.Array:

@@ -49,7 +49,9 @@ class LayerStepResult(NamedTuple):
     o_workers: Array  # (M, Q, n) per-worker primal variables
     lam: Array        # (M, Q, n) scaled duals
     y_workers: Array  # (M, n, J_m) this layer's features (post-propagation)
-    trace: admm_lib.ADMMTrace  # (K,) device-resident worker-0 traces
+    #: (K/trace_every,) device-resident worker-0 traces; None when
+    #: trace_every=0 (the collective-free hot path).
+    trace: "admm_lib.ADMMTrace | None"
 
 
 def _aligned(*dims: int) -> bool:
@@ -88,6 +90,7 @@ def fused_layer_step(
     use_kernels: bool = False,
     donate_y: bool = False,
     policy: ConsensusPolicy | None = None,
+    trace_every: int = 1,
 ) -> LayerStepResult:
     """One dSSFN layer as a single cached SPMD program.
 
@@ -107,6 +110,12 @@ def fused_layer_step(
         Gossip-family policies carry their ``Topology``, so the graph's
         exchange schedule is compiled into this fused program and two
         policies differing only in topology get distinct executables.
+    trace_every: convergence-trace stride for the ADMM scan
+        (``admm.worker_admm_iterations``): 1 = per-iteration traces
+        (default), 0 = the collective-free hot path (``result.trace`` is
+        None and the program contains only the policy's own exchanges),
+        N > 1 = every N-th iteration.  Part of the cache key — the value
+        changes the lowered program's output pytree.
 
     The executable cache key covers every closed-over trace-affecting
     value; W is an operand, so the (n, n)-shaped program compiled for
@@ -119,6 +128,7 @@ def fused_layer_step(
         )
     policy = policy if policy is not None else backend.policy
     policy.validate(backend.num_workers)
+    trace_every = admm_lib.validate_trace_every(trace_every, num_iters)
 
     def worker(y_m: Array, t_m: Array, *w_rep: Array):
         if w_rep:
@@ -132,6 +142,7 @@ def fused_layer_step(
         (o, z, lam), traces = admm_lib.worker_admm_iterations(
             backend, a, chol, y_m, t_m, z_init,
             mu=mu, eps_radius=eps_radius, num_iters=num_iters, policy=policy,
+            trace_every=trace_every,
         )
         return (o, z, lam, y_m), traces
 
@@ -142,8 +153,9 @@ def fused_layer_step(
         int(num_iters),
         bool(use_kernels),
         w is not None,
+        trace_every,
     )
-    (o_w, z_w, lam_w, y_next), (objs, primals, duals, cerrs) = backend.run(
+    (o_w, z_w, lam_w, y_next), traces = backend.run(
         worker,
         y_workers,
         t_workers,
@@ -152,7 +164,10 @@ def fused_layer_step(
         donate=(0,) if donate_y else (),
         policy=policy,
     )
-    trace = admm_lib.ADMMTrace(objs[0], primals[0], duals[0], cerrs[0])
+    trace = None
+    if traces is not None:
+        objs, primals, duals, cerrs = traces
+        trace = admm_lib.ADMMTrace(objs[0], primals[0], duals[0], cerrs[0])
     return LayerStepResult(
         o_star=z_w[0], o_workers=o_w, lam=lam_w, y_workers=y_next, trace=trace
     )

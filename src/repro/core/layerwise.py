@@ -40,8 +40,10 @@ Array = jax.Array
 
 @dataclass
 class LayerwiseLog:
-    layer_costs: list[float]            # objective after each layer solve
-    admm_objective: np.ndarray          # (L+1, K) full trace (paper Fig. 3)
+    #: Objective after each layer solve; EMPTY when trace collection is
+    #: disabled (``trace_every=0`` — the collective-free hot path).
+    layer_costs: list[float]
+    admm_objective: np.ndarray          # (L+1, K/N) trace (paper Fig. 3)
     admm_primal: np.ndarray
     admm_dual: np.ndarray
     consensus_error: np.ndarray
@@ -64,6 +66,7 @@ def train_decentralized_ssfn(
     policy: ConsensusPolicy | None = None,
     gossip_rounds: int = 1,
     size_estimation_tol: float | None = None,
+    trace_every: int = 1,
 ) -> tuple[ssfn_lib.SSFNParams, LayerwiseLog]:
     """Train dSSFN on M workers.
 
@@ -92,10 +95,27 @@ def train_decentralized_ssfn(
         tolerance.  The decision uses the consensus objective every worker
         already tracks, so all workers stop at the same depth with NO extra
         communication.  None = fixed size (cfg.num_layers, paper §II).
+    trace_every: convergence-trace stride (``engine.fused_layer_step``):
+        1 = per-iteration ADMM traces (default), 0 = the collective-free
+        hot path — the lowered layer programs contain ONLY the policy's
+        own exchanges, and the log carries empty traces/layer_costs —
+        N > 1 = every N-th iteration.  ``trace_every=0`` is incompatible
+        with ``size_estimation_tol`` (the stop rule reads the consensus
+        objective).
     """
     if consensus_fn is not None and (backend is not None or policy is not None):
         raise ValueError("pass either consensus_fn or backend/policy, not both")
+    if trace_every == 0 and size_estimation_tol is not None:
+        raise ValueError(
+            "size_estimation_tol reads the per-layer consensus objective; "
+            "it cannot be combined with trace_every=0 (no traces)"
+        )
     if consensus_fn is not None:
+        if trace_every != 1:
+            raise ValueError(
+                "trace_every is a backend-path knob; the legacy "
+                "consensus_fn simulation always traces every iteration"
+            )
         return _train_consensus_fn_path(
             x_workers, t_workers, cfg, key,
             consensus_fn=consensus_fn,
@@ -140,6 +160,7 @@ def train_decentralized_ssfn(
             num_iters=cfg.admm_iters,
             use_kernels=cfg.use_kernels,
             policy=policy,
+            trace_every=trace_every,
             # From layer 2 on, the stacked Y is a fresh relu(W@Y) buffer
             # the engine owns — safe to hand to XLA.  Layers 0 and 1 must
             # NOT donate: layer 0's input is the caller's x_workers, and
@@ -148,7 +169,8 @@ def train_decentralized_ssfn(
         )
         y_workers = step.y_workers
         o_list.append(step.o_star)
-        dev_traces.append(step.trace)
+        if step.trace is not None:
+            dev_traces.append(step.trace)
         # Communication accounting, eq. 15: Q * n_{l-1} scalars per exchange,
         # B exchanges per consensus, K consensus rounds per layer.
         comm += q * y_workers.shape[1] * exchanges * cfg.admm_iters
@@ -169,18 +191,25 @@ def train_decentralized_ssfn(
         if layer < cfg.num_layers:
             w_next = ssfn_lib.build_weight(step.o_star, r_list[layer], q)
 
-    # One bulk fetch of every per-layer trace after the loop.
+    # One bulk fetch of every per-layer trace after the loop.  The
+    # collective-free hot path (trace_every=0) has none: the log carries
+    # empty (L+1, 0) trace arrays and no layer costs.
     traces = [jax.tree.map(np.asarray, tr) for tr in dev_traces]
     layer_costs = [float(tr.objective[-1]) for tr in traces]
+
+    def stacked(field: str) -> np.ndarray:
+        if not traces:
+            return np.zeros((len(o_list), 0), np.float32)
+        return np.stack([getattr(tr, field) for tr in traces])
 
     # Early size-estimation stop leaves fewer readouts than random matrices.
     params = ssfn_lib.SSFNParams(o=tuple(o_list), r=r_list[: len(o_list) - 1])
     log = LayerwiseLog(
         layer_costs=layer_costs,
-        admm_objective=np.stack([tr.objective for tr in traces]),
-        admm_primal=np.stack([tr.primal_residual for tr in traces]),
-        admm_dual=np.stack([tr.dual_residual for tr in traces]),
-        consensus_error=np.stack([tr.consensus_error for tr in traces]),
+        admm_objective=stacked("objective"),
+        admm_primal=stacked("primal_residual"),
+        admm_dual=stacked("dual_residual"),
+        consensus_error=stacked("consensus_error"),
         wall_time_s=time.perf_counter() - t0,
         comm_scalars=comm,
     )

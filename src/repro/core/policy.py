@@ -24,12 +24,18 @@ Shipped policies
 policy                              exchanges/round                 wire bits
 ==================================  ==============================  ==========
 ``ExactMean()``                     1 (one all-reduce)              32
-``Gossip(rounds, topology)``        rounds * topology edges         32
-``RingGossip(rounds, degree)``      2 * degree * rounds             32
+``Gossip(rounds, topology)``        rounds * topology edges         32/16
+``RingGossip(rounds, degree)``      2 * degree * rounds             32/16
 ``QuantizedGossip(bits, ...)``      1 (or rounds * edges)           ``bits``
-``LossyGossip(drop_prob, ...)``     2 * degree * rounds             32
-``StaleMixing(delay, ...)``         1 (or topology edges)           32
+``LossyGossip(drop_prob, ...)``     rounds * topology edges         32/16
+``StaleMixing(delay, ...)``         1 (or topology edges)           32/16
 ==================================  ==============================  ==========
+
+Wire efficiency: gossip-family policies take ``wire_dtype=`` (f32 /
+bf16 / f16 link payloads, accumulated in full precision — ``wire_bits``
+and the eq.-15 byte accounting track it), and plain ``Gossip`` compiles
+its B rounds into ONE H^B mix by default (``compress=True``; see
+:meth:`repro.core.topology.Topology.power_schedule`).
 
 ``ExactMean`` is the B -> infinity limit (bit-identical to the old
 ``mode='exact'``).  ``Gossip`` is the paper's H-matrix gossip over a
@@ -69,6 +75,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import consensus as consensus_lib
+from repro.core import topology as topology_lib
 from repro.core.topology import Ring, Topology, parse_topology
 
 Array = jax.Array
@@ -206,8 +213,13 @@ def _cycle_exchanges(
 
 
 def _cycle_schedules(topology: Topology, ctx: ConsensusContext) -> list:
-    """Per-round exchange schedules; round b uses schedules[b % L]."""
-    return [t.exchange_schedule(ctx.num_workers) for t in topology.cycle()]
+    """Per-round exchange schedules; round b uses schedules[b % L]
+    (memoized — irregular graphs pay a Birkhoff decomposition per
+    schedule construction, and these run at trace time)."""
+    return [
+        topology_lib.cached_exchange_schedule(t, ctx.num_workers)
+        for t in topology.cycle()
+    ]
 
 
 # --------------------------------------------------------------- exact
@@ -243,10 +255,27 @@ class Gossip(ConsensusPolicy):
     graphs run through exactly the in-program peer-exchange path the
     paper's ring did, on both backends.  ``TimeVarying`` topologies cycle
     one sub-schedule per round.
+
+    ``compress=True`` (default) collapses the B serial rounds into ONE
+    mix with the precomputed power matrix H^B, compiled through the
+    Birkhoff-von-Neumann path (:meth:`Topology.power_schedule`): the
+    program executes ~|support(H^B)| weighted ppermute hops instead of
+    B x edges sequential ones.  The result equals ``H**B @ x`` up to
+    float reassociation; pass ``compress=False`` for the hop-by-hop
+    serial schedule (bit-identical to the legacy ``RingGossip``).
+
+    ``wire_dtype`` (``"float32"`` default, ``"bfloat16"``/``"float16"``)
+    narrows every link payload: messages are cast once before going on
+    the wire and accumulated in full precision on receive, halving
+    eq.-15 bytes at 16-bit widths.  Eq.-15 exchange *counts* stay the
+    mathematical B x edges figure regardless of compression (one
+    compressed hop still carries a full Q x n payload).
     """
 
     rounds: int = 1
     topology: Topology = Ring(1)
+    compress: bool = True
+    wire_dtype: str = "float32"
 
     mode_name = "gossip"
 
@@ -257,11 +286,19 @@ class Gossip(ConsensusPolicy):
             raise TypeError(
                 f"topology must be a Topology, got {type(self.topology).__name__}"
             )
+        object.__setattr__(
+            self, "wire_dtype",
+            consensus_lib.canonical_wire_dtype(self.wire_dtype),
+        )
 
     @property
     def degree(self) -> int:
         """Legacy ``backend.degree`` view (ring topologies only)."""
         return getattr(self.topology, "degree", 1)
+
+    @property
+    def wire_bits(self) -> int:  # type: ignore[override]
+        return consensus_lib.WIRE_DTYPES[self.wire_dtype]
 
     def validate(self, num_workers: int) -> None:
         self.topology.validate(num_workers)
@@ -273,29 +310,94 @@ class Gossip(ConsensusPolicy):
     def exchanges_for(self, num_workers: int | None) -> int:
         return _cycle_exchanges(self.topology, self.rounds, num_workers)
 
+    @property
+    def _compressible(self) -> bool:
+        # rounds=1 over a single graph IS its native schedule already.
+        return self.compress and not (
+            self.rounds == 1 and len(self.topology.cycle()) == 1
+        )
+
+    def _serial_hops(self, num_workers: int) -> int:
+        # Build each distinct cycle entry's schedule ONCE (schedule
+        # construction can mean a Birkhoff decomposition for irregular
+        # graphs), then count hops over the round sequence.
+        per_phase = [
+            len(topology_lib.cached_exchange_schedule(t, num_workers).perms)
+            for t in self.topology.cycle()
+        ]
+        return sum(
+            per_phase[b % len(per_phase)] for b in range(self.rounds)
+        )
+
+    def _compressed_schedule_or_none(self, num_workers: int):
+        """The H^B schedule IF it is actually shallower than B serial
+        rounds.  Vertex-transitive graphs compress to <= M-1 hops, but
+        the Birkhoff depth of an irregular (geometric) power can exceed
+        the serial hop count — compression is a schedule optimization,
+        so it only applies when it wins."""
+        if not self._compressible:
+            return None
+        sched = topology_lib.compressed_schedule(
+            self.topology, num_workers, self.rounds
+        )
+        if len(sched.perms) >= self._serial_hops(num_workers):
+            return None
+        return sched
+
+    def hops_for(self, num_workers: int) -> int:
+        """ppermute hops one ``mix`` actually executes — the compiled
+        schedule depth (compressed mixes collapse B rounds into the
+        permutation support of H^B; serial mixes hop every edge every
+        round)."""
+        sched = self._compressed_schedule_or_none(num_workers)
+        if sched is not None:
+            return len(sched.perms)
+        return self._serial_hops(num_workers)
+
     def mix(self, x, state, ctx):
+        wd = None if self.wire_dtype == "float32" else self.wire_dtype
+        sched = self._compressed_schedule_or_none(ctx.num_workers)
+        if sched is not None:
+            # One mix with H^B: the whole B-round schedule as a single
+            # minimal-depth weighted hop sequence (graph-build work is
+            # memoized; this runs at trace time only).
+            out = consensus_lib.schedule_gossip_step(
+                x, ctx.axis_name, sched, wire_dtype=wd
+            )
+            return out, state
         scheds = _cycle_schedules(self.topology, ctx)
         if len(scheds) == 1:
             # fori_loop over the single schedule: the bit-identity path
             # for Ring (mirrors ring_gossip_average exactly).
             out = consensus_lib.schedule_gossip_average(
-                x, ctx.axis_name, scheds[0], self.rounds
+                x, ctx.axis_name, scheds[0], self.rounds, wire_dtype=wd
             )
         else:
             out = x
             for b in range(self.rounds):
                 out = consensus_lib.schedule_gossip_step(
-                    out, ctx.axis_name, scheds[b % len(scheds)]
+                    out, ctx.axis_name, scheds[b % len(scheds)], wire_dtype=wd
                 )
         return out, state
 
 
-def RingGossip(rounds: int = 1, degree: int = 1) -> Gossip:
-    """The paper's degree-d circular gossip: a bit-identical alias for
-    ``Gossip(rounds, topology=Ring(degree))`` (uniform ring schedules
-    execute the exact hop sequence of the PR-3 ``ring_gossip_average``).
-    """
-    return Gossip(rounds=rounds, topology=Ring(degree=degree))
+def RingGossip(
+    rounds: int = 1,
+    degree: int = 1,
+    *,
+    compress: bool = True,
+    wire_dtype: str = "float32",
+) -> Gossip:
+    """The paper's degree-d circular gossip: an alias for
+    ``Gossip(rounds, topology=Ring(degree))``.  With ``compress=False``
+    (and a full-width wire) uniform ring schedules execute the exact hop
+    sequence of the PR-3 ``ring_gossip_average``, bit for bit; the
+    default compressed form mixes once with H^B instead (equal up to
+    float reassociation)."""
+    return Gossip(
+        rounds=rounds, topology=Ring(degree=degree),
+        compress=compress, wire_dtype=wire_dtype,
+    )
 
 
 # ----------------------------------------------------------- quantized
@@ -371,7 +473,7 @@ class QuantizedGossip(ConsensusPolicy):
 
 # --------------------------------------------------------------- lossy
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, init=False)
 class LossyGossip(ConsensusPolicy):
     """Gossip over a lossy network: each incoming link fails
     independently with probability ``drop_prob`` per round, and the
@@ -380,76 +482,109 @@ class LossyGossip(ConsensusPolicy):
     stochasticity is not, which is exactly why naive lossy gossip biases
     the mean (paper §IV / ref [16] relaxed ADMM).
 
-    ``topology=None`` (default) keeps the original degree-d ring link
-    model; with a topology, the same per-link failure process runs over
-    that graph's exchange schedule (weighted links renormalize by
-    surviving weight)."""
+    ``topology=`` is the authoritative graph; ``degree=d`` is a pure
+    construction shorthand for ``topology=Ring(d)`` (the paper's ring
+    link model) and is NOT a stored field — ``LossyGossip(degree=2)``
+    and ``LossyGossip(topology=Ring(2))`` are the same value object,
+    one executable-cache entry, one repr, and ``dataclasses.replace``
+    round-trips cleanly (the hand-written ``__init__`` keeps ``degree``
+    out of the dataclass fields entirely).  Passing both is an error.
+    Per-round link failures never compress (each round draws its own
+    survivors), but ``wire_dtype`` narrows the surviving payloads as in
+    :class:`Gossip`."""
 
     drop_prob: float = 0.1
     rounds: int = 1
-    degree: int = 1
     seed: int = 0
     topology: Topology | None = None
+    wire_dtype: str = "float32"
 
     mode_name = "lossy"
 
-    def __post_init__(self):
-        if not 0.0 <= self.drop_prob < 1.0:
-            raise ValueError(
-                f"drop_prob must be in [0, 1), got {self.drop_prob}"
+    def __init__(
+        self,
+        drop_prob: float = 0.1,
+        rounds: int = 1,
+        degree: int | None = None,
+        seed: int = 0,
+        topology: Topology | None = None,
+        wire_dtype: str = "float32",
+    ):
+        if not 0.0 <= drop_prob < 1.0:
+            raise ValueError(f"drop_prob must be in [0, 1), got {drop_prob}")
+        if rounds < 1:
+            raise ValueError(f"gossip rounds must be >= 1, got {rounds}")
+        if degree is not None:
+            if topology is not None:
+                raise ValueError(
+                    "pass either degree (the Ring shorthand) or topology=, "
+                    "not both"
+                )
+            topology = Ring(degree)
+        elif topology is None:
+            topology = Ring(1)
+        if not isinstance(topology, Topology):
+            raise TypeError(
+                f"topology must be a Topology, got {type(topology).__name__}"
             )
-        if self.degree < 1:
-            raise ValueError(f"gossip degree must be >= 1, got {self.degree}")
-        if self.rounds < 1:
-            raise ValueError(f"gossip rounds must be >= 1, got {self.rounds}")
+        object.__setattr__(self, "drop_prob", drop_prob)
+        object.__setattr__(self, "rounds", rounds)
+        object.__setattr__(self, "seed", seed)
+        object.__setattr__(self, "topology", topology)
+        object.__setattr__(
+            self, "wire_dtype", consensus_lib.canonical_wire_dtype(wire_dtype)
+        )
+
+    @property
+    def degree(self) -> int:
+        """Legacy ring-degree view (mirrors ``Gossip.degree``); the
+        stored ``topology`` is authoritative."""
+        return getattr(self.topology, "degree", 1)
+
+    @property
+    def wire_bits(self) -> int:  # type: ignore[override]
+        return consensus_lib.WIRE_DTYPES[self.wire_dtype]
 
     def validate(self, num_workers: int) -> None:
-        if self.topology is None:
-            Ring(self.degree).validate(num_workers)
-        else:
-            self.topology.validate(num_workers)
+        self.topology.validate(num_workers)
 
     @property
     def exchanges_per_round(self) -> int:
         return self.exchanges_for(None)
 
     def exchanges_for(self, num_workers: int | None) -> int:
-        if self.topology is None:
-            return 2 * self.degree * self.rounds
         return _cycle_exchanges(self.topology, self.rounds, num_workers)
 
     def init_state(self, x, ctx):
         return _worker_key(self.seed, ctx)
 
     def mix(self, x, state, ctx):
-        if self.topology is not None:
-            scheds = _cycle_schedules(self.topology, ctx)
-            key = state
-            for b in range(self.rounds):
+        wd = None if self.wire_dtype == "float32" else self.wire_dtype
+        scheds = _cycle_schedules(self.topology, ctx)
+        if len(scheds) == 1:
+            # Single static schedule: scan the rounds (keeps the traced
+            # program O(1) in B — rounds can be large for lossy links).
+            def body(carry, _):
+                val, key = carry
                 key, sub = jax.random.split(key)
-                x = consensus_lib.lossy_schedule_gossip_step(
-                    x, ctx.axis_name, scheds[b % len(scheds)],
-                    drop_prob=self.drop_prob, key=sub,
+                val = consensus_lib.lossy_schedule_gossip_step(
+                    val, ctx.axis_name, scheds[0],
+                    drop_prob=self.drop_prob, key=sub, wire_dtype=wd,
                 )
-            return x, key
+                return (val, key), None
 
-        def body(carry, _):
-            val, key = carry
-            key, sub = jax.random.split(key)
-            val = consensus_lib.lossy_ring_gossip_step(
-                val,
-                ctx.axis_name,
-                degree=self.degree,
-                num_nodes=ctx.num_workers,
-                drop_prob=self.drop_prob,
-                key=sub,
+            (out, key), _ = jax.lax.scan(
+                body, (x, state), None, length=self.rounds
             )
-            return (val, key), None
-
-        (out, key), _ = jax.lax.scan(
-            body, (x, state), None, length=self.rounds
-        )
-        return out, key
+            return out, key
+        key = state
+        for b in range(self.rounds):
+            key, sub = jax.random.split(key)
+            x = consensus_lib.lossy_schedule_gossip_step(
+                x, ctx.axis_name, scheds[b % len(scheds)],
+                drop_prob=self.drop_prob, key=sub, wire_dtype=wd,
+            )
+        return x, key
 
 
 # --------------------------------------------------------------- stale
@@ -480,12 +615,17 @@ class StaleMixing(ConsensusPolicy):
 
     delay: int = 1
     topology: Topology | None = None
+    wire_dtype: str = "float32"
 
     mode_name = "stale"
 
     def __post_init__(self):
         if self.delay < 0:
             raise ValueError(f"staleness delay must be >= 0, got {self.delay}")
+        object.__setattr__(
+            self, "wire_dtype",
+            consensus_lib.canonical_wire_dtype(self.wire_dtype),
+        )
 
     def validate(self, num_workers: int) -> None:
         if self.topology is not None:
@@ -507,18 +647,32 @@ class StaleMixing(ConsensusPolicy):
 
     @property
     def is_exact(self) -> bool:
-        return self.delay == 0 and self.topology is None
+        return (
+            self.delay == 0
+            and self.topology is None
+            and self.wire_dtype == "float32"
+        )
+
+    @property
+    def wire_bits(self) -> int:  # type: ignore[override]
+        return consensus_lib.WIRE_DTYPES[self.wire_dtype]
 
     def _mix_messages(self, msg: Array, fresh: Array, ctx: ConsensusContext):
         """Average the peers' (stale) messages, substituting this
         worker's fresh value for its own stale term."""
+        wd = None if self.wire_dtype == "float32" else self.wire_dtype
         if self.topology is None:
+            if wd is not None:
+                # Model the narrow wire of the all-reduce form: every
+                # transmitted message is cast once; this worker swaps its
+                # own (narrowed) term for the full-precision fresh value.
+                msg = msg.astype(wd).astype(fresh.dtype)
             if fresh is msg:  # delay=0: the message IS the fresh value
                 return ctx.pmean(msg)
             return ctx.pmean(msg) + (fresh - msg) / ctx.num_workers
         sched = self.topology.exchange_schedule(ctx.num_workers)
         return consensus_lib.schedule_gossip_step(
-            msg, ctx.axis_name, sched, self_value=fresh
+            msg, ctx.axis_name, sched, self_value=fresh, wire_dtype=wd
         )
 
     def init_state(self, x, ctx):
@@ -598,8 +752,8 @@ def parse_policy(
     ``gossip`` with ``topology=FullyConnected()`` for the dense-graph
     gossip form).
 
-    >>> parse_policy("gossip:3")
-    Gossip(rounds=3, topology=Ring(degree=1))
+    >>> parse_policy("gossip:3").topology
+    Ring(degree=1)
     >>> parse_policy("quantized:4").wire_bits
     4
     """

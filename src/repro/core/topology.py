@@ -35,6 +35,7 @@ reference constructions the strategy objects and tests validate against.
 from __future__ import annotations
 
 import abc
+import functools
 from dataclasses import dataclass
 from typing import NamedTuple
 
@@ -96,6 +97,34 @@ class ExchangeSchedule(NamedTuple):
             for src, dst in perm:
                 h[dst, src] += w
         return check_doubly_stochastic(h, "exchange-schedule matrix")
+
+    def compose(self, other: "ExchangeSchedule") -> "ExchangeSchedule":
+        """The schedule applying ``self``'s round, then ``other``'s.
+
+        A B-round gossip is mathematically ONE mix with the product
+        matrix, so composing compiles ``other.as_matrix() @
+        self.as_matrix()`` back into permutation hops via the
+        Birkhoff-von-Neumann path — the depth of the result is bounded
+        by the support of the product, not by the sum of the two hop
+        counts.
+        """
+        if self.num_workers != other.num_workers:
+            raise ValueError(
+                f"cannot compose schedules over {self.num_workers} and "
+                f"{other.num_workers} workers"
+            )
+        return birkhoff_schedule(other.as_matrix() @ self.as_matrix())
+
+    def compress(self) -> "ExchangeSchedule":
+        """Recompile this schedule into a minimal-depth equivalent.
+
+        Round-trips the dense H through the Birkhoff-von-Neumann path,
+        which merges duplicate permutations and peels the largest
+        possible self-weight — useful after :meth:`compose` chains.
+        The result implements the same H (to float64 tolerance), not
+        necessarily the same hop sequence.
+        """
+        return birkhoff_schedule(self.as_matrix())
 
 
 def _shift_perm(m: int, offsets: np.ndarray) -> Permutation:
@@ -163,6 +192,34 @@ class Topology(abc.ABC):
         drift apart."""
         self.validate(num_workers)
         return self.exchange_schedule(num_workers).as_matrix()
+
+    def power_schedule(self, num_workers: int, rounds: int) -> ExchangeSchedule:
+        """ONE schedule implementing ``rounds`` gossip rounds (x <- H^B x).
+
+        A B-round gossip with mixing matrix H is mathematically a single
+        mix with ``H**B``; this computes the power once at graph-build
+        time (float64) and compiles it through the Birkhoff-von-Neumann
+        path, so the hop count is the number of distinct permutations in
+        the *support of H^B* rather than B times the per-round hop count
+        — e.g. ``Ring(2)`` at B=4 on M=8 compresses 16 serial ppermutes
+        into <= M-1 weighted hops in one round.  Time-varying topologies
+        compose round b's matrix ``cycle[b % L]`` in sequence.
+
+        ``Gossip(..., compress=True)`` executes this schedule in place of
+        the serial round loop; semantics are preserved up to float
+        reassociation (the result equals ``H**B @ x`` to f32 tolerance).
+        """
+        self.validate(num_workers)
+        if rounds < 1:
+            raise ValueError(f"power_schedule rounds must be >= 1, got {rounds}")
+        cycle = self.cycle()
+        if rounds == 1 and len(cycle) == 1:
+            # Nothing to compress: one round IS the native schedule.
+            return self.exchange_schedule(num_workers)
+        h = np.eye(num_workers)
+        for b in range(rounds):
+            h = cycle[b % len(cycle)].mixing_matrix(num_workers) @ h
+        return birkhoff_schedule(h)
 
     def spectral_gap(self, num_workers: int) -> float:
         """1 - |lambda_2(H)|: governs gossip convergence speed."""
@@ -437,38 +494,72 @@ class TimeVarying(Topology):
 
 # ------------------------------------------- Birkhoff-von-Neumann path
 
+def _bottleneck_matching(rem: np.ndarray, tol: float) -> np.ndarray | None:
+    """Perfect matching on ``rem``'s support maximizing the MINIMUM
+    matched entry (binary search over entry thresholds).
+
+    Returns ``cols`` with ``cols[row]`` the matched column, or None when
+    even the full support admits no perfect matching (possible only
+    through float drift; callers bound the residual instead).  The
+    bottleneck criterion extracts the largest possible weight each
+    Birkhoff step, so dense powers H^B decompose without ever matching
+    through near-zero entries (where the old max-mass greedy got stuck).
+    """
+    from scipy.sparse import csr_matrix
+    from scipy.sparse.csgraph import maximum_bipartite_matching
+
+    def match_at(threshold: float) -> np.ndarray | None:
+        cols = maximum_bipartite_matching(
+            csr_matrix(rem >= threshold), perm_type="column"
+        )
+        return None if (cols < 0).any() else cols
+
+    vals = np.unique(rem[rem > tol])
+    if len(vals) == 0:
+        return None
+    best = match_at(vals[0])  # the full (positive) support
+    if best is None:
+        return None
+    lo, hi = 1, len(vals) - 1
+    while lo <= hi:
+        mid = (lo + hi) // 2
+        cols = match_at(vals[mid])
+        if cols is not None:
+            best, lo = cols, mid + 1
+        else:
+            hi = mid - 1
+    return best
+
+
 def birkhoff_decomposition(
     h: np.ndarray, tol: float = 1e-9
 ) -> tuple[list[np.ndarray], list[float]]:
     """Decompose doubly-stochastic H into sum_k w_k P_k (permutations).
 
-    Greedy Birkhoff: repeatedly extract a perfect matching supported on
-    the positive entries (guaranteed to exist by Birkhoff's theorem /
-    Hall's condition) with weight = the smallest matched entry.
-    Terminates in at most nnz(H) steps.  Returns permutation matrices
-    with ``P[dst, src] = 1`` and their weights (summing to 1).
+    Greedy Birkhoff with a bottleneck rule: repeatedly extract the
+    perfect matching (guaranteed to exist on the support by Birkhoff's
+    theorem / Hall's condition) that maximizes its smallest entry, with
+    weight = that entry.  Each step zeroes at least one support cell, so
+    it terminates in at most nnz(H) steps, and the weights come off in
+    decreasing order — the minimal-depth compilation the compressed
+    gossip schedules rely on.  Returns permutation matrices with
+    ``P[dst, src] = 1`` and their weights (summing to 1).
     """
-    from scipy.optimize import linear_sum_assignment
-
     h = check_doubly_stochastic(h, "Birkhoff input")
     m = h.shape[0]
     rem = h.copy()
     perms: list[np.ndarray] = []
     weights: list[float] = []
-    big = float(m) + 1.0
     for _ in range(m * m):
         if rem.max() <= tol:
             break
-        # Maximize the matched mass, forbidding (near-)zero entries.
-        cost = np.where(rem > tol, -rem, big)
-        rows, cols = linear_sum_assignment(cost)
-        matched = rem[rows, cols]
-        if np.any(matched <= tol):
-            raise ValueError(
-                "Birkhoff decomposition failed: no perfect matching on the "
-                "support (matrix is not doubly stochastic to tolerance)"
-            )
-        w = float(matched.min())
+        cols = _bottleneck_matching(rem, tol)
+        if cols is None:
+            # Float drift broke Hall's condition on the leftover mass;
+            # acceptable only if that mass is negligible (checked below).
+            break
+        rows = np.arange(m)
+        w = float(rem[rows, cols].min())
         p = np.zeros_like(h)
         p[rows, cols] = 1.0
         perms.append(p)
@@ -506,6 +597,31 @@ def birkhoff_schedule(h: np.ndarray, tol: float = 1e-9) -> ExchangeSchedule:
     return ExchangeSchedule(
         num_workers=m, perms=perms, weights=weights, self_weight=self_w
     )
+
+
+@functools.lru_cache(maxsize=256)
+def compressed_schedule(
+    topology: Topology, num_workers: int, rounds: int
+) -> ExchangeSchedule:
+    """Memoized :meth:`Topology.power_schedule`.
+
+    Gossip policies call this at trace time (every lowering re-traces the
+    mix), and the Birkhoff decomposition of H^B is pure graph-build work
+    — topologies are frozen value objects, so (topology, M, B) keys it
+    exactly.
+    """
+    return topology.power_schedule(num_workers, rounds)
+
+
+@functools.lru_cache(maxsize=512)
+def cached_exchange_schedule(
+    topology: Topology, num_workers: int
+) -> ExchangeSchedule:
+    """Memoized :meth:`Topology.exchange_schedule` — the per-round
+    counterpart of :func:`compressed_schedule`, for the trace-time call
+    sites in the gossip policies (irregular graphs pay a Birkhoff
+    decomposition per construction)."""
+    return topology.exchange_schedule(num_workers)
 
 
 # ------------------------------------------------------------- parsing

@@ -30,6 +30,11 @@ for time-varying cycles) applied to the gossip-family policy; and
 ``partition`` a ``repro.data`` spec (``"iid" | "noniid[:alpha]"``) —
 so the same strings work from ``train_dssfn --consensus/--topology/
 --partition`` and from Python.
+
+Wire efficiency knobs (mirrored by ``train_dssfn --wire-dtype`` /
+``--trace-every``): ``wire_dtype="bf16"`` narrows the gossip link
+payloads (accumulation stays f32), and ``trace_every=0`` drops the
+per-iteration trace collectives for the production hot path.
 """
 from __future__ import annotations
 
@@ -61,6 +66,28 @@ def apply_topology(policy: ConsensusPolicy, topology: Topology) -> ConsensusPoli
     )
 
 
+def apply_wire_dtype(policy: ConsensusPolicy, wire_dtype: str) -> ConsensusPolicy:
+    """Return ``policy`` with its link payloads narrowed to ``wire_dtype``
+    (``"float32" | "bfloat16" | "float16"``, or the ``f32/bf16/f16``
+    shorthands).
+
+    Gossip-family policies (anything with a ``wire_dtype`` field) are
+    rebuilt with the wire swapped in; ``ExactMean`` (the full-precision
+    all-reduce baseline) and ``QuantizedGossip`` (which packs its own
+    k-bit wire format) are rejected.
+    """
+    from repro.core.consensus import canonical_wire_dtype
+
+    wire_dtype = canonical_wire_dtype(wire_dtype)
+    if any(f.name == "wire_dtype" for f in fields(policy)):
+        return replace(policy, wire_dtype=wire_dtype)
+    raise ValueError(
+        f"policy {policy.describe()} does not take a wire_dtype; use a "
+        "gossip-family policy (gossip / lossy / stale — quantized packs "
+        "its own wire format)"
+    )
+
+
 @dataclass
 class TrainSpec:
     """Everything that defines a dSSFN training run except the data."""
@@ -82,6 +109,17 @@ class TrainSpec:
     #: Worker-shard layout ``partition_data`` uses: ``"iid"`` or
     #: ``"noniid[:alpha]"`` (``repro.data.partition_by_spec`` grammar).
     partition: str = "iid"
+    #: Link payload width for the gossip-family policy
+    #: (``"float32" | "bfloat16" | "float16"`` or ``f32/bf16/f16``):
+    #: messages are cast once before the wire, accumulated in full
+    #: precision, and the eq.-15 byte accounting scales with the
+    #: policy's ``wire_bits``.  None keeps the policy's own wire.
+    wire_dtype: str | None = None
+    #: ADMM convergence-trace stride (``admm.worker_admm_iterations``):
+    #: 1 = trace every iteration (default), 0 = the collective-free hot
+    #: path (no traces, no trace collectives in the lowered programs),
+    #: N > 1 = every N-th iteration.
+    trace_every: int = 1
     #: Optional mesh for ``backend="mesh"``; None = 1-D ``workers`` mesh
     #: over the visible devices.
     mesh: object | None = None
@@ -97,17 +135,21 @@ class TrainSpec:
         topo = self.resolve_topology()
         if isinstance(self.policy, ConsensusPolicy):
             pol = self.policy
+            pol = pol if topo is None else apply_topology(pol, topo)
         elif self.policy is None:
             if topo is not None:
                 # Topology with no policy = one plain gossip round over
                 # that graph per consensus (raise rounds via policy=).
-                return Gossip(rounds=1, topology=topo)
-            if isinstance(self.backend, ConsensusBackend):
-                return self.backend.policy
-            return ExactMean()
+                pol = Gossip(rounds=1, topology=topo)
+            elif isinstance(self.backend, ConsensusBackend):
+                pol = self.backend.policy
+            else:
+                pol = ExactMean()
         else:
-            return parse_policy(self.policy, topology=topo)
-        return pol if topo is None else apply_topology(pol, topo)
+            pol = parse_policy(self.policy, topology=topo)
+        if self.wire_dtype is not None:
+            pol = apply_wire_dtype(pol, self.wire_dtype)
+        return pol
 
     def resolve_backend(self) -> ConsensusBackend:
         if isinstance(self.backend, ConsensusBackend):
@@ -188,6 +230,7 @@ def train(spec: TrainSpec, x_workers, t_workers, key) -> TrainResult:
             backend=backend,
             policy=policy,
             size_estimation_tol=spec.size_estimation_tol,
+            trace_every=spec.trace_every,
         )
     return TrainResult(
         params=params, log=log, backend=backend, policy=policy, spec=spec

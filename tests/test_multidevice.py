@@ -234,17 +234,100 @@ def test_topology_gossip_mesh_parity_on_8_devices():
                       / jnp.linalg.norm(oracle))
         assert rel_o < 5e-2, (topo, rel_o)
 
-    # RingGossip == raw ring hops, bit for bit, on the real mesh.
-    ring_be = MeshBackend(wmesh, policy=RingGossip(rounds=5, degree=2))
+    # RingGossip(compress=False) == raw ring hops, bit for bit, on the
+    # real mesh; the default compressed H^B mix matches to f32 tolerance.
+    ring_be = MeshBackend(
+        wmesh, policy=RingGossip(rounds=5, degree=2, compress=False))
     got = ring_be.run(ring_be.consensus_mean, x)
     def raw(v):
         return consensus.ring_gossip_average(
             v, ring_be.axis_name, degree=2, num_nodes=m, num_rounds=5)
     want = ring_be.run(raw, x, key="raw-ring")
     assert jnp.array_equal(got, want)
+    comp_be = MeshBackend(wmesh, policy=RingGossip(rounds=5, degree=2))
+    got_c = comp_be.run(comp_be.consensus_mean, x)
+    assert float(jnp.max(jnp.abs(got_c - want))) < 1e-5
     print("TOPOLOGY8_OK")
     """)
     assert "TOPOLOGY8_OK" in out
+
+
+def test_compressed_gossip_and_hot_path_on_8_devices():
+    """The wire-efficiency acceptance tests on a real 8-worker mesh:
+
+    - compressed ring & torus gossip solves match their serial-schedule
+      twins (same H^B mixing, one mix instead of B rounds);
+    - trace_every=0 keeps the final iterate bit-identical (ExactMean)
+      while the lowered program's collectives reduce to EXACTLY the
+      policy's own exchanges (no psum/pmax trio, no cerr probe) —
+      asserted via the backend lowering stats / HLO collective counts.
+    """
+    out = run_subprocess("""
+    from repro.core import admm
+    from repro.core.backend import MeshBackend
+    from repro.core.policy import ExactMean, Gossip, RingGossip
+    from repro.core.topology import Ring, Torus
+    from repro.launch.mesh import make_worker_mesh
+
+    m, n, q, j = 8, 16, 3, 256
+    wmesh = make_worker_mesh(m)
+    y = jax.random.normal(jax.random.PRNGKey(0), (n, j))
+    t = jax.random.normal(jax.random.PRNGKey(1), (q, j))
+    yw = y.reshape(n, m, j // m).transpose(1, 0, 2)
+    tw = t.reshape(q, m, j // m).transpose(1, 0, 2)
+    kw = dict(mu=1e-2, eps_radius=6.0, num_iters=40)
+
+    # Compressed vs serial schedule parity, full ADMM solve, per graph.
+    for topo in (Ring(2), Torus(2, 4)):
+        comp = admm.admm_ridge_consensus(
+            yw, tw, backend=MeshBackend(
+                wmesh, policy=Gossip(rounds=4, topology=topo)), **kw)
+        serial = admm.admm_ridge_consensus(
+            yw, tw, backend=MeshBackend(
+                wmesh, policy=Gossip(rounds=4, topology=topo,
+                                     compress=False)), **kw)
+        rel = float(jnp.linalg.norm(comp.o_star - serial.o_star)
+                    / jnp.linalg.norm(serial.o_star))
+        assert rel < 1e-5, (topo, rel)
+
+    # Hot path: bit-identical o_star, collective-free lowering.
+    K = 10
+    z0 = jnp.zeros((q, n))
+    def probe(policy, trace_every):
+        backend = MeshBackend(wmesh, policy=policy)
+        def worker(y_m, t_m, z0r):
+            a, chol = admm._worker_stats_local(y_m, t_m, 1e-2, False)
+            return admm.worker_admm_iterations(
+                backend, a, chol, y_m, t_m, z0r, mu=1e-2, eps_radius=6.0,
+                num_iters=K, policy=policy, trace_every=trace_every)
+        return backend.lowering_stats(
+            worker, yw, tw, replicated=(z0,),
+            key=("probe", trace_every), policy=policy)
+
+    pol = RingGossip(rounds=4, degree=2)
+    hot = probe(pol, 0)["collective_counts"]
+    traced = probe(pol, 1)["collective_counts"]
+    # trace_every=0: ONLY the policy's ppermutes — K mixes x hops each,
+    # and not a single reduction collective.
+    assert set(hot) == {"collective-permute"}, hot
+    assert hot["collective-permute"] == K * pol.hops_for(m), (
+        hot, pol.hops_for(m))
+    # trace_every=1 adds the psum obj + psum primal + cerr pmean/pmax.
+    assert traced.get("all-reduce", 0) == 4 * K, traced
+
+    ex_hot = probe(ExactMean(), 0)["collective_counts"]
+    assert ex_hot == {"all-reduce": K}, ex_hot  # the mix itself, nothing else
+
+    # And the final iterate is bit-identical with traces off.
+    be = MeshBackend(wmesh)
+    kw10 = dict(mu=1e-2, eps_radius=6.0, num_iters=K, backend=be)
+    a = admm.admm_ridge_consensus(yw, tw, **kw10)
+    b = admm.admm_ridge_consensus(yw, tw, trace_every=0, **kw10)
+    assert jnp.array_equal(a.o_star, b.o_star)
+    assert b.trace is None
+    print("WIRE8_OK")
+    """)
+    assert "WIRE8_OK" in out
 
 
 def test_layer_engine_on_8_devices():

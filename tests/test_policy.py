@@ -250,11 +250,15 @@ def test_ring_gossip_is_gossip_over_ring_topology():
 
 
 def test_ring_gossip_alias_bit_identical_to_raw_ring_hops():
-    """Gossip(B, Ring(d)) must produce the exact float sequence of the
-    PR-3 ppermute implementation (consensus.ring_gossip_average)."""
+    """Gossip(B, Ring(d), compress=False) must produce the exact float
+    sequence of the PR-3 ppermute implementation
+    (consensus.ring_gossip_average); the default compressed form mixes
+    once with H^B and only matches to float-reassociation tolerance."""
     m, degree, rounds = 8, 2, 5
     x = jax.random.normal(jax.random.PRNGKey(2), (m, 4, 6))
-    backend = SimulatedBackend(m, policy=RingGossip(rounds=rounds, degree=degree))
+    backend = SimulatedBackend(
+        m, policy=RingGossip(rounds=rounds, degree=degree, compress=False)
+    )
     got = backend.run(backend.consensus_mean, x)
 
     def raw(v):
@@ -264,6 +268,20 @@ def test_ring_gossip_alias_bit_identical_to_raw_ring_hops():
 
     want = backend.run(raw, x, key="raw-ring-hops")
     assert jnp.array_equal(got, want)
+    # Compressed (the default): same mixing up to float reassociation.
+    comp = SimulatedBackend(
+        m, policy=RingGossip(rounds=rounds, degree=degree)
+    )
+    got_c = comp.run(comp.consensus_mean, x)
+    assert float(jnp.max(jnp.abs(got_c - want))) < 1e-5
+    # ...and a single round needs no compression: bit-identical as-is.
+    one = SimulatedBackend(m, policy=RingGossip(rounds=1, degree=degree))
+    raw1 = SimulatedBackend(
+        m, policy=RingGossip(rounds=1, degree=degree, compress=False)
+    )
+    assert jnp.array_equal(
+        one.run(one.consensus_mean, x), raw1.run(raw1.consensus_mean, x)
+    )
 
 
 @pytest.mark.parametrize(
@@ -483,3 +501,171 @@ def test_deterministic_quantizer_has_zero_variance():
     assert jnp.array_equal(a, b)
     step = float((x.max() - x.min()) / (2 ** 6 - 1))
     assert float(jnp.max(jnp.abs(a - x))) <= 0.5 * step + 1e-6
+
+
+# ------------------------------------------------------------------
+# Compressed gossip schedules (H^B as one mix)
+# ------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "topo",
+    [Ring(2), Torus(2, 4), Hypercube(), RandomGeometric(radius=0.5, seed=1),
+     TimeVarying((Ring(1), Hypercube()))],
+    ids=lambda t: t.name,
+)
+def test_compressed_gossip_matches_serial(topo):
+    """compress=True (default) mixes once with H^B; must equal the
+    B-round serial schedule to f32 reassociation tolerance."""
+    m, rounds = 8, 4
+    x = jax.random.normal(jax.random.PRNGKey(8), (m, 4, 6))
+    comp = SimulatedBackend(m, policy=Gossip(rounds=rounds, topology=topo))
+    serial = SimulatedBackend(
+        m, policy=Gossip(rounds=rounds, topology=topo, compress=False)
+    )
+    a = comp.run(comp.consensus_mean, x)
+    b = serial.run(serial.consensus_mean, x)
+    assert float(jnp.max(jnp.abs(a - b))) < 1e-5
+
+
+def test_compressed_gossip_reduces_hops():
+    """The whole point: |support(H^B)| hops in ONE round instead of
+    B x edges serial ones (the eq.-15 exchange count is unchanged —
+    compression is an execution-schedule optimization)."""
+    pol = RingGossip(rounds=4, degree=2)
+    serial = RingGossip(rounds=4, degree=2, compress=False)
+    assert pol.hops_for(8) < serial.hops_for(8)
+    assert serial.hops_for(8) == 16
+    assert pol.hops_for(8) <= 7   # H^4 support on M=8 is at most dense
+    assert pol.exchanges_for(8) == serial.exchanges_for(8) == 16
+    # Single-round gossip has nothing to compress.
+    assert RingGossip(rounds=1, degree=2).hops_for(8) == 4
+
+
+def test_compress_flag_is_part_of_cache_key():
+    m = 8
+    _, _, yw, tw = _problem(jax.random.PRNGKey(9), m=m)
+    backend = SimulatedBackend(m)
+    kw = dict(mu=1e-2, eps_radius=6.0, num_iters=10, backend=backend)
+    pols = [
+        Gossip(rounds=2, topology=Ring(2)),
+        Gossip(rounds=2, topology=Ring(2), compress=False),
+        Gossip(rounds=2, topology=Ring(2), wire_dtype="bf16"),
+    ]
+    for pol in pols:
+        admm.admm_ridge_consensus(yw, tw, policy=pol, **kw)
+    assert backend.lowerings == len(pols), backend.cache_info()
+    for pol in pols:
+        admm.admm_ridge_consensus(yw, tw, policy=pol, **kw)
+    assert backend.lowerings == len(pols), backend.cache_info()
+
+
+# ------------------------------------------------------------------
+# Low-precision wire formats
+# ------------------------------------------------------------------
+
+def test_wire_dtype_accounting_and_aliases():
+    assert Gossip(rounds=2, wire_dtype="bfloat16").wire_bits == 16
+    assert Gossip(rounds=2, wire_dtype="bf16") == Gossip(
+        rounds=2, wire_dtype="bfloat16"
+    )
+    assert Gossip(rounds=2, wire_dtype="f16").wire_bits == 16
+    assert Gossip(rounds=2).wire_bits == 32
+    assert LossyGossip(drop_prob=0.1, wire_dtype="bf16").wire_bits == 16
+    assert StaleMixing(1, wire_dtype="f16").wire_bits == 16
+    # bf16 wire halves the eq.-15 bytes at the same exchange count.
+    full = RingGossip(rounds=4, degree=2)
+    half = RingGossip(rounds=4, degree=2, wire_dtype="bf16")
+    kw = dict(scalars=100, num_consensus=10, num_workers=8)
+    assert half.wire_bytes(**kw) * 2 == full.wire_bytes(**kw)
+    with pytest.raises(ValueError, match="wire dtype"):
+        Gossip(rounds=1, wire_dtype="int8")
+
+
+def test_wire_dtype_mix_close_to_full_precision():
+    """bf16 links perturb the mix by at most a few bf16 ulps of the
+    payload scale — the accumulation stays f32."""
+    m = 8
+    x = jax.random.normal(jax.random.PRNGKey(10), (m, 4, 6))
+    for pol_lo, pol_hi in [
+        (Gossip(rounds=3, topology=Ring(2), wire_dtype="bf16"),
+         Gossip(rounds=3, topology=Ring(2))),
+        (StaleMixing(2, wire_dtype="bf16"), StaleMixing(2)),
+    ]:
+        lo = SimulatedBackend(m, policy=pol_lo)
+        hi = SimulatedBackend(m, policy=pol_hi)
+        a = lo.run(lo.consensus_mean, x)
+        b = hi.run(hi.consensus_mean, x)
+        err = float(jnp.max(jnp.abs(a - b)))
+        assert 0 < err < 0.05, (pol_lo, err)  # narrow but sane wire
+
+
+def test_stale_wire_dtype_breaks_exactness():
+    assert StaleMixing(0).is_exact
+    assert not StaleMixing(0, wire_dtype="bf16").is_exact
+
+
+# ------------------------------------------------------------------
+# LossyGossip: topology= is authoritative, degree= a Ring shorthand
+# ------------------------------------------------------------------
+
+def test_lossy_degree_is_ring_shorthand():
+    a = LossyGossip(drop_prob=0.1, rounds=2, degree=2)
+    b = LossyGossip(drop_prob=0.1, rounds=2, topology=Ring(2))
+    assert a == b and hash(a) == hash(b)
+    assert a.topology == Ring(2)
+    assert a.degree == 2          # legacy view reads the stored graph
+    assert ", degree=" not in repr(a)  # no duplicated top-level field
+    assert repr(a) == repr(b)
+    with pytest.raises(ValueError, match="not both"):
+        LossyGossip(drop_prob=0.1, degree=2, topology=Ring(2))
+    # The bare default is the paper's degree-1 ring.
+    assert LossyGossip(drop_prob=0.1).topology == Ring(1)
+
+
+def test_lossy_round_trips_through_replace_and_apply():
+    """degree= must stay out of the dataclass fields so replace() (and
+    therefore apply_topology/apply_wire_dtype — the TrainSpec
+    wire_dtype/topology path) reconstructs without a degree/topology
+    conflict."""
+    import dataclasses
+
+    from repro.dssfn import apply_topology, apply_wire_dtype
+
+    a = LossyGossip(drop_prob=0.1, rounds=2, degree=2)
+    b = dataclasses.replace(a, wire_dtype="bfloat16")
+    assert b.topology == Ring(2) and b.wire_bits == 16
+    assert apply_topology(a, Torus(2, 4)).topology == Torus(2, 4)
+    assert apply_wire_dtype(a, "f16").wire_dtype == "float16"
+
+
+# ------------------------------------------------------------------
+# spec -> policy -> repr round trip for the whole --consensus grammar
+# ------------------------------------------------------------------
+
+_GRAMMAR_SPECS = [
+    "exact",
+    "gossip", "gossip:3", "gossip:3:2",
+    "quantized:4", "quantized:8",
+    "lossy:0.1", "lossy:0.2:3", "lossy:0.2:3:2",
+    "stale:0", "stale:2",
+]
+
+
+@pytest.mark.parametrize("spec", _GRAMMAR_SPECS)
+def test_spec_policy_repr_round_trip(spec):
+    """Every --consensus grammar entry parses to a value object whose
+    repr reconstructs an equal policy (no hidden/duplicated state), and
+    re-parsing the spec is stable."""
+    namespace = {
+        "ExactMean": ExactMean, "Gossip": Gossip, "RingGossip": RingGossip,
+        "QuantizedGossip": QuantizedGossip, "LossyGossip": LossyGossip,
+        "StaleMixing": StaleMixing, "Ring": Ring, "Torus": Torus,
+        "Hypercube": Hypercube, "FullyConnected": FullyConnected,
+        "RandomGeometric": RandomGeometric, "TimeVarying": TimeVarying,
+    }
+    pol = parse_policy(spec)
+    clone = eval(repr(pol), namespace)  # noqa: S307 - test-controlled reprs
+    assert clone == pol
+    assert hash(clone) == hash(pol)
+    assert repr(clone) == repr(pol)
+    assert parse_policy(spec) == pol

@@ -268,6 +268,88 @@ def test_topologies_are_hashable_value_objects():
 
 
 # ------------------------------------------------------------------
+# power_schedule: H^B compressed into one minimal-depth schedule
+# ------------------------------------------------------------------
+
+@given(
+    m=st.integers(min_value=2, max_value=16),
+    ti=st.integers(min_value=0, max_value=len(ALL_TOPOLOGIES) - 1),
+    rounds=st.integers(min_value=1, max_value=6),
+)
+@settings(max_examples=60, deadline=None)
+def test_power_schedule_equals_h_power(m, ti, rounds):
+    """The compressed power_schedule(B) applied to random x matches
+    H**B @ x to f32 tolerance — for every topology and M <= 16."""
+    topo = ALL_TOPOLOGIES[ti]
+    try:
+        topo.validate(m)
+    except ValueError:
+        return
+    sched = topo.power_schedule(m, rounds)
+    hb = np.linalg.matrix_power(topo.mixing_matrix(m), rounds)
+    assert np.allclose(sched.as_matrix(), hb, atol=1e-7), (topo, m, rounds)
+    rng = np.random.default_rng(m * 131 + ti * 7 + rounds)
+    x = rng.standard_normal((m, 5)).astype(np.float32)
+    got = _apply_schedule_numpy(sched, x)
+    assert np.allclose(got, hb.astype(np.float32) @ x, atol=1e-5), (
+        topo, m, rounds
+    )
+
+
+def test_power_schedule_is_shallower_than_serial():
+    """Schedule compression is a depth win: |support(H^B)| hops instead
+    of B x per-round hops (the serial schedule)."""
+    for topo, m, rounds in ((Ring(2), 8, 4), (Torus(2, 4), 8, 4)):
+        per_round = len(topo.exchange_schedule(m).perms)
+        compressed = len(topo.power_schedule(m, rounds).perms)
+        assert compressed < rounds * per_round, (topo, compressed)
+        assert compressed <= m - 1  # at most all non-identity shifts
+
+
+def test_power_schedule_time_varying_composes_cycle():
+    tv = TimeVarying((Ring(1), Hypercube()))
+    m, rounds = 8, 3  # deliberately not a multiple of the cycle length
+    sched = tv.power_schedule(m, rounds)
+    want = np.eye(m)
+    cycle = tv.cycle()
+    for b in range(rounds):
+        want = cycle[b % len(cycle)].mixing_matrix(m) @ want
+    assert np.allclose(sched.as_matrix(), want, atol=1e-8)
+
+
+def test_power_schedule_validation_and_identity():
+    with pytest.raises(ValueError, match="rounds"):
+        Ring(1).power_schedule(8, 0)
+    with pytest.raises(ValueError, match="neighbours"):
+        Ring(2).power_schedule(4, 2)
+    # rounds=1 over a single graph is the native schedule itself.
+    assert Ring(2).power_schedule(8, 1) == Ring(2).exchange_schedule(8)
+
+
+def test_schedule_compose_and_compress():
+    a = Ring(1).exchange_schedule(8)
+    b = Hypercube().exchange_schedule(8)
+    ab = a.compose(b)  # apply a's round, then b's
+    assert np.allclose(
+        ab.as_matrix(), b.as_matrix() @ a.as_matrix(), atol=1e-8
+    )
+    # compress() round-trips the implemented H without growing depth.
+    c = ab.compress()
+    assert np.allclose(c.as_matrix(), ab.as_matrix(), atol=1e-8)
+    assert len(c.perms) <= len(ab.perms)
+    with pytest.raises(ValueError, match="compose"):
+        a.compose(Ring(1).exchange_schedule(4))
+
+
+def test_compressed_schedule_is_memoized():
+    topology.compressed_schedule.cache_clear()
+    s1 = topology.compressed_schedule(Ring(2), 8, 4)
+    s2 = topology.compressed_schedule(Ring(2), 8, 4)
+    assert s1 is s2
+    assert topology.compressed_schedule.cache_info().hits >= 1
+
+
+# ------------------------------------------------------------------
 # Satellite fixes: eigvalsh on symmetric H, ValueError not assert
 # ------------------------------------------------------------------
 
