@@ -51,6 +51,12 @@ The ``wire`` section tracks the wire-efficient consensus engine:
   trace_every  traced (per-iteration psum/pmax trio) vs hot
                (trace_every=0, policy exchanges only) solve cost.
 
+The ``faults`` section tracks elastic asynchronous consensus: an
+``AsyncGossip`` sweep over drop rate x communication interval (one
+cached executable per (drop, interval) policy value) reporting
+``iter_ms``, interval-aware eq.-15 ``bytes_per_worker``, and the
+``oracle_rel`` convergence cost of the injected faults.
+
 Regression gate: ``--check-regression`` (or env
 ``BENCH_CHECK_REGRESSION=1``, used by the CI smoke job) loads the
 previously committed JSON before overwriting it and fails if any
@@ -486,6 +492,65 @@ def run(
         hot_rows["traced_iter_ms"] / max(hot_rows["hot_iter_ms"], 1e-9), 2
     )
     report["wire"]["trace_every"] = hot_rows
+
+    # Elastic asynchronous consensus: drop rate x communication interval,
+    # all through ONE shared backend (each (drop, interval) pair is a new
+    # policy VALUE -> a new cached executable; the faults run inside the
+    # compiled program, so iter_ms measures the real fault-injection
+    # overhead, not retraces).  bytes_per_worker reflects the eq.-15
+    # accounting with interval-skipped rounds: interval=4 moves 1/4 the
+    # bytes of every-iteration gossip.
+    report["faults"] = {}
+    if degree >= 1:
+        from repro.dssfn import parse_spec
+
+        faults_backend = make("mesh")
+        for drop in (0.0, 0.2):
+            for interval in (1, 4):
+                assert k % interval == 0, (k, interval)
+                # The unified spec grammar, same string the launcher and
+                # CI legs use.
+                fpol = parse_spec(
+                    f"async:rounds={GOSSIP_ROUNDS}:interval={interval}"
+                    f":drop={drop}:seed=0@ring:{degree}"
+                )
+
+                def fault_solve(fpol=fpol):
+                    return admm.admm_ridge_consensus(
+                        yw, tw, mu=1e-2, eps_radius=eps, num_iters=k,
+                        backend=faults_backend, policy=fpol, trace_every=0,
+                    )
+
+                res, f_compile_s = timed(fault_solve)
+                res, dt = steady(fault_solve)
+                nbytes = _consensus_bytes(fpol, n, q, k, m)
+                rel_oracle = float(
+                    jnp.linalg.norm(res.o_star - oracle)
+                    / jnp.linalg.norm(oracle)
+                )
+                fname = f"drop{drop}_int{interval}"
+                report["faults"][fname] = {
+                    "policy": fpol.describe(),
+                    "drop": drop,
+                    "interval": interval,
+                    "compile_s": round(f_compile_s, 4),
+                    "iter_ms": round(dt / k * 1e3, 4),
+                    "bytes_per_worker": nbytes,
+                    "oracle_rel": rel_oracle,
+                }
+                rows.append(csv_row(
+                    f"mesh_faults_{fname.replace('.', 'p')}", dt * 1e6,
+                    f"M={m};iter_us={dt / k * 1e6:.1f};drop={drop};"
+                    f"interval={interval};comm_bytes={nbytes};"
+                    f"oracle_rel={rel_oracle:.2e}",
+                ))
+                if verbose:
+                    print(rows[-1], flush=True)
+        # One lowering per (drop, interval) policy value, zero retraces.
+        report["faults_lowerings"] = faults_backend.lowerings
+        assert faults_backend.lowerings == len(report["faults"]), (
+            faults_backend.cache_info()
+        )
 
     # Centralized-equivalence parity: same mode, different runtime.
     report["parity"] = {}

@@ -36,10 +36,14 @@ def main():
         mu0=1e-3, mul=1e-2, admm_iters=100,
     )
     key = jax.random.PRNGKey(7)   # seeds the SHARED random matrices {R_l}
+    # The unified spec grammar: "gossip:B:d" is the same string the
+    # launcher's --consensus flag and the benchmarks use, and equals the
+    # RingGossip(rounds=B, degree=d) policy object.
     spec = dssfn.TrainSpec(
         cfg=cfg, backend="simulated", workers=m,
-        policy=RingGossip(rounds=rounds, degree=degree),
+        policy=f"gossip:{rounds}:{degree}",
     )
+    assert spec.resolve_policy() == RingGossip(rounds=rounds, degree=degree)
     result = dssfn.train(spec, xw, tw, key)
     params_d, log = result.params, result.log
     print(f"dSSFN trained in {log.wall_time_s:.1f}s; layer costs: "

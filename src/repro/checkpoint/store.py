@@ -39,6 +39,35 @@ def save_pytree(path: str, tree: Any) -> None:
         json.dump(meta, f)
 
 
+def load_pytree_flat(path: str) -> dict[str, np.ndarray]:
+    """Template-free load: the flat ``{tree-path: array}`` mapping
+    ``save_pytree`` wrote, with bf16 leaves reconstructed from the
+    sidecar metadata.
+
+    ``load_pytree`` needs a structurally identical ``like`` template,
+    which a resuming process does not have yet — elastic resume restores
+    the flat mapping first and rebuilds the training state from it (the
+    checkpoint's own ``layer_next`` scalar determines how many per-layer
+    entries exist).
+    """
+    npz_path = path if path.endswith(".npz") else path + ".npz"
+    data = np.load(npz_path)
+    meta_path = npz_path + ".meta.json"
+    if not os.path.exists(meta_path):  # save_pytree("x") -> x.meta.json
+        meta_path = npz_path.removesuffix(".npz") + ".meta.json"
+    with open(meta_path) as f:
+        meta = json.load(f)
+    out = {}
+    for key in data.files:
+        arr = data[key]
+        if meta.get(key, {}).get("dtype") == "bfloat16":
+            import ml_dtypes
+
+            arr = arr.view(ml_dtypes.bfloat16)
+        out[key] = arr
+    return out
+
+
 def load_pytree(path: str, like: Any) -> Any:
     npz_path = path if path.endswith(".npz") else path + ".npz"
     data = np.load(npz_path)

@@ -271,12 +271,33 @@ def worker_admm_iterations(
     iterate is bit-identical since no trace value feeds the carry).
     ``N > 1`` traces every N-th iteration (K/N-long traces).
 
+    When the policy declares a ``communication_interval`` of N > 1
+    (``AsyncGossip(interval=N)``), the scan is restructured into K/N
+    chunks of N-1 purely LOCAL iterations (the z-update projects the
+    worker's own ``o + lam``; no mixing, no policy-state advance)
+    followed by one communicating iteration — the skipping is
+    structural, so the lowered program carries 1/N of the collectives
+    with no runtime branching.  Requires ``num_iters % N == 0`` and
+    ``trace_every`` in {0, 1}.
+
     Returns ``(o, z, lam), traces`` where ``traces`` is the
     ``(objs, primals, duals, cerrs)`` tuple, or ``None`` when
     ``trace_every=0``.
     """
     policy = policy if policy is not None else backend.policy
     trace_every = validate_trace_every(trace_every, num_iters)
+    interval = policy.communication_interval
+    if interval > 1:
+        if num_iters % interval != 0:
+            raise ValueError(
+                f"communication interval {interval} must divide "
+                f"num_iters={num_iters}"
+            )
+        if trace_every > 1:
+            raise ValueError(
+                "trace_every > 1 does not compose with a communication "
+                "interval; use trace_every of 0 or 1"
+            )
     ctx = backend.ctx()
     q, n = a.shape
     dtype = a.dtype
@@ -287,6 +308,17 @@ def worker_admm_iterations(
         rhs = a + (z - lam) / mu
         o = jax.scipy.linalg.cho_solve((chol, True), rhs.T).T
         avg, pstate = policy.mix(o + lam, pstate, ctx)
+        z_new = project_frobenius(avg, eps_radius)
+        lam_new = lam + o - z_new
+        return ((o, z_new, lam_new), pstate), (avg, z)
+
+    def local_iterate(carry):
+        """A skipped round: the same eq.-11 update against the worker's
+        OWN estimate (avg = o + lam, no wire, no policy-state advance)."""
+        (_, z, lam), pstate = carry
+        rhs = a + (z - lam) / mu
+        o = jax.scipy.linalg.cho_solve((chol, True), rhs.T).T
+        avg = o + lam
         z_new = project_frobenius(avg, eps_radius)
         lam_new = lam + o - z_new
         return ((o, z_new, lam_new), pstate), (avg, z)
@@ -314,8 +346,52 @@ def worker_admm_iterations(
         carry, (avg, z_prev) = iterate(carry)
         return carry, trace(carry, avg, z_prev)
 
+    def step_untraced_local(carry, _):
+        carry, _ = local_iterate(carry)
+        return carry, None
+
+    def step_traced_local(carry, _):
+        carry, (avg, z_prev) = local_iterate(carry)
+        return carry, trace(carry, avg, z_prev)
+
     zeros = jnp.zeros((q, n), dtype)
     init = ((zeros, z_init, zeros), policy.init_state(zeros, ctx))
+    if interval > 1:
+        # Communication-interval chunks: N-1 local rounds, one on the
+        # wire.  The whole fault/membership story rides inside the
+        # communicating iterate's policy.mix — still one executable.
+        if trace_every == 0:
+            def comm_chunk(carry, _):
+                carry, _ = jax.lax.scan(
+                    step_untraced_local, carry, None, length=interval - 1
+                )
+                carry, _ = iterate(carry)
+                return carry, None
+
+            (state, _), _ = jax.lax.scan(
+                comm_chunk, init, None, length=num_iters // interval
+            )
+            return state, None
+
+        def comm_chunk(carry, _):
+            carry, local_traces = jax.lax.scan(
+                step_traced_local, carry, None, length=interval - 1
+            )
+            carry, comm_trace = step_traced(carry, None)
+            chunk_traces = jax.tree.map(
+                lambda ls, c: jnp.concatenate([ls, c[None]]),
+                local_traces, comm_trace,
+            )
+            return carry, chunk_traces
+
+        (state, _), traces = jax.lax.scan(
+            comm_chunk, init, None, length=num_iters // interval
+        )
+        # (K/N, N) chunked traces -> flat (K,) per-iteration traces.
+        traces = jax.tree.map(
+            lambda v: v.reshape((num_iters,) + v.shape[2:]), traces
+        )
+        return state, traces
     if trace_every == 0:
         (state, _), _ = jax.lax.scan(
             step_untraced, init, None, length=num_iters

@@ -27,10 +27,12 @@ B -> infinity limit), ``Gossip`` (B rounds of doubly-stochastic gossip
 over a first-class ``repro.core.topology.Topology`` — ring, torus,
 hypercube, fully-connected, random-geometric, time-varying — whose
 static exchange schedule runs as ``lax.ppermute`` hops),
-``QuantizedGossip``, ``LossyGossip`` and ``StaleMixing`` (each of which
-also takes ``topology=``).  ``RingGossip`` is the bit-identical
-ring-topology alias; the legacy string modes (``mode='exact'|'gossip'``
-plus ``degree``/``num_rounds``) remain as thin deprecated aliases.
+``QuantizedGossip``, ``LossyGossip``, ``StaleMixing`` and the
+fault-tolerant ``AsyncGossip`` (each of which also takes ``topology=``).
+``RingGossip`` is the bit-identical ring-topology alias.  Policy objects
+(or spec strings via :func:`make_backend`) are the single entry point:
+the pre-policy ``mode=``/``degree=``/``num_rounds=`` string aliases were
+removed and now raise ``TypeError`` with a migration hint.
 
 Executable cache
 ----------------
@@ -54,7 +56,6 @@ first trace would bake it into every later run.
 from __future__ import annotations
 
 import abc
-import warnings
 from collections import OrderedDict
 from typing import Any, Callable, Hashable
 
@@ -79,6 +80,25 @@ _EXEC_CACHE_SIZE = 64
 def _supports_donation() -> bool:
     """XLA ignores donation on CPU (with a warning) — skip it there."""
     return jax.default_backend() != "cpu"
+
+
+def _reject_legacy_kwargs(name: str, kwargs: dict) -> None:
+    """The PR-3 ``mode=`` string aliases are gone: fail with a migration
+    hint (a clean ``TypeError``, the unknown-keyword contract) instead of
+    silently accepting configuration that no longer does anything."""
+    legacy = sorted(k for k in kwargs if k in ("mode", "degree", "num_rounds"))
+    if legacy:
+        raise TypeError(
+            f"{name}() no longer accepts {', '.join(legacy)}: the string-"
+            "mode aliases were removed. Pass policy=ExactMean() for "
+            "mode='exact', policy=RingGossip(rounds=num_rounds, "
+            "degree=degree) for mode='gossip', or a spec string such as "
+            "'gossip:4:2' (repro.core.policy.parse_policy)."
+        )
+    if kwargs:
+        raise TypeError(
+            f"{name}() got unexpected keyword argument(s) {sorted(kwargs)}"
+        )
 
 
 def _closes_over_arrays(fn) -> bool:
@@ -121,29 +141,9 @@ class ConsensusBackend(abc.ABC):
     num_workers: int
     policy: ConsensusPolicy
 
-    def _init_consensus(
-        self,
-        policy: ConsensusPolicy | None,
-        mode: str | None,
-        degree: int,
-        num_rounds: int,
-    ) -> None:
-        if policy is not None and mode is not None:
-            raise ValueError("pass either policy or mode, not both")
+    def _init_consensus(self, policy: ConsensusPolicy | None) -> None:
         if policy is None:
-            if mode is not None:
-                # The pre-policy string API: kept working, but the policy
-                # object is the supported spelling.
-                warnings.warn(
-                    f"ConsensusBackend(mode={mode!r}, ...) is a deprecated "
-                    "alias; pass policy=ExactMean()/RingGossip(...) "
-                    "(repro.core.policy) instead",
-                    DeprecationWarning,
-                    stacklevel=3,
-                )
-            policy = policy_lib.policy_from_mode(
-                mode or "exact", degree=degree, num_rounds=num_rounds
-            )
+            policy = policy_lib.ExactMean()
         if not isinstance(policy, ConsensusPolicy):
             raise TypeError(
                 f"policy must be a ConsensusPolicy, got {type(policy).__name__}"
@@ -403,16 +403,15 @@ class SimulatedBackend(ConsensusBackend):
         num_workers: int,
         *,
         policy: ConsensusPolicy | None = None,
-        mode: str | None = None,
-        degree: int = 1,
-        num_rounds: int = 1,
         axis_name: str = WORKER_AXIS,
+        **removed,
     ):
+        _reject_legacy_kwargs("SimulatedBackend", removed)
         if num_workers < 1:
             raise ValueError(f"num_workers must be >= 1, got {num_workers}")
         self.num_workers = int(num_workers)
         self.axis_name = axis_name
-        self._init_consensus(policy, mode, degree, num_rounds)
+        self._init_consensus(policy)
 
     def _build_executable(self, fn, n_stacked, n_replicated, donate, collective):
         def counted(*args):
@@ -441,11 +440,10 @@ class MeshBackend(ConsensusBackend):
         mesh: Mesh | None = None,
         *,
         policy: ConsensusPolicy | None = None,
-        mode: str | None = None,
-        degree: int = 1,
-        num_rounds: int = 1,
         axis_name: str = WORKER_AXIS,
+        **removed,
     ):
+        _reject_legacy_kwargs("MeshBackend", removed)
         if mesh is None:
             from repro.launch.mesh import make_worker_mesh
 
@@ -459,7 +457,7 @@ class MeshBackend(ConsensusBackend):
         self.num_workers = int(
             mesh.devices.shape[mesh.axis_names.index(axis_name)]
         )
-        self._init_consensus(policy, mode, degree, num_rounds)
+        self._init_consensus(policy)
 
     def shard_workers(self, x: Array) -> Array:
         spec = [None] * jnp.ndim(x)
@@ -502,29 +500,25 @@ def make_backend(
     *,
     mesh: Mesh | None = None,
     policy: ConsensusPolicy | str | None = None,
-    mode: str | None = None,
     degree: int = 1,
-    num_rounds: int = 1,
+    **removed,
 ) -> ConsensusBackend:
     """CLI-friendly factory: kind in {'simulated', 'mesh'}.
 
-    ``policy`` is the supported consensus selector — a ConsensusPolicy
-    object or a spec string (``"exact"``, ``"gossip:4:2"``,
-    ``"quantized:8"``, ``"lossy:0.1"``, ``"stale:2"``, see
-    ``policy.parse_policy``).  The old ``mode=``/``degree=``/
-    ``num_rounds=`` strings remain as deprecated aliases.
+    ``policy`` selects the consensus flavor — a ConsensusPolicy object or
+    a spec string (``"exact"``, ``"gossip:4:2"``, ``"quantized:8"``,
+    ``"lossy:0.1"``, ``"stale:2"``, ``"async:interval=4:drop=0.1"``; see
+    ``policy.parse_policy``).  ``degree`` is the ring degree used when a
+    spec string leaves it implicit.  The pre-PR-3 ``mode=``/``num_rounds=``
+    keyword aliases were removed; passing them raises TypeError.
     """
+    _reject_legacy_kwargs("make_backend", removed)
     if isinstance(policy, str):
         policy = policy_lib.parse_policy(policy, degree=degree)
     if kind == "simulated":
         if num_workers is None:
             raise ValueError("simulated backend requires num_workers")
-        return SimulatedBackend(
-            num_workers, policy=policy, mode=mode, degree=degree,
-            num_rounds=num_rounds,
-        )
+        return SimulatedBackend(num_workers, policy=policy)
     if kind == "mesh":
-        return MeshBackend(
-            mesh, policy=policy, mode=mode, degree=degree, num_rounds=num_rounds
-        )
+        return MeshBackend(mesh, policy=policy)
     raise ValueError(f"unknown backend kind {kind!r}; expected 'simulated' or 'mesh'")

@@ -219,6 +219,63 @@ def lossy_schedule_gossip_step(
     return acc / wsum
 
 
+def faulty_schedule_gossip_step(
+    x: jax.Array,
+    axis_name: str,
+    schedule,
+    alive: jax.Array,
+    *,
+    worker_index: jax.Array | None = None,
+    transmit: jax.Array | None = None,
+    wire_dtype: str | None = None,
+) -> jax.Array:
+    """One exchange-schedule gossip round under a shared fault mask.
+
+    ``alive`` is an (M,) 0/1 vector computed IDENTICALLY on every worker
+    (the same seeded draw at the same trace point — see
+    ``policy.FaultModel.alive_mask``), marking which workers are up this
+    round.  A step's message survives only when both endpoints are up
+    (gate g = alive[me] * alive[src]); the weight of every dead link is
+    rerouted to the receiver's own value:
+
+        x' = self_w * x + sum_k w_k [g_k * recv_k + (1 - g_k) * x]
+
+    so every realized row sums to 1 regardless of the draw, and a down
+    worker degenerates to an identity row (it holds its value).  When
+    the schedule is inverse-closed (``topology.is_inverse_closed`` —
+    all uniform vertex-transitive schedules are), the symmetric gate
+    kills the (i -> j) and (j -> i) weights together, making the
+    realized matrix column-stochastic on the up set as well: the mean
+    over up workers is preserved exactly, the invariant the fault model
+    is built on.
+
+    ``transmit`` substitutes the value peers RECEIVE (straggler replay
+    of a stale iterate); the worker's own contribution is always the
+    fresh ``x``.  ``wire_dtype`` narrows the link payload as in
+    :func:`schedule_gossip_step`.  Everything here is data — the mask
+    rides through the cached SPMD program, so faults never retrace.
+    """
+    me = (
+        jax.lax.axis_index(axis_name) if worker_index is None else worker_index
+    )
+    out = x if transmit is None else transmit
+    wire = out if wire_dtype is None else out.astype(wire_dtype)
+    alive = alive.astype(x.dtype)
+    a_me = alive[me]
+    acc = jnp.asarray(schedule.self_weight, x.dtype) * x
+    lost = jnp.zeros((), x.dtype)
+    m = schedule.num_workers
+    for perm, w in zip(schedule.perms, schedule.weights):
+        src = np.zeros(m, dtype=np.int32)
+        for s, d in perm:
+            src[d] = s
+        g = a_me * alive[jnp.asarray(src)[me]]
+        msg = jax.lax.ppermute(wire, axis_name, perm).astype(x.dtype)
+        acc = acc + (w * g) * msg
+        lost = lost + w * (1.0 - g)
+    return acc + lost * x
+
+
 def quantize_stochastic(x: jax.Array, bits: int, key: jax.Array) -> jax.Array:
     """Unbiased per-tensor stochastic-rounding quantization to 2^bits
     levels over the tensor's dynamic range: E[q(x)] = x."""

@@ -129,6 +129,20 @@ def fused_layer_step(
     policy = policy if policy is not None else backend.policy
     policy.validate(backend.num_workers)
     trace_every = admm_lib.validate_trace_every(trace_every, num_iters)
+    # Interval-mixing policies chunk the ADMM scan structurally; surface
+    # the incompatible-configuration errors here, before any tracing.
+    interval = policy.communication_interval
+    if interval > 1:
+        if num_iters % interval:
+            raise ValueError(
+                f"communication_interval={interval} must divide "
+                f"num_iters={num_iters} (whole local/communicate chunks)"
+            )
+        if trace_every > 1:
+            raise ValueError(
+                "communication_interval > 1 supports trace_every in {0, 1} "
+                f"only, got {trace_every}"
+            )
 
     def worker(y_m: Array, t_m: Array, *w_rep: Array):
         if w_rep:

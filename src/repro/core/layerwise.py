@@ -21,6 +21,7 @@ stop costs exactly one scalar fetch per layer.  The legacy dense-H
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass
 from typing import Callable
@@ -32,10 +33,116 @@ import numpy as np
 from repro.core import admm as admm_lib
 from repro.core import engine as engine_lib
 from repro.core import ssfn as ssfn_lib
+from repro.core import topology as topology_lib
 from repro.core.backend import ConsensusBackend, SimulatedBackend
 from repro.core.policy import ConsensusPolicy
 
 Array = jax.Array
+
+_CKPT_PREFIX = "dssfn_layer_"
+
+
+def checkpoint_path(directory: str, layer_next: int) -> str:
+    """Per-layer checkpoint file: ``dssfn_layer_003.npz`` holds the full
+    training state with layers 0..2 complete."""
+    return os.path.join(directory, f"{_CKPT_PREFIX}{layer_next:03d}.npz")
+
+
+def latest_checkpoint(directory: str) -> str | None:
+    """Newest (deepest) checkpoint in ``directory``, or None."""
+    if not os.path.isdir(directory):
+        return None
+    names = [
+        f for f in os.listdir(directory)
+        if f.startswith(_CKPT_PREFIX) and f.endswith(".npz")
+    ]
+    if not names:
+        return None
+    return os.path.join(directory, max(names))
+
+
+def _key_data(key: jax.Array) -> jax.Array:
+    """PRNG key -> raw uint32 array (typed keys unwrap; raw pass through).
+
+    The raw form round-trips through npz and is itself a valid legacy
+    key, so resume can feed it straight back to ``init_random_matrices``.
+    """
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        return jax.random.key_data(key)
+    return key
+
+
+def _save_checkpoint(
+    directory: str, *, layer_next: int, key, y_workers, o_list,
+    step: engine_lib.LayerStepResult, dev_traces, comm: int,
+    prev_cost: float | None, active_mask: np.ndarray,
+) -> str:
+    """Elastic-resume state after ``layer_next`` completed layers: layer
+    features, per-layer readouts, the last solve's worker primals/duals,
+    the RNG key (layer weights are re-derived, not stored), membership,
+    and the device traces accumulated so far."""
+    from repro.checkpoint.store import save_pytree
+
+    state = {
+        "layer_next": np.int64(layer_next),
+        "key": _key_data(key),
+        "y_workers": y_workers,
+        "o": {str(i): o for i, o in enumerate(o_list)},
+        "o_workers": step.o_workers,
+        "lam": step.lam,
+        "comm": np.int64(comm),
+        "prev_cost": np.float64(np.nan if prev_cost is None else prev_cost),
+        "membership": np.asarray(active_mask, np.float64),
+    }
+    if dev_traces:
+        fetched = [jax.tree.map(np.asarray, tr) for tr in dev_traces]
+        state["tr"] = {
+            "obj": np.stack([t.objective for t in fetched]),
+            "primal": np.stack([t.primal_residual for t in fetched]),
+            "dual": np.stack([t.dual_residual for t in fetched]),
+            "cerr": np.stack([t.consensus_error for t in fetched]),
+        }
+    path = checkpoint_path(directory, layer_next)
+    save_pytree(path, state)
+    return path
+
+
+def _load_checkpoint(path: str) -> dict:
+    """Flat checkpoint -> the resume state ``train_decentralized_ssfn``
+    restores from (inverse of ``_save_checkpoint``)."""
+    from repro.checkpoint.store import load_pytree_flat
+
+    flat = load_pytree_flat(path)
+    layer_next = int(flat["layer_next"])
+    prev_cost = float(flat["prev_cost"])
+    traces = []
+    if "tr/obj" in flat:
+        for i in range(flat["tr/obj"].shape[0]):
+            traces.append(admm_lib.ADMMTrace(
+                flat["tr/obj"][i], flat["tr/primal"][i],
+                flat["tr/dual"][i], flat["tr/cerr"][i],
+            ))
+    return {
+        "layer_next": layer_next,
+        "key": jnp.asarray(flat["key"]),
+        "y_workers": jnp.asarray(flat["y_workers"]),
+        "o_list": [
+            jnp.asarray(flat[f"o/{i}"]) for i in range(layer_next)
+        ],
+        "comm": int(flat["comm"]),
+        "prev_cost": None if np.isnan(prev_cost) else prev_cost,
+        "membership": flat["membership"],
+        "traces": traces,
+    }
+
+
+def _active_mask(policy: ConsensusPolicy, num_workers: int) -> np.ndarray:
+    """The membership mask a checkpoint records: the ``Masked`` topology's
+    active set, or all-ones for full-membership policies."""
+    topo = getattr(policy, "topology", None)
+    if isinstance(topo, topology_lib.Masked):
+        return topo.membership.mask()
+    return np.ones(num_workers, np.float64)
 
 
 @dataclass
@@ -67,6 +174,10 @@ def train_decentralized_ssfn(
     gossip_rounds: int = 1,
     size_estimation_tol: float | None = None,
     trace_every: int = 1,
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int = 1,
+    resume: bool = False,
+    stop_after_layer: int | None = None,
 ) -> tuple[ssfn_lib.SSFNParams, LayerwiseLog]:
     """Train dSSFN on M workers.
 
@@ -102,9 +213,35 @@ def train_decentralized_ssfn(
         N > 1 = every N-th iteration.  ``trace_every=0`` is incompatible
         with ``size_estimation_tol`` (the stop rule reads the consensus
         objective).
+    checkpoint_dir: directory for elastic-resume checkpoints; None (the
+        default) never touches disk.  State is saved after every
+        ``checkpoint_every``-th completed layer (and always at a
+        ``stop_after_layer`` stop): the layer features, per-layer
+        readouts, the last solve's primals/duals, the RNG key, the
+        membership mask and the accumulated traces — everything a fresh
+        process needs to continue bit-exactly.
+    resume: restore the latest ``checkpoint_dir`` checkpoint and continue
+        from its next layer (a no-op when the directory has none).  The
+        resumed run reproduces the uninterrupted run's iterates exactly:
+        layer solves are deterministic functions of the restored features
+        and the re-derived random matrices.
+    stop_after_layer: complete this layer index, checkpoint, and return
+        the partial model (the crash half of a kill/resume drill; also a
+        cheap way to train the first layers now and the rest later).
     """
     if consensus_fn is not None and (backend is not None or policy is not None):
         raise ValueError("pass either consensus_fn or backend/policy, not both")
+    if consensus_fn is not None and (
+        checkpoint_dir is not None or resume or stop_after_layer is not None
+    ):
+        raise ValueError(
+            "checkpoint/resume runs through the backend engine path; the "
+            "legacy consensus_fn simulation does not support it"
+        )
+    if resume and checkpoint_dir is None:
+        raise ValueError("resume=True needs a checkpoint_dir to restore from")
+    if checkpoint_dir is not None and checkpoint_every < 1:
+        raise ValueError(f"checkpoint_every must be >= 1, got {checkpoint_every}")
     if trace_every == 0 and size_estimation_tol is not None:
         raise ValueError(
             "size_estimation_tol reads the per-layer consensus objective; "
@@ -125,31 +262,49 @@ def train_decentralized_ssfn(
 
     q = cfg.num_classes
     t0 = time.perf_counter()
-    r_list = ssfn_lib.init_random_matrices(key, cfg)
 
     engine_backend = backend or SimulatedBackend(x_workers.shape[0])
-    # eq.-15 accounting: the policy declares its own exchange count; the
-    # implicit simulated-exact default (no backend, no policy) keeps the
-    # legacy ``gossip_rounds`` convention.
+    # eq.-15 accounting: the policy declares its own scalar count (its
+    # M-aware exchange schedule AND its communication interval — an
+    # ``AsyncGossip(interval=N)`` only touches the wire every N-th ADMM
+    # iteration); the implicit simulated-exact default (no backend, no
+    # policy) keeps the legacy ``gossip_rounds`` convention.
     explicit = backend is not None or policy is not None
     policy = policy if policy is not None else engine_backend.policy
-    # M-aware: topology degree can depend on the worker count.
-    exchanges = (
-        policy.exchanges_for(engine_backend.num_workers)
-        if explicit else gossip_rounds
-    )
-    x_workers = engine_backend.shard_workers(x_workers)
+    num_workers = engine_backend.num_workers
     t_workers = engine_backend.shard_workers(t_workers)
 
     o_list: list[Array] = []
-    y_workers = x_workers                      # y_0 = x
     w_next: Array | None = None
     # Device-resident (K,) traces per layer; fetched once after the loop.
     dev_traces: list[admm_lib.ADMMTrace] = []
     comm = 0
     prev_cost: float | None = None
+    layer_start = 0
 
-    for layer in range(cfg.num_layers + 1):
+    restored = None
+    if resume:
+        ckpt = latest_checkpoint(checkpoint_dir)
+        if ckpt is not None:
+            restored = _load_checkpoint(ckpt)
+    if restored is not None:
+        layer_start = restored["layer_next"]
+        key = restored["key"]
+        o_list = list(restored["o_list"])
+        dev_traces = list(restored["traces"])
+        comm = restored["comm"]
+        prev_cost = restored["prev_cost"]
+        y_workers = engine_backend.shard_workers(restored["y_workers"])
+        r_list = ssfn_lib.init_random_matrices(key, cfg)
+        if layer_start <= cfg.num_layers:
+            w_next = ssfn_lib.build_weight(
+                o_list[-1], r_list[layer_start - 1], q
+            )
+    else:
+        r_list = ssfn_lib.init_random_matrices(key, cfg)
+        y_workers = engine_backend.shard_workers(x_workers)   # y_0 = x
+
+    for layer in range(layer_start, cfg.num_layers + 1):
         step = engine_lib.fused_layer_step(
             engine_backend,
             y_workers,
@@ -171,9 +326,32 @@ def train_decentralized_ssfn(
         o_list.append(step.o_star)
         if step.trace is not None:
             dev_traces.append(step.trace)
-        # Communication accounting, eq. 15: Q * n_{l-1} scalars per exchange,
-        # B exchanges per consensus, K consensus rounds per layer.
-        comm += q * y_workers.shape[1] * exchanges * cfg.admm_iters
+        # Communication accounting, eq. 15: Q * n_{l-1} scalars per
+        # exchange, B exchanges per consensus, K communicating consensus
+        # rounds per layer — the policy itself knows its exchange count
+        # and how many of the K iterations actually hit the wire.
+        if explicit:
+            comm += policy.comm_scalars(
+                scalars=q * y_workers.shape[1],
+                num_consensus=cfg.admm_iters,
+                num_workers=num_workers,
+            )
+        else:
+            comm += q * y_workers.shape[1] * gossip_rounds * cfg.admm_iters
+
+        stopping = stop_after_layer is not None and layer >= stop_after_layer
+        if checkpoint_dir is not None and (
+            stopping or (layer + 1) % checkpoint_every == 0
+        ):
+            _save_checkpoint(
+                checkpoint_dir, layer_next=layer + 1, key=key,
+                y_workers=np.asarray(jax.device_get(y_workers)),
+                o_list=o_list, step=step, dev_traces=dev_traces,
+                comm=comm, prev_cost=prev_cost,
+                active_mask=_active_mask(policy, num_workers),
+            )
+        if stopping:
+            break
 
         # Self-size estimation: every worker sees the same consensus
         # objective, so this stop decision is itself consensual.  This is

@@ -29,6 +29,7 @@ policy                              exchanges/round                 wire bits
 ``QuantizedGossip(bits, ...)``      1 (or rounds * edges)           ``bits``
 ``LossyGossip(drop_prob, ...)``     rounds * topology edges         32/16
 ``StaleMixing(delay, ...)``         1 (or topology edges)           32/16
+``AsyncGossip(rounds, interval)``   rounds * edges / interval       32/16
 ==================================  ==============================  ==========
 
 Wire efficiency: gossip-family policies take ``wire_dtype=`` (f32 /
@@ -73,6 +74,7 @@ from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import consensus as consensus_lib
 from repro.core import topology as topology_lib
@@ -139,6 +141,17 @@ class ConsensusPolicy(abc.ABC):
         return self.exchanges_per_round
 
     @property
+    def communication_interval(self) -> int:
+        """Mix every N-th consensus call (Bagua-style local steps).
+
+        1 for every synchronous policy; ``AsyncGossip(interval=N)``
+        raises it, and the ADMM scan then runs N-1 purely local
+        iterations per communicating one — structurally, so the lowered
+        program's collective count scales by 1/N with no branching.
+        """
+        return 1
+
+    @property
     def is_exact(self) -> bool:
         """True if ``mix`` returns the true mean on every worker —
         lets callers skip consensus-error collectives on the hot path."""
@@ -176,18 +189,31 @@ class ConsensusPolicy(abc.ABC):
         out, _ = self.mix(x, self.init_state(x, ctx), ctx)
         return out
 
+    def comm_scalars(
+        self, *, scalars: int, num_consensus: int,
+        num_workers: int | None = None,
+    ) -> int:
+        """Eq.-15 scalars per worker on the wire: ``scalars`` floats per
+        exchange, ``exchanges_for(M)`` exchanges per consensus call,
+        ``num_consensus`` consensus calls.  Policies that skip rounds
+        (``AsyncGossip``'s communication interval) override this so the
+        accounting reflects what actually moves.
+        """
+        return scalars * self.exchanges_for(num_workers) * num_consensus
+
     def wire_bytes(
         self, *, scalars: int, num_consensus: int,
         num_workers: int | None = None,
     ) -> int:
-        """Eq.-15 wire bytes per worker: ``scalars`` floats per exchange,
-        ``exchanges_for(M)`` exchanges per consensus call,
-        ``num_consensus`` consensus calls, at this policy's link width.
-        The single accounting used by layerwise logs and benchmarks.
+        """Eq.-15 wire bytes per worker — :meth:`comm_scalars` at this
+        policy's link width.  The single accounting used by layerwise
+        logs and benchmarks.
         """
         return (
-            scalars * self.exchanges_for(num_workers) * num_consensus
-            * self.wire_bits // 8
+            self.comm_scalars(
+                scalars=scalars, num_consensus=num_consensus,
+                num_workers=num_workers,
+            ) * self.wire_bits // 8
         )
 
     def describe(self) -> str:
@@ -704,30 +730,291 @@ class StaleMixing(ConsensusPolicy):
         return out
 
 
+# --------------------------------------------------------------- async
+
+@dataclass(frozen=True)
+class FaultModel:
+    """Deterministic, seeded fault process evaluated INSIDE the SPMD
+    program — faults are data, never control flow, so the same cached
+    executable serves every realized fault pattern.
+
+    ``drop``: each worker independently misses each gossip round with
+    this probability.  The draw folds ``(seed, iteration, round)`` into
+    one PRNG key WITHOUT the worker index, so all M workers compute the
+    identical (M,) mask at the same trace point — the shared-knowledge
+    property the renormalization in
+    ``consensus.faulty_schedule_gossip_step`` relies on (and what makes
+    the run bit-reproducible across backends).
+
+    ``failed``/``fail_at``: the listed worker slots go down permanently
+    once the ADMM iteration counter reaches ``fail_at`` (identity rows
+    from then on — the crash-stop model).
+
+    ``stragglers``/``straggle``: the listed workers transmit the value
+    they held ``straggle`` communicating rounds ago (zeros before the
+    window fills, matching the ADMM zero init); their OWN mixing input
+    stays fresh, mirroring :class:`StaleMixing`'s self-substitution.
+    """
+
+    drop: float = 0.0
+    seed: int = 0
+    fail_at: int | None = None
+    failed: tuple[int, ...] = ()
+    straggle: int = 1
+    stragglers: tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if not 0.0 <= self.drop < 1.0:
+            raise ValueError(f"drop must be in [0, 1), got {self.drop}")
+        object.__setattr__(
+            self, "failed", tuple(sorted(int(i) for i in self.failed))
+        )
+        object.__setattr__(
+            self, "stragglers", tuple(sorted(int(i) for i in self.stragglers))
+        )
+        if self.failed and self.fail_at is None:
+            object.__setattr__(self, "fail_at", 0)
+        if self.fail_at is not None and self.fail_at < 0:
+            raise ValueError(f"fail_at must be >= 0, got {self.fail_at}")
+        if self.straggle < 1:
+            raise ValueError(
+                f"straggle delay must be >= 1 round, got {self.straggle}"
+            )
+
+    @property
+    def is_null(self) -> bool:
+        """No fault source configured — policies fall through to their
+        fault-free (bit-identical) mixing path."""
+        return self.drop == 0.0 and not self.failed and not self.stragglers
+
+    def validate(self, num_workers: int) -> None:
+        for i in self.failed + self.stragglers:
+            if not 0 <= i < num_workers:
+                raise ValueError(
+                    f"fault model names worker {i}, mesh has {num_workers}"
+                )
+        if len(set(self.failed)) >= num_workers:
+            raise ValueError("fault model permanently fails every worker")
+
+    def _member_mask(self, workers: tuple[int, ...], num_workers: int):
+        return np.isin(np.arange(num_workers), workers)
+
+    def alive_mask(self, iteration, round_idx: int, num_workers: int, dtype):
+        """(M,) 0/1 up-mask for one gossip round; ``iteration`` may be a
+        traced int32 (it indexes the PRNG fold and the fail_at compare,
+        both of which trace cleanly)."""
+        alive = jnp.ones((num_workers,), dtype)
+        if self.drop > 0.0:
+            key = jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(self.seed), iteration),
+                round_idx,
+            )
+            alive = jax.random.bernoulli(
+                key, 1.0 - self.drop, (num_workers,)
+            ).astype(dtype)
+        if self.failed:
+            fail = jnp.asarray(
+                self._member_mask(self.failed, num_workers), dtype
+            )
+            down = fail * (
+                jnp.asarray(iteration, jnp.int32) >= self.fail_at
+            ).astype(dtype)
+            alive = alive * (1.0 - down)
+        return alive
+
+
+@dataclass(frozen=True)
+class AsyncGossip(ConsensusPolicy):
+    """Elastic asynchronous gossip: serial rounds over any topology, a
+    per-worker communication interval (mix every ``interval``-th ADMM
+    iteration, Bagua-style), and a seeded :class:`FaultModel` running
+    inside the cached program.
+
+    With ``interval=N`` the ADMM scan runs N-1 purely local iterations
+    per communicating one — structurally (the chunked scan in
+    ``admm.worker_admm_iterations``), so the lowered collective count
+    and the declared eq.-15 accounting (:meth:`comm_scalars`) both
+    scale by 1/N.  ``TimeVarying`` topologies rotate across
+    communicating calls: call t starts on phase ``t % L``, giving the
+    rotating peer-selection of asynchronous gossip.
+
+    Faults renormalize on the fly (``faulty_schedule_gossip_step``):
+    every realized mixing slice stays row-stochastic, and because only
+    inverse-closed schedules are admitted under faults (validated), it
+    stays mean-preserving on the up set too.  A null fault model falls
+    through to the plain serial schedule path — bit-identical to
+    ``Gossip(compress=False)`` over the same graph.  Faults and
+    membership are VALUES (part of the policy, hence of the executable
+    cache key): one lowering per (policy, fault model), no retraces.
+    """
+
+    rounds: int = 1
+    interval: int = 1
+    topology: Topology = Ring(1)
+    faults: FaultModel = FaultModel()
+    wire_dtype: str = "float32"
+
+    mode_name = "async"
+
+    def __post_init__(self):
+        if self.rounds < 1:
+            raise ValueError(f"gossip rounds must be >= 1, got {self.rounds}")
+        if self.interval < 1:
+            raise ValueError(
+                f"communication interval must be >= 1, got {self.interval}"
+            )
+        if not isinstance(self.topology, Topology):
+            raise TypeError(
+                f"topology must be a Topology, got {type(self.topology).__name__}"
+            )
+        if not isinstance(self.faults, FaultModel):
+            raise TypeError(
+                f"faults must be a FaultModel, got {type(self.faults).__name__}"
+            )
+        object.__setattr__(
+            self, "wire_dtype",
+            consensus_lib.canonical_wire_dtype(self.wire_dtype),
+        )
+
+    @property
+    def degree(self) -> int:
+        """Legacy ``backend.degree`` view (ring topologies only)."""
+        return getattr(self.topology, "degree", 1)
+
+    @property
+    def wire_bits(self) -> int:  # type: ignore[override]
+        return consensus_lib.WIRE_DTYPES[self.wire_dtype]
+
+    @property
+    def communication_interval(self) -> int:
+        return self.interval
+
+    def validate(self, num_workers: int) -> None:
+        self.topology.validate(num_workers)
+        self.faults.validate(num_workers)
+        if not self.faults.is_null:
+            for phase in self.topology.cycle():
+                sched = topology_lib.cached_exchange_schedule(
+                    phase, num_workers
+                )
+                if not topology_lib.is_inverse_closed(sched):
+                    raise ValueError(
+                        "fault renormalization is mean-preserving only on "
+                        "inverse-closed exchange schedules; "
+                        f"{phase.describe()} compiles to an asymmetric hop "
+                        "set (use a vertex-transitive or Masked topology)"
+                    )
+
+    @property
+    def exchanges_per_round(self) -> int:
+        return self.exchanges_for(None)
+
+    def exchanges_for(self, num_workers: int | None) -> int:
+        """Exchanges per COMMUNICATING mix (skipped rounds are accounted
+        in :meth:`comm_scalars`, which divides the consensus count)."""
+        return _cycle_exchanges(self.topology, self.rounds, num_workers)
+
+    def comm_scalars(
+        self, *, scalars: int, num_consensus: int,
+        num_workers: int | None = None,
+    ) -> int:
+        # Only every interval-th consensus call touches the wire.
+        return (
+            scalars * self.exchanges_for(num_workers)
+            * (num_consensus // self.interval)
+        )
+
+    def init_state(self, x, ctx):
+        t0 = jnp.zeros((), jnp.int32)
+        if self.faults.stragglers:
+            buf = jnp.zeros((self.faults.straggle,) + x.shape, x.dtype)
+            return (t0, buf)
+        return (t0,)
+
+    def mix(self, x, state, ctx):
+        t = state[0]
+        wd = None if self.wire_dtype == "float32" else self.wire_dtype
+        scheds = _cycle_schedules(self.topology, ctx)
+        faults = self.faults
+        # The ADMM iteration this mix call lands on (communicating
+        # iterations close each interval chunk) — what fail_at compares
+        # against and what seeds the per-round drop draws.
+        iteration = t * self.interval + (self.interval - 1)
+        me = ctx.worker_index()
+        transmit = None
+        if faults.stragglers:
+            strag = jnp.asarray(
+                faults._member_mask(faults.stragglers, ctx.num_workers),
+                x.dtype,
+            )
+            # Stragglers replay the value transmitted `straggle` calls
+            # ago; everyone else sends fresh.
+            transmit = x + strag[me] * (state[1][0] - x)
+
+        def one_mix(phase: int):
+            # Healthy + fresh + single graph: the exact serial-Gossip
+            # execution path (fori_loop), so a disabled fault model is
+            # bit-identical to ``Gossip(compress=False)``.
+            if faults.is_null and transmit is None and len(scheds) == 1:
+                return consensus_lib.schedule_gossip_average(
+                    x, ctx.axis_name, scheds[0], self.rounds, wire_dtype=wd
+                )
+            out = x
+            for b in range(self.rounds):
+                sched = scheds[(phase + b) % len(scheds)]
+                tx = transmit if b == 0 else None
+                if faults.is_null:
+                    if tx is None:
+                        out = consensus_lib.schedule_gossip_step(
+                            out, ctx.axis_name, sched, wire_dtype=wd
+                        )
+                    else:
+                        out = consensus_lib.schedule_gossip_step(
+                            tx, ctx.axis_name, sched, self_value=out,
+                            wire_dtype=wd,
+                        )
+                else:
+                    alive = faults.alive_mask(
+                        iteration, b, ctx.num_workers, x.dtype
+                    )
+                    out = consensus_lib.faulty_schedule_gossip_step(
+                        out, ctx.axis_name, sched, alive,
+                        worker_index=me, transmit=tx, wire_dtype=wd,
+                    )
+            return out
+
+        if len(scheds) == 1:
+            out = one_mix(0)
+        else:
+            out = jax.lax.switch(
+                t % len(scheds),
+                [lambda ph=ph: one_mix(ph) for ph in range(len(scheds))],
+            )
+        if faults.stragglers:
+            buf = state[1]
+            new_buf = jnp.concatenate([buf[1:], x[None]], axis=0)
+            return out, (t + 1, new_buf)
+        return out, (t + 1,)
+
+
 # ------------------------------------------------------------- parsing
 
-#: Mode-string -> policy class, for the deprecated string-mode aliases.
-_MODES = ("exact", "gossip", "quantized", "lossy", "stale")
+#: Spec-grammar policy names (``parse_policy`` / ``dssfn.parse_spec``).
+_MODES = ("exact", "gossip", "quantized", "lossy", "stale", "async")
 
 
-def policy_from_mode(
-    mode: str, *, degree: int = 1, num_rounds: int = 1
-) -> ConsensusPolicy:
-    """Legacy ``mode=`` strings -> policy objects (the thin alias layer
-    under ``ConsensusBackend(mode=...)`` / ``make_backend(mode=...)``)."""
-    if mode == "exact":
-        return ExactMean()
-    if mode == "gossip":
-        return RingGossip(rounds=num_rounds, degree=degree)
-    raise ValueError(
-        f"unknown consensus mode {mode!r}; expected one of {_MODES[:2]} "
-        f"(or pass a ConsensusPolicy for {_MODES[2:]})"
-    )
+#: Max positional ``:``-separated arguments each policy spec accepts —
+#: extra segments are an error, never silently dropped.  ``key=value``
+#: segments are counted separately (see ``parse_policy``).
+_SPEC_MAX_ARGS = {
+    "exact": 0, "gossip": 2, "quantized": 1, "lossy": 3, "stale": 1,
+    "async": 0,
+}
 
 
-#: Max ``:``-separated arguments each policy spec accepts — extra
-#: segments are an error, never silently dropped.
-_SPEC_MAX_ARGS = {"exact": 0, "gossip": 2, "quantized": 1, "lossy": 3, "stale": 1}
+def _int_list(text: str) -> tuple[int, ...]:
+    """``"1+3+6"`` -> ``(1, 3, 6)`` (the spec grammar's worker lists)."""
+    return tuple(int(s) for s in text.split("+") if s)
 
 
 def parse_policy(
@@ -738,15 +1025,22 @@ def parse_policy(
     topology: "Topology | str | None" = None,
 ) -> ConsensusPolicy:
     """CLI policy specs: ``exact | gossip[:B[:d]] | quantized:bits |
-    lossy:p[:B[:d]] | stale:delay``.
+    lossy:p[:B[:d]] | stale:delay | async[:key=value...]``.
 
     ``degree``/``rounds`` are the fallbacks for segments the spec leaves
     out (the launcher feeds its legacy ``--degree``/``--rounds`` flags
     here, so ``lossy:0.1 --rounds 10`` means 10 lossy rounds).
 
+    Besides the positional segments, ``key=value`` segments configure
+    the orthogonal knobs: ``wire=bf16`` on any gossip-family policy, and
+    the async/fault grammar ``async:interval=4:drop=0.1:rounds=2:
+    seed=7:fail=2+5:fail_at=30:stragglers=1:straggle=3`` (worker lists
+    are ``+``-joined).  Unknown keys are an error, never dropped.
+
     ``topology`` (a ``Topology`` object or ``parse_topology`` spec
-    string — the launcher's ``--topology`` flag) replaces the default
-    ring for every gossip-family policy.  Combining it with an explicit
+    string — the launcher's ``--topology`` flag, or the ``@graph`` half
+    of a full ``dssfn.parse_spec`` string) replaces the default ring for
+    every gossip-family policy.  Combining it with an explicit
     ring-degree spec segment is ambiguous and rejected; combining it
     with ``exact`` is rejected (an all-reduce has no graph — use
     ``gossip`` with ``topology=FullyConnected()`` for the dense-graph
@@ -756,11 +1050,25 @@ def parse_policy(
     Ring(degree=1)
     >>> parse_policy("quantized:4").wire_bits
     4
+    >>> parse_policy("async:interval=4:drop=0.1").communication_interval
+    4
     """
     if isinstance(topology, str):
         topology = parse_topology(topology)
-    name, _, rest = spec.partition(":")
-    args = [a for a in rest.split(":") if a] if rest else []
+    segments = [s for s in spec.split(":") if s]
+    name = segments[0] if segments else spec
+    args: list[str] = []
+    kv: dict[str, str] = {}
+    for seg in segments[1:]:
+        if "=" in seg:
+            k, _, v = seg.partition("=")
+            if k in kv:
+                raise ValueError(
+                    f"bad consensus policy spec {spec!r}: duplicate key {k!r}"
+                )
+            kv[k] = v
+        else:
+            args.append(seg)
     if name not in _MODES:
         raise ValueError(
             f"unknown consensus policy {name!r}; expected one of {_MODES} "
@@ -769,7 +1077,7 @@ def parse_policy(
     if len(args) > _SPEC_MAX_ARGS[name]:
         raise ValueError(
             f"bad consensus policy spec {spec!r}: {name} takes at most "
-            f"{_SPEC_MAX_ARGS[name]} ':'-argument(s), got {len(args)}"
+            f"{_SPEC_MAX_ARGS[name]} positional ':'-argument(s), got {len(args)}"
         )
     if topology is not None and name == "exact":
         raise ValueError(
@@ -778,6 +1086,31 @@ def parse_policy(
             "policy)"
         )
     try:
+        wire = kv.pop("wire", None)
+        if wire is not None and name in ("exact", "quantized"):
+            raise ValueError(f"{name} takes no wire= (it has no gossip link)")
+        wire = consensus_lib.canonical_wire_dtype(wire or "float32")
+        if name == "async":
+            b = int(kv.pop("rounds", rounds))
+            interval = int(kv.pop("interval", 1))
+            fail_at = kv.pop("fail_at", None)
+            faults = FaultModel(
+                drop=float(kv.pop("drop", 0.0)),
+                seed=int(kv.pop("seed", 0)),
+                fail_at=None if fail_at is None else int(fail_at),
+                failed=_int_list(kv.pop("fail", "")),
+                straggle=int(kv.pop("straggle", 1)),
+                stragglers=_int_list(kv.pop("stragglers", "")),
+            )
+            if kv:
+                raise ValueError(f"unknown async key(s) {sorted(kv)}")
+            return AsyncGossip(
+                rounds=b, interval=interval,
+                topology=topology if topology is not None else Ring(degree),
+                faults=faults, wire_dtype=wire,
+            )
+        if kv:
+            raise ValueError(f"unknown {name} key(s) {sorted(kv)}")
         if name == "exact":
             return ExactMean()
         if name == "gossip":
@@ -788,9 +1121,9 @@ def parse_policy(
                         "pass either a ring degree segment or topology=, "
                         "not both"
                     )
-                return Gossip(rounds=b, topology=topology)
+                return Gossip(rounds=b, topology=topology, wire_dtype=wire)
             deg = int(args[1]) if len(args) > 1 else degree
-            return RingGossip(rounds=b, degree=deg)
+            return RingGossip(rounds=b, degree=deg, wire_dtype=wire)
         if name == "quantized":
             bits = int(args[0]) if args else 8
             if topology is not None:
@@ -805,11 +1138,16 @@ def parse_policy(
                         "pass either a ring degree segment or topology=, "
                         "not both"
                     )
-                return LossyGossip(drop_prob=p, rounds=b, topology=topology)
+                return LossyGossip(
+                    drop_prob=p, rounds=b, topology=topology, wire_dtype=wire
+                )
             deg = int(args[2]) if len(args) > 2 else degree
-            return LossyGossip(drop_prob=p, rounds=b, degree=deg)
+            return LossyGossip(
+                drop_prob=p, rounds=b, degree=deg, wire_dtype=wire
+            )
         return StaleMixing(
-            delay=int(args[0]) if args else 1, topology=topology
+            delay=int(args[0]) if args else 1, topology=topology,
+            wire_dtype=wire,
         )
     except ValueError as e:
         # int()/float() parse failures and constructor validation errors,

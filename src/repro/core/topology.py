@@ -624,6 +624,224 @@ def cached_exchange_schedule(
     return topology.exchange_schedule(num_workers)
 
 
+# -------------------------------------------------- elastic membership
+
+def is_inverse_closed(schedule: ExchangeSchedule, tol: float = 1e-9) -> bool:
+    """True iff every weighted permutation step has a matching inverse
+    step at equal total weight (H = H^T as a weighted multiset of hops).
+
+    This is the structural condition under which the on-the-fly fault
+    renormalization in ``consensus.faulty_schedule_gossip_step`` stays
+    *mean-preserving on the up set*: symmetric alive-gating kills the
+    (i -> j) and (j -> i) weights together, so the realized matrix loses
+    row and column mass identically and rerouting it to the diagonal
+    keeps both sums at 1.  All uniform vertex-transitive schedules
+    (``Ring``/``Torus``/``Hypercube``/``FullyConnected``) are inverse
+    closed; Birkhoff-compiled schedules of asymmetric H are generally
+    not, which is why fault-running policies validate this up front.
+    """
+    steps: dict[Permutation, float] = {}
+    for perm, w in zip(schedule.perms, schedule.weights):
+        canon = tuple(sorted(perm))
+        steps[canon] = steps.get(canon, 0.0) + float(w)
+    for canon, w in steps.items():
+        inv = tuple(sorted((dst, src) for src, dst in canon))
+        if abs(steps.get(inv, 0.0) - w) > tol:
+            return False
+    return True
+
+
+def symmetrized_schedule(schedule: ExchangeSchedule) -> ExchangeSchedule:
+    """Inverse-closed equivalent of a schedule implementing a SYMMETRIC H.
+
+    Birkhoff decompositions pick arbitrary permutations, so even a
+    symmetric matrix can compile to an asymmetric hop multiset (failing
+    :func:`is_inverse_closed` and with it the fault-renormalization
+    mean-preservation condition).  Splitting every hop into
+    ``(P, w/2) + (P^-1, w/2)`` sums to the same H whenever H = H^T and is
+    inverse-closed by construction; duplicate steps merge so symmetric
+    permutations don't double the depth.
+    """
+    steps: dict[Permutation, float] = {}
+    for perm, w in zip(schedule.perms, schedule.weights):
+        canon = tuple(sorted(perm))
+        inv = tuple(sorted((dst, src) for src, dst in canon))
+        steps[canon] = steps.get(canon, 0.0) + float(w) / 2.0
+        steps[inv] = steps.get(inv, 0.0) + float(w) / 2.0
+    return ExchangeSchedule(
+        num_workers=schedule.num_workers,
+        perms=tuple(steps.keys()),
+        weights=tuple(steps.values()),
+        self_weight=schedule.self_weight,
+    )
+
+
+@dataclass(frozen=True)
+class Membership:
+    """Active-worker mask for elastic membership (join/leave).
+
+    A value object over a FIXED worker-slot count M: ``active[i]`` says
+    whether slot ``i`` currently participates in consensus.  The SPMD
+    program always spans all M slots (the mesh does not resize);
+    membership only re-weights the mixing matrix via :class:`Masked`, so
+    join/leave is a new policy value — one executable per membership —
+    rather than a retrace-per-event.
+    """
+
+    active: tuple[bool, ...]
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "active", tuple(bool(a) for a in self.active)
+        )
+        if not self.active:
+            raise ValueError("membership needs >= 1 worker slot")
+        if not any(self.active):
+            raise ValueError("membership needs >= 1 active worker")
+
+    @classmethod
+    def all(cls, num_workers: int) -> "Membership":
+        """Everyone present — the identity membership."""
+        if num_workers < 1:
+            raise ValueError(f"num_workers must be >= 1, got {num_workers}")
+        return cls((True,) * num_workers)
+
+    @property
+    def num_workers(self) -> int:
+        return len(self.active)
+
+    @property
+    def num_active(self) -> int:
+        return sum(self.active)
+
+    def without(self, *workers: int) -> "Membership":
+        """The membership after the given worker slots leave."""
+        gone = {self._check_index(i) for i in workers}
+        return Membership(
+            tuple(a and i not in gone for i, a in enumerate(self.active))
+        )
+
+    def rejoin(self, *workers: int) -> "Membership":
+        """The membership after the given worker slots come back."""
+        back = {self._check_index(i) for i in workers}
+        return Membership(
+            tuple(a or i in back for i, a in enumerate(self.active))
+        )
+
+    def _check_index(self, i: int) -> int:
+        i = int(i)
+        if not 0 <= i < len(self.active):
+            raise ValueError(
+                f"worker index {i} out of range for {len(self.active)} slots"
+            )
+        return i
+
+    def mask(self) -> np.ndarray:
+        """(M,) float 0/1 mask, active slots 1."""
+        return np.asarray(self.active, dtype=np.float64)
+
+    def describe(self) -> str:
+        return "".join("1" if a else "0" for a in self.active)
+
+
+@dataclass(frozen=True)
+class Masked(Topology):
+    """Membership-masked topology: ``base``'s graph restricted to the
+    active workers.
+
+    The masked H keeps the base weights between active pairs, reroutes
+    every masked-out weight onto the diagonal, and leaves inactive
+    workers with an identity row — they hold their value and contribute
+    nothing.  For a symmetric base H (every equal-weight topology here)
+    the result is doubly stochastic over all M slots AND over the active
+    subset, so gossip under a ``Masked`` graph preserves the mean *of
+    the active workers* exactly: double stochasticity survives
+    join/leave by construction.  The schedule is compiled through the
+    Birkhoff-von-Neumann path, so membership changes cost one new
+    (policy, schedule) cache entry — never a mid-run retrace.
+    """
+
+    base: Topology
+    membership: Membership
+
+    name = "masked"
+
+    def __post_init__(self):
+        if not isinstance(self.base, Topology):
+            raise TypeError(
+                f"base must be a Topology, got {type(self.base).__name__}"
+            )
+        if isinstance(self.base, TimeVarying):
+            raise ValueError(
+                "mask the phases of a time-varying cycle individually; "
+                "Masked wraps a single-graph topology"
+            )
+        if not isinstance(self.membership, Membership):
+            raise TypeError(
+                "membership must be a Membership, got "
+                f"{type(self.membership).__name__}"
+            )
+
+    def validate(self, num_workers: int) -> None:
+        super().validate(num_workers)
+        if self.membership.num_workers != num_workers:
+            raise ValueError(
+                f"membership spans {self.membership.num_workers} worker "
+                f"slots, mesh has {num_workers}"
+            )
+        self.base.validate(num_workers)
+
+    def _active_indices(self) -> np.ndarray:
+        return np.flatnonzero(self.membership.mask())
+
+    def mixing_matrix(self, num_workers: int) -> np.ndarray:
+        self.validate(num_workers)
+        h = self.base.mixing_matrix(num_workers)
+        if not np.allclose(h, h.T, atol=1e-12):
+            raise ValueError(
+                "membership masking preserves double stochasticity only "
+                "for symmetric base mixing matrices"
+            )
+        a = self.membership.mask()
+        hm = h * np.outer(a, a)
+        np.fill_diagonal(hm, np.diag(hm) + 1.0 - hm.sum(axis=1))
+        return check_doubly_stochastic(hm, "membership-masked mixing matrix")
+
+    def exchange_schedule(self, num_workers: int) -> ExchangeSchedule:
+        # Masked H is symmetric by construction; symmetrize the Birkhoff
+        # hops so fault gating stays mean-preserving on the active set.
+        return symmetrized_schedule(
+            birkhoff_schedule(self.mixing_matrix(num_workers))
+        )
+
+    def edges_per_node(self, num_workers: int | None = None) -> int:
+        if num_workers is None:
+            raise ValueError(
+                "masked degree depends on the active set; pass num_workers "
+                "(use exchanges_for(M) on the policy)"
+            )
+        h = self.mixing_matrix(num_workers)
+        offdiag = (h > 0) & ~np.eye(num_workers, dtype=bool)
+        return int(offdiag.sum(axis=1).max())
+
+    def spectral_gap(self, num_workers: int) -> float:
+        # The full-M matrix has one eigenvalue 1 per inactive worker
+        # (identity rows), so the meaningful gap lives on the active
+        # principal submatrix — itself doubly stochastic by construction.
+        idx = self._active_indices()
+        if len(idx) == 1:
+            return 1.0
+        h = self.mixing_matrix(num_workers)
+        return spectral_gap(h[np.ix_(idx, idx)])
+
+    def rounds_for_tolerance(self, num_workers: int, tol: float = 1e-6) -> int:
+        idx = self._active_indices()
+        if len(idx) == 1:
+            return 1
+        h = self.mixing_matrix(num_workers)
+        return gossip_rounds_for_tolerance(h[np.ix_(idx, idx)], tol)
+
+
 # ------------------------------------------------------------- parsing
 
 #: Spec-name -> factory, the CLI grammar (see ``parse_topology``).

@@ -21,15 +21,22 @@ that into a declarative :class:`TrainSpec` plus :func:`train`::
     result = dssfn.train(spec, x_workers, t_workers, key)
     acc = dssfn.evaluate(result, x_test, y_test)
 
-``policy`` accepts either a :mod:`repro.core.policy` object or a CLI
-spec string (``"exact" | "gossip:B[:d]" | "quantized:bits" |
-"lossy:p[:B[:d]]" | "stale:delay"``); ``topology`` a
+``policy`` accepts either a :mod:`repro.core.policy` object or a spec
+string in the unified :func:`parse_spec` grammar —
+``"policy[@topology]"``, e.g. ``"gossip:4:2"``, ``"stale:2@hypercube"``
+or ``"async:interval=4:drop=0.1@torus:2x4"``; ``topology`` a
 :mod:`repro.core.topology` object or spec string (``"ring:d" |
 "torus:RxC" | "hypercube" | "geometric:r[:seed]" | "full"``, ``+``-joined
 for time-varying cycles) applied to the gossip-family policy; and
 ``partition`` a ``repro.data`` spec (``"iid" | "noniid[:alpha]"``) —
 so the same strings work from ``train_dssfn --consensus/--topology/
 --partition`` and from Python.
+
+Elastic training: ``membership`` masks the consensus graph to the
+currently active workers (``Masked``/``Membership``), and
+``checkpoint_dir``/``checkpoint_every``/``resume``/``stop_after_layer``
+give crash-tolerant layer-wise checkpointing — a resumed run reproduces
+the uninterrupted run's iterates exactly.
 
 Wire efficiency knobs (mirrored by ``train_dssfn --wire-dtype`` /
 ``--trace-every``): ``wire_dtype="bf16"`` narrows the gossip link
@@ -45,9 +52,39 @@ from repro.core import layerwise as layerwise_lib
 from repro.core import ssfn as ssfn_lib
 from repro.core.backend import ConsensusBackend, make_backend
 from repro.core.policy import ConsensusPolicy, ExactMean, Gossip, parse_policy
-from repro.core.topology import Topology, parse_topology
+from repro.core.topology import Masked, Membership, Topology, parse_topology
 
 _BACKEND_KINDS = ("simulated", "mesh")
+
+
+def parse_spec(
+    spec: str, *, degree: int = 1, rounds: int = 1
+) -> ConsensusPolicy:
+    """The unified consensus-spec grammar: ``policy[@topology]``.
+
+    One string names the whole consensus configuration — the policy half
+    is the ``parse_policy`` grammar (``exact | gossip[:B[:d]] |
+    quantized:bits | lossy:p[:B[:d]] | stale:delay |
+    async[:key=value...]``, plus ``wire=``/fault ``key=value`` segments)
+    and the optional ``@topology`` half is the ``parse_topology`` grammar
+    (``ring:d | torus:RxC | hypercube | geometric:r[:seed] | full``,
+    ``+``-joined for time-varying cycles).  Launchers, benchmarks and
+    examples all route through this one parser, so the same string works
+    everywhere::
+
+        parse_spec("gossip:4:2")
+        parse_spec("gossip:4@torus:2x4")
+        parse_spec("async:interval=4:drop=0.1@torus:2x4")
+        parse_spec("stale:2:wire=bf16@hypercube")
+
+    ``degree``/``rounds`` fill spec segments left implicit (the
+    launcher's legacy ``--degree``/``--rounds`` flags).
+    """
+    policy_part, sep, topo_part = spec.partition("@")
+    if sep and not topo_part:
+        raise ValueError(f"bad consensus spec {spec!r}: empty @topology half")
+    topo = parse_topology(topo_part) if sep else None
+    return parse_policy(policy_part, degree=degree, rounds=rounds, topology=topo)
 
 
 def apply_topology(policy: ConsensusPolicy, topology: Topology) -> ConsensusPolicy:
@@ -125,6 +162,28 @@ class TrainSpec:
     mesh: object | None = None
     #: Self-size-estimation stop tolerance (paper §I); None = fixed depth.
     size_estimation_tol: float | None = None
+    #: Elastic membership: a ``repro.core.topology.Membership`` (or a
+    #: ``"1"``/``"0"`` slot string such as ``"11011101"``) masking the
+    #: gossip-family policy's graph to the active workers — inactive
+    #: slots get identity mixing rows and the active rows renormalize so
+    #: H stays doubly stochastic.  A membership change is a new policy
+    #: value (new executable-cache entry), never a retrace.
+    membership: Membership | str | None = None
+    #: Checkpoint directory for elastic resume; None never touches disk.
+    checkpoint_dir: str | None = None
+    #: Save state after every N completed layers (requires
+    #: ``checkpoint_dir``).
+    checkpoint_every: int = 1
+    #: Restore the latest ``checkpoint_dir`` checkpoint before training.
+    resume: bool = False
+    #: Complete this layer index, checkpoint, and return the partial
+    #: model (the crash half of a kill/resume drill).
+    stop_after_layer: int | None = None
+
+    def resolve_membership(self) -> Membership | None:
+        if self.membership is None or isinstance(self.membership, Membership):
+            return self.membership
+        return Membership(tuple(c == "1" for c in self.membership))
 
     def resolve_topology(self) -> Topology | None:
         if self.topology is None or isinstance(self.topology, Topology):
@@ -145,10 +204,28 @@ class TrainSpec:
                 pol = self.backend.policy
             else:
                 pol = ExactMean()
+        elif "@" in self.policy:
+            # The unified spec grammar carries its own topology half.
+            if topo is not None:
+                raise ValueError(
+                    f"policy spec {self.policy!r} already names a "
+                    "'@topology'; drop spec.topology"
+                )
+            pol = parse_spec(self.policy)
         else:
             pol = parse_policy(self.policy, topology=topo)
         if self.wire_dtype is not None:
             pol = apply_wire_dtype(pol, self.wire_dtype)
+        membership = self.resolve_membership()
+        if membership is not None:
+            base = getattr(pol, "topology", None)
+            if base is None:
+                raise ValueError(
+                    f"policy {pol.describe()} does not take a topology, so "
+                    "membership cannot mask its graph; use a gossip-family "
+                    "policy"
+                )
+            pol = apply_topology(pol, Masked(base, membership))
         return pol
 
     def resolve_backend(self) -> ConsensusBackend:
@@ -231,6 +308,10 @@ def train(spec: TrainSpec, x_workers, t_workers, key) -> TrainResult:
             policy=policy,
             size_estimation_tol=spec.size_estimation_tol,
             trace_every=spec.trace_every,
+            checkpoint_dir=spec.checkpoint_dir,
+            checkpoint_every=spec.checkpoint_every,
+            resume=spec.resume,
+            stop_after_layer=spec.stop_after_layer,
         )
     return TrainResult(
         params=params, log=log, backend=backend, policy=policy, spec=spec

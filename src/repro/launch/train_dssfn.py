@@ -78,8 +78,10 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument(
         "--consensus",
         default="exact",
-        help="consensus policy spec: exact | gossip[:B[:d]] | "
-        "quantized:bits | lossy:p[:B[:d]] | stale:delay",
+        help="consensus spec (dssfn.parse_spec grammar): exact | "
+        "gossip[:B[:d]] | quantized:bits | lossy:p[:B[:d]] | stale:delay "
+        "| async[:key=value...], each optionally '@topology' "
+        "(e.g. async:interval=4:drop=0.1@torus:2x4)",
     )
     ap.add_argument(
         "--topology",
@@ -142,6 +144,39 @@ def parse_args(argv=None) -> argparse.Namespace:
         "--hidden/--input-dim and per-worker sample counts, else each "
         "misaligned op falls back to the einsum path",
     )
+    ap.add_argument(
+        "--membership",
+        default=None,
+        help="active-worker slot mask as a 1/0 string (e.g. 11011101): "
+        "masks the consensus graph to the active workers (elastic "
+        "membership; inactive slots keep identity mixing rows)",
+    )
+    ap.add_argument(
+        "--checkpoint-dir",
+        default=None,
+        help="directory for elastic-resume checkpoints (state saved after "
+        "each --checkpoint-every layers); default: no checkpointing",
+    )
+    ap.add_argument(
+        "--checkpoint-every",
+        type=int,
+        default=1,
+        help="checkpoint after every N completed layers (with "
+        "--checkpoint-dir)",
+    )
+    ap.add_argument(
+        "--resume",
+        action="store_true",
+        help="restore the latest --checkpoint-dir checkpoint and continue "
+        "from its next layer (bit-exact vs the uninterrupted run)",
+    )
+    ap.add_argument(
+        "--stop-after-layer",
+        type=int,
+        default=None,
+        help="complete this layer index, checkpoint, and exit (the crash "
+        "half of a kill/resume drill)",
+    )
     ap.add_argument("--out", default=None, help="optional JSON results path")
     ap.add_argument(
         "--no-host-mesh",
@@ -171,29 +206,39 @@ def ensure_devices(num_workers: int, *, allow_fake: bool = True) -> None:
 
 
 def build_policy(args):
-    """--consensus + --topology -> ConsensusPolicy.  The legacy
-    --degree/--rounds flags fill any segment the spec leaves out (so
-    ``gossip`` and ``lossy:0.1`` both honour them); --topology swaps the
-    gossip-family graph, and with the default ``--consensus exact`` it
-    implies ``gossip`` over that graph."""
+    """--consensus + --topology -> ConsensusPolicy via the unified
+    ``dssfn.parse_spec`` grammar.  The legacy --degree/--rounds flags
+    fill any segment the spec leaves out (so ``gossip`` and ``lossy:0.1``
+    both honour them); --topology (or the spec's own ``@graph`` half)
+    swaps the gossip-family graph, and with the default ``--consensus
+    exact`` it implies ``gossip`` over that graph."""
+    from repro.dssfn import parse_spec
     from repro.core.policy import parse_policy
     from repro.core.topology import parse_topology
 
-    topo = parse_topology(args.topology) if args.topology else None
+    consensus, sep, spec_topo = args.consensus.partition("@")
+    if sep and args.topology:
+        raise ValueError(
+            f"--consensus {args.consensus!r} already names an '@topology'; "
+            "drop --topology"
+        )
+    topo_spec = spec_topo if sep else args.topology
+    topo = parse_topology(topo_spec) if topo_spec else None
     if topo is not None and args.degree is not None:
         raise ValueError(
             "--degree configures the default ring; pass either --degree or "
             "--topology (ring degree spells ring:d), not both"
         )
-    consensus = args.consensus
     if topo is not None and consensus == "exact":
         consensus = "gossip"
-    policy = parse_policy(
-        consensus,
+    kw = dict(
         degree=args.degree if args.degree is not None else 2,
         rounds=args.rounds,
-        topology=topo,
     )
+    if sep:
+        policy = parse_spec(f"{consensus}@{spec_topo}", **kw)
+    else:
+        policy = parse_policy(consensus, topology=topo, **kw)
     if getattr(args, "no_compress", False):
         from dataclasses import fields, replace
 
@@ -208,9 +253,18 @@ def train_one(kind: str, args, data, xw, tw, cfg, key) -> dict:
     from repro import dssfn
     from repro.core import layerwise
 
+    ckpt_dir = args.checkpoint_dir
+    if ckpt_dir is not None and args.backend == "both":
+        # Parallel simulated/mesh runs must not clobber each other's state.
+        ckpt_dir = os.path.join(ckpt_dir, kind)
     spec = dssfn.TrainSpec(
         cfg=cfg, backend=kind, workers=args.workers, policy=build_policy(args),
         wire_dtype=args.wire_dtype, trace_every=args.trace_every,
+        membership=args.membership,
+        checkpoint_dir=ckpt_dir,
+        checkpoint_every=args.checkpoint_every,
+        resume=args.resume,
+        stop_after_layer=args.stop_after_layer,
     )
     t0 = time.perf_counter()
     result = dssfn.train(spec, xw, tw, key)

@@ -165,14 +165,18 @@ def test_make_backend_error_paths():
 
 
 def test_backend_validation():
-    with pytest.raises(ValueError, match="unknown consensus mode"):
+    # The PR-3 mode= aliases are gone: a clean TypeError that names the
+    # rejected keyword and points at the policy= migration path.
+    with pytest.raises(TypeError, match="mode.*removed.*parse_policy"):
         SimulatedBackend(4, mode="psum")
-    with pytest.raises(ValueError, match="degree"):
+    with pytest.raises(TypeError, match="degree, mode"):
         SimulatedBackend(4, mode="gossip", degree=0)
-    with pytest.raises(ValueError, match="rounds"):
-        SimulatedBackend(4, mode="gossip", num_rounds=0)
+    with pytest.raises(TypeError, match="num_rounds"):
+        SimulatedBackend(4, num_rounds=0)
     with pytest.raises(ValueError, match="num_workers"):
         SimulatedBackend(0)
+    with pytest.raises(TypeError, match="policy must be a ConsensusPolicy"):
+        SimulatedBackend(4, policy="gossip:2")  # spec strings: make_backend
 
 
 def test_mismatched_worker_count_rejected():

@@ -1,0 +1,253 @@
+"""Checkpoint/resume: bit-exact pytree round-trips and elastic
+kill-and-continue training drills.
+
+Satellite (c) of the elastic-consensus PR: ``save_pytree`` /
+``load_pytree`` / ``load_pytree_flat`` must round-trip the FULL training
+state (layer weights, ADMM duals, staleness buffers, RNG keys) bit for
+bit, and a resumed ``train_decentralized_ssfn`` run must reproduce the
+uninterrupted run's final iterate exactly.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import dssfn
+from repro.checkpoint.store import load_pytree, load_pytree_flat, save_pytree
+from repro.core import layerwise, ssfn
+from repro.core.layerwise import checkpoint_path, latest_checkpoint
+from repro.core.policy import AsyncGossip, FaultModel
+from repro.core.topology import Hypercube, Masked, Membership, Ring
+
+
+def _data(key, m=4, p=8, q=3, jm=16):
+    kx, kt = jax.random.split(key)
+    xw = jax.random.normal(kx, (m, p, jm))
+    labels = jax.random.randint(kt, (m, jm), 0, q)
+    tw = jax.nn.one_hot(labels, q).transpose(0, 2, 1)
+    return xw, tw
+
+
+def _cfg(**kw):
+    defaults = dict(
+        input_dim=8, num_classes=3, num_layers=3, hidden=20, admm_iters=20
+    )
+    defaults.update(kw)
+    return ssfn.SSFNConfig(**defaults)
+
+
+# ------------------------------------------------------------------
+# Pytree store round-trips
+# ------------------------------------------------------------------
+
+def test_save_load_pytree_flat_bit_exact(tmp_path):
+    """The flat loader restores every leaf bit-exactly — including the
+    dtypes npz cannot represent natively (bf16) and raw RNG key data."""
+    key = jax.random.PRNGKey(42)
+    tree = {
+        "o": {"0": np.arange(12, dtype=np.float32).reshape(3, 4)},
+        "lam": jax.random.normal(key, (2, 3, 4), dtype=jnp.float32),
+        "buf": jnp.linspace(-1, 1, 8, dtype=jnp.bfloat16),
+        "key": jax.random.key_data(key),
+        "comm": np.int64(123456789),
+        "step": np.int32(-7),
+        "cost": np.float64(1.0 / 3.0),
+    }
+    path = os.path.join(tmp_path, "state.npz")
+    save_pytree(path, tree)
+    flat = load_pytree_flat(path)
+
+    assert np.array_equal(flat["o/0"], np.asarray(tree["o"]["0"]))
+    assert np.array_equal(flat["lam"], np.asarray(tree["lam"]))
+    assert flat["buf"].dtype.name == "bfloat16"
+    assert np.array_equal(
+        flat["buf"].view(np.uint16), np.asarray(tree["buf"]).view(np.uint16)
+    )
+    assert np.array_equal(flat["key"], np.asarray(jax.random.key_data(key)))
+    assert flat["comm"] == tree["comm"] and flat["comm"].dtype == np.int64
+    assert flat["step"] == tree["step"]
+    assert flat["cost"] == tree["cost"] and flat["cost"].dtype == np.float64
+
+
+def test_save_load_pytree_template_bit_exact(tmp_path):
+    """Template-based load (the non-elastic path) stays bit-exact over a
+    training-state-shaped tree: duals, StaleMixing buffers, nested
+    tuples."""
+    k = jax.random.PRNGKey(0)
+    state = {
+        "duals": tuple(
+            jax.random.normal(jax.random.fold_in(k, i), (3, 5))
+            for i in range(2)
+        ),
+        # A StaleMixing-shaped state: delay-line buffer + int cursor.
+        "stale": (jnp.zeros((2, 3, 5)), jnp.int32(1)),
+        "key": jax.random.key_data(k),
+    }
+    path = os.path.join(tmp_path, "tpl.npz")
+    save_pytree(path, state)
+    back = load_pytree(path, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+
+
+def test_latest_checkpoint_selects_highest_layer(tmp_path):
+    d = str(tmp_path)
+    assert latest_checkpoint(d) is None
+    for ln in (1, 3, 2):
+        save_pytree(checkpoint_path(d, ln), {"layer_next": np.int64(ln)})
+    picked = latest_checkpoint(d)
+    assert picked == checkpoint_path(d, 3)
+    assert int(load_pytree_flat(picked)["layer_next"]) == 3
+
+
+# ------------------------------------------------------------------
+# Kill/resume drills: resumed == uninterrupted, bit for bit
+# ------------------------------------------------------------------
+
+def _assert_same_run(res_a, res_b):
+    assert len(res_a.params.o) == len(res_b.params.o)
+    for a, b in zip(res_a.params.o, res_b.params.o):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(res_a.params.r, res_b.params.r):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert res_a.log.comm_scalars == res_b.log.comm_scalars
+    assert np.array_equal(res_a.log.admm_objective, res_b.log.admm_objective)
+    assert np.array_equal(res_a.log.consensus_error, res_b.log.consensus_error)
+    np.testing.assert_allclose(res_a.log.layer_costs, res_b.log.layer_costs)
+
+
+@pytest.mark.parametrize(
+    "policy",
+    [
+        None,  # ExactMean default
+        AsyncGossip(
+            rounds=2,
+            topology=Hypercube(),
+            interval=2,
+            faults=FaultModel(drop=0.2, seed=5),
+        ),
+    ],
+    ids=["exact", "async-faulty"],
+)
+def test_resume_matches_uninterrupted_run(tmp_path, policy):
+    """Train to completion in one process; separately train to layer 1,
+    'crash', and resume in a fresh spec.  Same final iterate, bit for
+    bit — including under an active fault model (fault draws are seeded
+    by the absolute iteration, so the schedule replays identically)."""
+    xw, tw = _data(jax.random.PRNGKey(3))
+    key = jax.random.PRNGKey(7)
+    base = dict(cfg=_cfg(), backend="simulated", workers=4, policy=policy)
+
+    full = dssfn.train(dssfn.TrainSpec(**base), xw, tw, key)
+
+    ckpt = os.path.join(tmp_path, "ckpt")
+    first = dssfn.train(
+        dssfn.TrainSpec(**base, checkpoint_dir=ckpt, stop_after_layer=1),
+        xw, tw, key,
+    )
+    assert len(first.params.o) == 2  # O_0, O_1: the partial model
+    assert latest_checkpoint(ckpt) == checkpoint_path(ckpt, 2)
+
+    resumed = dssfn.train(
+        dssfn.TrainSpec(**base, checkpoint_dir=ckpt, resume=True),
+        xw, tw, key,
+    )
+    _assert_same_run(full, resumed)
+
+
+def test_resume_matches_with_membership_mask(tmp_path):
+    """Elastic membership rides the checkpoint: a masked-topology run
+    resumes bit-exactly and the stored mask matches the active set."""
+    xw, tw = _data(jax.random.PRNGKey(4), m=8)
+    key = jax.random.PRNGKey(9)
+    base = dict(
+        cfg=_cfg(num_layers=2),
+        backend="simulated",
+        workers=8,
+        policy=AsyncGossip(rounds=2, topology=Ring(2)),
+        membership="11011111",
+    )
+    full = dssfn.train(dssfn.TrainSpec(**base), xw, tw, key)
+
+    ckpt = os.path.join(tmp_path, "ckpt")
+    dssfn.train(
+        dssfn.TrainSpec(**base, checkpoint_dir=ckpt, stop_after_layer=0),
+        xw, tw, key,
+    )
+    flat = load_pytree_flat(latest_checkpoint(ckpt))
+    assert np.array_equal(
+        flat["membership"], np.array([1, 1, 0, 1, 1, 1, 1, 1], np.float64)
+    )
+    resumed = dssfn.train(
+        dssfn.TrainSpec(**base, checkpoint_dir=ckpt, resume=True),
+        xw, tw, key,
+    )
+    _assert_same_run(full, resumed)
+    # The masked policy actually reached the run.
+    assert isinstance(resumed.policy.topology, Masked)
+    assert resumed.policy.topology.membership == Membership(
+        (True, True, False, True, True, True, True, True)
+    )
+
+
+def test_checkpoint_every_stride(tmp_path):
+    xw, tw = _data(jax.random.PRNGKey(5))
+    ckpt = os.path.join(tmp_path, "ckpt")
+    dssfn.train(
+        dssfn.TrainSpec(
+            cfg=_cfg(num_layers=4),
+            backend="simulated",
+            workers=4,
+            checkpoint_dir=ckpt,
+            checkpoint_every=2,
+        ),
+        xw, tw, jax.random.PRNGKey(6),
+    )
+    # Layers 0..4 completed -> layer_next in {2, 4} only (every 2nd).
+    names = sorted(os.listdir(ckpt))
+    nexts = sorted(
+        int(n.removeprefix("dssfn_layer_").removesuffix(".npz"))
+        for n in names
+        if n.endswith(".npz")
+    )
+    assert nexts == [2, 4]
+
+
+def test_resume_with_empty_directory_trains_from_scratch(tmp_path):
+    xw, tw = _data(jax.random.PRNGKey(8))
+    key = jax.random.PRNGKey(2)
+    plain = dssfn.train(
+        dssfn.TrainSpec(cfg=_cfg(num_layers=1), backend="simulated", workers=4),
+        xw, tw, key,
+    )
+    ckpt = os.path.join(tmp_path, "fresh")
+    os.makedirs(ckpt)
+    resumed = dssfn.train(
+        dssfn.TrainSpec(
+            cfg=_cfg(num_layers=1), backend="simulated", workers=4,
+            checkpoint_dir=ckpt, resume=True,
+        ),
+        xw, tw, key,
+    )
+    _assert_same_run(plain, resumed)
+
+
+def test_checkpoint_validation_errors():
+    xw, tw = _data(jax.random.PRNGKey(1))
+    cfg = _cfg(num_layers=1)
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        layerwise.train_decentralized_ssfn(xw, tw, cfg, key, resume=True)
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        layerwise.train_decentralized_ssfn(
+            xw, tw, cfg, key, checkpoint_dir="/tmp/x", checkpoint_every=0
+        )
+    with pytest.raises(ValueError, match="consensus_fn"):
+        layerwise.train_decentralized_ssfn(
+            xw, tw, cfg, key,
+            consensus_fn=lambda z: z,
+            checkpoint_dir="/tmp/x",
+        )

@@ -9,13 +9,23 @@ from repro import dssfn
 from repro.core import layerwise, ssfn
 from repro.core.backend import SimulatedBackend
 from repro.core.policy import (
+    AsyncGossip,
     ExactMean,
+    FaultModel,
     Gossip,
+    LossyGossip,
     QuantizedGossip,
     RingGossip,
     StaleMixing,
 )
-from repro.core.topology import Hypercube, Torus
+from repro.core.topology import (
+    FullyConnected,
+    Hypercube,
+    Masked,
+    Membership,
+    Ring,
+    Torus,
+)
 
 
 def _data(key, m=4, p=8, q=3, jm=16):
@@ -183,6 +193,109 @@ def test_spec_error_paths():
     )
     with pytest.raises(ValueError, match="workers"):
         dssfn.train(spec, xw, tw, jax.random.PRNGKey(9))
+
+
+# One entry per unified-grammar form (satellite (b)): the same strings
+# must work through parse_spec, TrainSpec(policy=...), and the
+# launcher/benchmark CLIs, and every parsed object's repr must
+# reconstruct an equal value.
+_SPEC_CASES = {
+    "exact": ExactMean(),
+    "gossip:3:2": RingGossip(rounds=3, degree=2),
+    "gossip:4@torus:2x4": Gossip(rounds=4, topology=Torus(2, 4)),
+    "gossip:2:wire=bf16@hypercube": Gossip(
+        rounds=2, topology=Hypercube(), wire_dtype="bfloat16"
+    ),
+    "quantized:8": QuantizedGossip(bits=8),
+    "lossy:0.2:3@full": LossyGossip(
+        drop_prob=0.2, rounds=3, topology=FullyConnected()
+    ),
+    "stale:2:wire=f16@hypercube": StaleMixing(
+        2, topology=Hypercube(), wire_dtype="float16"
+    ),
+    "async": AsyncGossip(),
+    "async:interval=4:drop=0.1@torus:2x4": AsyncGossip(
+        interval=4, topology=Torus(2, 4), faults=FaultModel(drop=0.1)
+    ),
+    "async:rounds=2:fail=1+3:fail_at=30@hypercube": AsyncGossip(
+        rounds=2, topology=Hypercube(),
+        faults=FaultModel(failed=(1, 3), fail_at=30),
+    ),
+    "async:stragglers=0:straggle=2:seed=5@ring:2": AsyncGossip(
+        topology=Ring(2), faults=FaultModel(stragglers=(0,), straggle=2, seed=5)
+    ),
+}
+
+
+@pytest.mark.parametrize("spec", sorted(_SPEC_CASES))
+def test_parse_spec_round_trip(spec):
+    expected = _SPEC_CASES[spec]
+    pol = dssfn.parse_spec(spec)
+    assert pol == expected
+    namespace = {
+        k: v for k, v in vars(dssfn).items() if not k.startswith("_")
+    } | {
+        "ExactMean": ExactMean, "Gossip": Gossip, "RingGossip": RingGossip,
+        "QuantizedGossip": QuantizedGossip, "LossyGossip": LossyGossip,
+        "StaleMixing": StaleMixing, "AsyncGossip": AsyncGossip,
+        "FaultModel": FaultModel, "Ring": Ring, "Torus": Torus,
+        "Hypercube": Hypercube, "FullyConnected": FullyConnected,
+    }
+    clone = eval(repr(pol), namespace)  # noqa: S307 - test-controlled reprs
+    assert clone == pol and hash(clone) == hash(pol)
+    # The same string drives the facade.
+    assert dssfn.TrainSpec(cfg=_cfg(), policy=spec).resolve_policy() == pol
+
+
+def test_parse_spec_error_paths():
+    with pytest.raises(ValueError, match="empty @topology"):
+        dssfn.parse_spec("gossip@")
+    with pytest.raises(ValueError, match="takes no topology"):
+        dssfn.parse_spec("exact@ring:1")
+    with pytest.raises(ValueError, match="unknown consensus policy"):
+        dssfn.parse_spec("bogus@ring:1")
+    # A spec with an inline @topology conflicts with TrainSpec(topology=).
+    with pytest.raises(ValueError, match="topology"):
+        dssfn.TrainSpec(
+            cfg=_cfg(), policy="gossip:2@hypercube", topology="ring:1"
+        ).resolve_policy()
+
+
+def test_spec_membership_resolution():
+    """TrainSpec(membership=...) masks the policy's graph: slot strings
+    and Membership objects resolve identically, and the masked topology
+    reaches the resolved policy."""
+    spec = dssfn.TrainSpec(
+        cfg=_cfg(), workers=8, policy="gossip:2@ring:2",
+        membership="11011111",
+    )
+    mem = Membership((True, True, False, True, True, True, True, True))
+    assert spec.resolve_membership() == mem
+    assert spec.resolve_policy() == Gossip(
+        rounds=2, topology=Masked(Ring(2), mem)
+    )
+    spec_obj = dssfn.TrainSpec(
+        cfg=_cfg(), workers=8, policy="async@hypercube", membership=mem
+    )
+    assert spec_obj.resolve_policy() == AsyncGossip(
+        topology=Masked(Hypercube(), mem)
+    )
+    # ExactMean has no graph to mask.
+    with pytest.raises(ValueError, match="topology|membership"):
+        dssfn.TrainSpec(
+            cfg=_cfg(), workers=8, membership="1101"
+        ).resolve_policy()
+
+
+def test_membership_training_through_facade():
+    xw, tw = _data(jax.random.PRNGKey(30), m=8)
+    spec = dssfn.TrainSpec(
+        cfg=_cfg(), backend="simulated", workers=8,
+        policy="async:rounds=2@ring:2", membership="11101111",
+    )
+    result = dssfn.train(spec, xw, tw, jax.random.PRNGKey(31))
+    assert isinstance(result.policy.topology, Masked)
+    assert len(result.params.o) == 2
 
 
 def test_size_estimation_through_facade():

@@ -1,0 +1,492 @@
+"""Elastic asynchronous consensus: deterministic fault injection,
+straggler/drop tolerance, communication intervals, and membership-aware
+mixing — the AsyncGossip/FaultModel/Masked surface.
+
+The core invariants (ISSUE acceptance criteria):
+- faults are deterministic: same seed + fault spec -> identical draws
+  and identical training iterates;
+- every realized mixing step is row-stochastic and mean-preserving on
+  the active (up) set — property-tested over worker counts M <= 16;
+- a disabled fault model falls through to the exact serial-gossip
+  execution path, bit for bit;
+- fault/membership changes are new policy VALUES (new executable-cache
+  entries), never per-call retraces.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import admm
+from repro.core.backend import SimulatedBackend
+from repro.core.policy import (
+    AsyncGossip,
+    ConsensusContext,
+    ExactMean,
+    FaultModel,
+    Gossip,
+    parse_policy,
+)
+from repro.core.topology import (
+    FullyConnected,
+    Hypercube,
+    Masked,
+    Membership,
+    RandomGeometric,
+    Ring,
+    TimeVarying,
+    Torus,
+    cached_exchange_schedule,
+    is_inverse_closed,
+    symmetrized_schedule,
+)
+from repro.testing import given, settings, st
+
+
+def _mix_once(policy, x):
+    """One realized mix of ``policy`` over stacked worker values (vmap
+    SPMD semantics — the same trace the backends run)."""
+    ctx = ConsensusContext("workers", x.shape[0])
+
+    def body(xi):
+        state = policy.init_state(xi, ctx)
+        y, _ = policy.mix(xi, state, ctx)
+        return y
+
+    return jax.vmap(body, axis_name="workers")(x)
+
+
+def _mix_seq(policy, xs):
+    """Apply ``policy.mix`` to a sequence of stacked inputs, threading
+    the per-worker policy state across calls (interval/rotation/straggler
+    state lives there)."""
+    ctx = ConsensusContext("workers", xs[0].shape[0])
+
+    def body(*xis):
+        state = policy.init_state(xis[0], ctx)
+        outs = []
+        for xi in xis:
+            y, state = policy.mix(xi, state, ctx)
+            outs.append(y)
+        return tuple(outs)
+
+    return jax.vmap(body, axis_name="workers")(*xs)
+
+
+def _problem(key, n=16, q=3, j=160, m=4):
+    ky, kt = jax.random.split(key)
+    y = jax.random.normal(ky, (n, j))
+    t = jax.random.normal(kt, (q, j))
+    yw = y.reshape(n, m, j // m).transpose(1, 0, 2)
+    tw = t.reshape(q, m, j // m).transpose(1, 0, 2)
+    return yw, tw
+
+
+# ------------------------------------------------------------------
+# FaultModel: validation + deterministic draws
+# ------------------------------------------------------------------
+
+def test_fault_model_validation():
+    with pytest.raises(ValueError, match="drop"):
+        FaultModel(drop=1.5)
+    with pytest.raises(ValueError, match="straggle"):
+        FaultModel(straggle=0, stragglers=(1,))
+    assert FaultModel().is_null
+    assert not FaultModel(drop=0.1).is_null
+    assert not FaultModel(failed=(2,)).is_null
+    # failed= without fail_at means failed from the start.
+    assert FaultModel(failed=(2,)).fail_at == 0
+    with pytest.raises(ValueError, match="worker"):
+        FaultModel(failed=(9,)).validate(4)
+    with pytest.raises(ValueError, match="worker"):
+        FaultModel(stragglers=(-1,)).validate(4)
+    with pytest.raises(ValueError, match="fail"):
+        FaultModel(failed=(0, 1, 2, 3)).validate(4)
+
+
+def test_alive_mask_deterministic_and_seeded():
+    fm = FaultModel(drop=0.5, seed=3)
+    a = np.asarray(fm.alive_mask(7, 1, 8, jnp.float32))
+    b = np.asarray(fm.alive_mask(7, 1, 8, jnp.float32))
+    assert np.array_equal(a, b)
+    assert set(np.unique(a)) <= {0.0, 1.0}
+    # Different iteration/round/seed decorrelate the draws.
+    variants = [
+        np.asarray(FaultModel(drop=0.5, seed=s).alive_mask(i, r, 8, jnp.float32))
+        for s, i, r in [(3, 8, 1), (3, 7, 0), (4, 7, 1)]
+    ]
+    assert any(not np.array_equal(a, v) for v in variants)
+
+
+def test_alive_mask_permanent_failure():
+    fm = FaultModel(failed=(1, 3), fail_at=5)
+    before = np.asarray(fm.alive_mask(4, 0, 6, jnp.float32))
+    after = np.asarray(fm.alive_mask(5, 0, 6, jnp.float32))
+    assert np.array_equal(before, np.ones(6))
+    assert np.array_equal(after, [1, 0, 1, 0, 1, 1])
+    # ...and stays down forever after.
+    assert np.array_equal(np.asarray(fm.alive_mask(100, 2, 6, jnp.float32)), after)
+
+
+# ------------------------------------------------------------------
+# Realized mixing: row-stochastic + mean-preserving on the up set
+# ------------------------------------------------------------------
+
+@given(m=st.integers(3, 16), seed=st.integers(0, 5))
+@settings(max_examples=14, deadline=None)
+def test_faulty_mix_mean_preserving_property(m, seed):
+    """Under drops, the realized H slice reroutes every killed weight to
+    the diagonal symmetrically: the all-worker mean is invariant for any
+    M <= 16 (inverse-closed ring schedule), every draw."""
+    pol = AsyncGossip(
+        rounds=2, topology=Ring(1), faults=FaultModel(drop=0.4, seed=seed)
+    )
+    pol.validate(m)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, 5))
+    y = np.asarray(_mix_once(pol, x))
+    np.testing.assert_allclose(
+        y.mean(axis=0), np.asarray(x).mean(axis=0), atol=1e-5
+    )
+
+
+@given(gone=st.sampled_from([(2,), (0, 5), (1, 2, 3), (6, 7)]),
+       seed=st.integers(0, 3))
+@settings(max_examples=8, deadline=None)
+def test_masked_faulty_mix_mean_preserving_on_active_set(gone, seed):
+    """Membership masking + random drops compose: the mean over ACTIVE
+    workers is preserved and inactive workers keep identity rows."""
+    m = 8
+    mem = Membership.all(m).without(*gone)
+    pol = AsyncGossip(
+        rounds=2,
+        topology=Masked(Ring(2), mem),
+        faults=FaultModel(drop=0.3, seed=seed),
+    )
+    pol.validate(m)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, 4))
+    y = np.asarray(_mix_once(pol, x))
+    active = np.asarray(mem.mask()).astype(bool)
+    np.testing.assert_allclose(
+        y[active].mean(axis=0), np.asarray(x)[active].mean(axis=0), atol=1e-5
+    )
+    np.testing.assert_allclose(y[~active], np.asarray(x)[~active], atol=1e-6)
+
+
+def test_failed_worker_keeps_identity_row():
+    pol = AsyncGossip(rounds=3, topology=Ring(1), faults=FaultModel(failed=(2,)))
+    x = jax.random.normal(jax.random.PRNGKey(0), (6, 4))
+    y = np.asarray(_mix_once(pol, x))
+    np.testing.assert_allclose(y[2], np.asarray(x)[2], atol=1e-6)
+    # The survivors still average among themselves.
+    assert not np.allclose(y[0], np.asarray(x)[0])
+
+
+def test_straggler_transmits_stale_value():
+    """A straggler puts its `straggle`-calls-old payload on the wire
+    (zeros before any history exists) while keeping its OWN contribution
+    fresh — peers see the past, the straggler itself does not."""
+    m, straggler = 4, 1
+    topo = Ring(1)
+    pol = AsyncGossip(
+        rounds=1, topology=topo,
+        faults=FaultModel(stragglers=(straggler,), straggle=1),
+    )
+    x1 = jax.random.normal(jax.random.PRNGKey(1), (m, 3))
+    x2 = jax.random.normal(jax.random.PRNGKey(2), (m, 3))
+    y1, y2 = _mix_seq(pol, [x1, x2])
+
+    h = topo.mixing_matrix(m)
+    off = h - np.diag(np.diag(h))
+
+    def expected(x, stale):
+        tx = np.asarray(x).copy()
+        tx[straggler] = stale[straggler]
+        return np.diag(h)[:, None] * np.asarray(x) + off @ tx
+
+    np.testing.assert_allclose(
+        np.asarray(y1), expected(x1, np.zeros((m, 3))), atol=1e-6
+    )
+    # Second call: the straggler replays call 1's value.
+    np.testing.assert_allclose(
+        np.asarray(y2), expected(x2, np.asarray(x1)), atol=1e-6
+    )
+
+
+# ------------------------------------------------------------------
+# Null-fault path: bit-identical to serial Gossip
+# ------------------------------------------------------------------
+
+def test_null_fault_async_bit_identical_to_serial_gossip():
+    x = jax.random.normal(jax.random.PRNGKey(3), (8, 4, 6))
+    for rounds, topo in [(1, Ring(1)), (3, Ring(2)), (2, Hypercube())]:
+        a = AsyncGossip(rounds=rounds, topology=topo)
+        g = Gossip(rounds=rounds, topology=topo, compress=False)
+        ya = _mix_once(a, x)
+        yg = _mix_once(g, x)
+        assert jnp.array_equal(ya, yg), (rounds, topo)
+
+
+def test_null_fault_async_training_matches_gossip():
+    yw, tw = _problem(jax.random.PRNGKey(4), m=8)
+    kw = dict(mu=1e-2, eps_radius=6.0, num_iters=10)
+    a = admm.admm_ridge_consensus(
+        yw, tw, backend=SimulatedBackend(8),
+        policy=AsyncGossip(rounds=2, topology=Ring(1)), **kw
+    )
+    g = admm.admm_ridge_consensus(
+        yw, tw, backend=SimulatedBackend(8),
+        policy=Gossip(rounds=2, topology=Ring(1), compress=False), **kw
+    )
+    assert jnp.array_equal(a.o_star, g.o_star)
+    assert jnp.array_equal(a.trace.objective, g.trace.objective)
+
+
+def test_faulty_training_deterministic_and_converges():
+    yw, tw = _problem(jax.random.PRNGKey(5), m=8)
+    pol = AsyncGossip(
+        rounds=3, topology=Hypercube(), faults=FaultModel(drop=0.2, seed=11)
+    )
+    kw = dict(mu=1e-2, eps_radius=6.0, num_iters=40, policy=pol)
+    a = admm.admm_ridge_consensus(yw, tw, backend=SimulatedBackend(8), **kw)
+    b = admm.admm_ridge_consensus(yw, tw, backend=SimulatedBackend(8), **kw)
+    assert jnp.array_equal(a.o_star, b.o_star)
+    # Drops perturb but don't break consensus ADMM: the objective still
+    # lands near the exact-mean solution.
+    exact = admm.admm_ridge_consensus(
+        yw, tw, backend=SimulatedBackend(8), policy=ExactMean(),
+        mu=1e-2, eps_radius=6.0, num_iters=40,
+    )
+    rel = float(
+        jnp.linalg.norm(a.o_star - exact.o_star)
+        / jnp.linalg.norm(exact.o_star)
+    )
+    assert rel < 0.25, rel
+
+
+# ------------------------------------------------------------------
+# Communication interval: eq.-15 accounting + structural chunking
+# ------------------------------------------------------------------
+
+def test_interval_comm_accounting():
+    base = AsyncGossip(rounds=2, topology=Ring(2))
+    lazy = AsyncGossip(rounds=2, topology=Ring(2), interval=4)
+    kw = dict(scalars=100, num_consensus=40, num_workers=8)
+    assert base.communication_interval == 1
+    assert lazy.communication_interval == 4
+    assert base.comm_scalars(**kw) == 100 * 8 * 40
+    assert lazy.comm_scalars(**kw) == 100 * 8 * 10   # every 4th iter mixes
+    assert lazy.wire_bytes(**kw) == lazy.comm_scalars(**kw) * 4
+    # Other policies mix every iteration.
+    assert Gossip(rounds=2, topology=Ring(2)).communication_interval == 1
+
+
+def test_interval_training_runs_and_accounts():
+    yw, tw = _problem(jax.random.PRNGKey(6), m=8)
+    pol = AsyncGossip(rounds=3, topology=Hypercube(), interval=4)
+    res = admm.admm_ridge_consensus(
+        yw, tw, mu=1e-2, eps_radius=6.0, num_iters=40,
+        backend=SimulatedBackend(8), policy=pol,
+    )
+    # Interval mixing is an approximation knob like staleness: it must
+    # still land close to the exact consensus solution.
+    exact = admm.admm_ridge_consensus(
+        yw, tw, mu=1e-2, eps_radius=6.0, num_iters=40,
+        backend=SimulatedBackend(8),
+    )
+    rel = float(
+        jnp.linalg.norm(res.o_star - exact.o_star)
+        / jnp.linalg.norm(exact.o_star)
+    )
+    assert rel < 0.35, rel
+
+
+def test_interval_validation_errors():
+    from repro.core import engine
+
+    yw, tw = _problem(jax.random.PRNGKey(7), m=8)
+    backend = SimulatedBackend(8)
+    with pytest.raises(ValueError, match="divide"):
+        engine.fused_layer_step(
+            backend, yw, tw, None, mu=1e-2, eps_radius=6.0, num_iters=10,
+            policy=AsyncGossip(topology=Ring(1), interval=3),
+        )
+    with pytest.raises(ValueError, match="trace_every"):
+        engine.fused_layer_step(
+            backend, yw, tw, None, mu=1e-2, eps_radius=6.0, num_iters=12,
+            policy=AsyncGossip(topology=Ring(1), interval=3), trace_every=2,
+        )
+    with pytest.raises(ValueError, match="interval"):
+        AsyncGossip(topology=Ring(1), interval=0)
+
+
+# ------------------------------------------------------------------
+# Time-varying rotation across mix calls
+# ------------------------------------------------------------------
+
+def test_async_rotates_time_varying_schedules_across_calls():
+    m = 8
+    tv = TimeVarying((Ring(1), Hypercube()))
+    pol = AsyncGossip(rounds=1, topology=tv)
+    x1 = jax.random.normal(jax.random.PRNGKey(8), (m, 3))
+    x2 = jax.random.normal(jax.random.PRNGKey(9), (m, 3))
+    y1, y2 = _mix_seq(pol, [x1, x2])
+    h_ring = Ring(1).mixing_matrix(m)
+    h_cube = Hypercube().mixing_matrix(m)
+    np.testing.assert_allclose(np.asarray(y1), h_ring @ np.asarray(x1), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y2), h_cube @ np.asarray(x2), atol=1e-5)
+
+
+# ------------------------------------------------------------------
+# Inverse closure: the mean-preservation precondition
+# ------------------------------------------------------------------
+
+def test_vertex_transitive_schedules_are_inverse_closed():
+    for topo, m in [
+        (Ring(1), 8), (Ring(2), 8), (Torus(2, 4), 8),
+        (Hypercube(), 8), (FullyConnected(), 8),
+    ]:
+        assert is_inverse_closed(cached_exchange_schedule(topo, m)), topo
+
+
+def test_masked_schedules_are_symmetrized_inverse_closed():
+    for gone in [(2,), (0, 5), (1, 2, 3)]:
+        mk = Masked(Ring(2), Membership.all(8).without(*gone))
+        sched = cached_exchange_schedule(mk, 8)
+        assert is_inverse_closed(sched), gone
+        # Symmetrization preserves the implemented matrix exactly.
+        np.testing.assert_allclose(
+            sched.as_matrix(), mk.mixing_matrix(8), atol=1e-9
+        )
+
+
+def test_symmetrized_schedule_round_trip():
+    mk = Masked(FullyConnected(), Membership.all(8).without(3))
+    from repro.core.topology import birkhoff_schedule
+
+    raw = birkhoff_schedule(mk.mixing_matrix(8))
+    sym = symmetrized_schedule(raw)
+    assert is_inverse_closed(sym)
+    np.testing.assert_allclose(sym.as_matrix(), raw.as_matrix(), atol=1e-9)
+
+
+def test_fault_validation_requires_inverse_closure():
+    """Fault-running policies accept a topology iff its compiled
+    schedule is inverse-closed — the validate() decision must agree with
+    the structural predicate for any graph."""
+    faults = FaultModel(drop=0.1)
+    for topo in [Ring(2), Hypercube(), RandomGeometric(radius=0.5, seed=1)]:
+        pol = AsyncGossip(rounds=1, topology=topo, faults=faults)
+        closed = is_inverse_closed(cached_exchange_schedule(topo, 8))
+        if closed:
+            pol.validate(8)
+        else:
+            with pytest.raises(ValueError, match="inverse-closed"):
+                pol.validate(8)
+
+
+# ------------------------------------------------------------------
+# Membership / Masked topology value semantics
+# ------------------------------------------------------------------
+
+def test_membership_value_object():
+    mem = Membership.all(8)
+    assert mem.num_active == 8
+    left = mem.without(2, 5)
+    assert left.num_active == 6 and left != mem
+    assert left.rejoin(5).num_active == 7
+    assert hash(Membership.all(8).without(2, 5)) == hash(left)
+    with pytest.raises(ValueError, match="active"):
+        Membership.all(2).without(0, 1)
+    with pytest.raises(ValueError, match="range"):
+        mem.without(8)
+
+
+def test_masked_mixing_matrix_doubly_stochastic_with_identity_rows():
+    mem = Membership.all(8).without(1, 6)
+    h = Masked(Torus(2, 4), mem).mixing_matrix(8)
+    np.testing.assert_allclose(h.sum(axis=0), np.ones(8), atol=1e-9)
+    np.testing.assert_allclose(h.sum(axis=1), np.ones(8), atol=1e-9)
+    for i in (1, 6):
+        row = np.zeros(8)
+        row[i] = 1.0
+        np.testing.assert_allclose(h[i], row, atol=1e-12)
+        np.testing.assert_allclose(h[:, i], row, atol=1e-12)
+
+
+def test_masked_requires_symmetric_base():
+    with pytest.raises(ValueError, match="time-varying|symmetric"):
+        Masked(TimeVarying((Ring(1), Ring(2))), Membership.all(8).without(0))
+
+
+def test_membership_change_is_new_cache_entry_not_retrace():
+    m = 8
+    yw, tw = _problem(jax.random.PRNGKey(10), m=m)
+    backend = SimulatedBackend(m)
+    kw = dict(mu=1e-2, eps_radius=6.0, num_iters=10, backend=backend)
+    pols = [
+        AsyncGossip(rounds=2, topology=Masked(Ring(2), Membership.all(m))),
+        AsyncGossip(
+            rounds=2, topology=Masked(Ring(2), Membership.all(m).without(3))
+        ),
+        AsyncGossip(
+            rounds=2,
+            topology=Masked(Ring(2), Membership.all(m).without(3)),
+            faults=FaultModel(drop=0.2, seed=1),
+        ),
+    ]
+    for pol in pols:
+        admm.admm_ridge_consensus(yw, tw, policy=pol, **kw)
+    assert backend.lowerings == len(pols), backend.cache_info()
+    # Re-running every (policy, fault-model) combination: pure cache hits.
+    for pol in pols:
+        admm.admm_ridge_consensus(yw, tw, policy=pol, **kw)
+    assert backend.lowerings == len(pols), backend.cache_info()
+    assert backend.cache_hits >= len(pols)
+
+
+def test_fault_model_rides_executable_cache_key():
+    """Same policy shape, different fault models -> distinct executables;
+    repeated solves under ONE fault model never retrace (faults run
+    inside the cached SPMD program)."""
+    m = 8
+    yw, tw = _problem(jax.random.PRNGKey(11), m=m)
+    backend = SimulatedBackend(m)
+    kw = dict(mu=1e-2, eps_radius=6.0, num_iters=10, backend=backend)
+    pol = AsyncGossip(
+        rounds=2, topology=Ring(1), faults=FaultModel(drop=0.2, seed=7)
+    )
+    for _ in range(3):
+        admm.admm_ridge_consensus(yw, tw, policy=pol, **kw)
+    assert backend.lowerings == 1, backend.cache_info()
+    admm.admm_ridge_consensus(
+        yw, tw,
+        policy=AsyncGossip(
+            rounds=2, topology=Ring(1), faults=FaultModel(drop=0.2, seed=8)
+        ),
+        **kw,
+    )
+    assert backend.lowerings == 2, backend.cache_info()
+
+
+# ------------------------------------------------------------------
+# Spec grammar: async/fault forms
+# ------------------------------------------------------------------
+
+def test_parse_async_specs():
+    assert parse_policy("async") == AsyncGossip()
+    assert parse_policy("async:interval=4:drop=0.1:seed=7") == AsyncGossip(
+        interval=4, faults=FaultModel(drop=0.1, seed=7)
+    )
+    assert parse_policy("async:rounds=2:fail=1+3:fail_at=30") == AsyncGossip(
+        rounds=2, faults=FaultModel(failed=(1, 3), fail_at=30)
+    )
+    assert parse_policy(
+        "async:stragglers=0+2:straggle=3"
+    ) == AsyncGossip(faults=FaultModel(stragglers=(0, 2), straggle=3))
+    assert parse_policy("async:wire=bf16").wire_dtype == "bfloat16"
+    with pytest.raises(ValueError, match="unknown async key"):
+        parse_policy("async:latency=3")
+    with pytest.raises(ValueError, match="duplicate"):
+        parse_policy("async:drop=0.1:drop=0.2")
+    with pytest.raises(ValueError, match="at most"):
+        parse_policy("async:4")  # async takes key=value segments only

@@ -378,6 +378,104 @@ def test_layer_engine_on_8_devices():
     assert "ENGINE8_OK" in out
 
 
+def test_async_faults_and_elastic_resume_on_8_devices():
+    """The elastic-consensus acceptance tests on a real M=8 mesh:
+
+    - a disabled fault model leaves the lowered hot path UNCHANGED —
+      AsyncGossip's collective counts equal serial Gossip's, and the
+      solve is bit-identical;
+    - under drop=0.2 the whole training run is deterministic (two mesh
+      runs bit-equal), matches the vmap simulation, and compiles each
+      layer shape exactly once (faults run INSIDE the cached program —
+      no per-iteration retraces);
+    - a mid-run checkpoint + kill + resume reproduces the uninterrupted
+      run's final iterate on the mesh backend.
+    """
+    out = run_subprocess("""
+    import tempfile
+    from repro.core import admm, layerwise, ssfn
+    from repro.core.backend import MeshBackend, SimulatedBackend
+    from repro.core.policy import AsyncGossip, FaultModel, Gossip
+    from repro.core.topology import Hypercube
+    from repro.launch.mesh import make_worker_mesh
+
+    m, n, q, j = 8, 16, 3, 256
+    wmesh = make_worker_mesh(m)
+    y = jax.random.normal(jax.random.PRNGKey(0), (n, j))
+    t = jax.random.normal(jax.random.PRNGKey(1), (q, j))
+    yw = y.reshape(n, m, j // m).transpose(1, 0, 2)
+    tw = t.reshape(q, m, j // m).transpose(1, 0, 2)
+    kw = dict(mu=1e-2, eps_radius=6.0, num_iters=40)
+
+    # 1) Null fault model == serial Gossip: identical collectives in the
+    # lowered hot path, bit-identical solve.
+    K = 10
+    z0 = jnp.zeros((q, n))
+    def probe(policy):
+        backend = MeshBackend(wmesh, policy=policy)
+        def worker(y_m, t_m, z0r):
+            a, chol = admm._worker_stats_local(y_m, t_m, 1e-2, False)
+            return admm.worker_admm_iterations(
+                backend, a, chol, y_m, t_m, z0r, mu=1e-2, eps_radius=6.0,
+                num_iters=K, policy=policy, trace_every=0)
+        return backend.lowering_stats(
+            worker, yw, tw, replicated=(z0,), key="probe", policy=policy)
+
+    anull = AsyncGossip(rounds=3, topology=Hypercube())
+    gser = Gossip(rounds=3, topology=Hypercube(), compress=False)
+    ca = probe(anull)["collective_counts"]
+    cg = probe(gser)["collective_counts"]
+    assert ca == cg, (ca, cg)
+    ra = admm.admm_ridge_consensus(
+        yw, tw, backend=MeshBackend(wmesh, policy=anull), **kw)
+    rg = admm.admm_ridge_consensus(
+        yw, tw, backend=MeshBackend(wmesh, policy=gser), **kw)
+    assert jnp.array_equal(ra.o_star, rg.o_star)
+
+    # 2) Faulty solve: deterministic on the mesh, sim-vs-mesh parity.
+    pol = AsyncGossip(rounds=3, topology=Hypercube(),
+                      faults=FaultModel(drop=0.2, seed=11))
+    mesh_be = MeshBackend(wmesh, policy=pol)
+    f1 = admm.admm_ridge_consensus(yw, tw, backend=mesh_be, **kw)
+    f2 = admm.admm_ridge_consensus(yw, tw, backend=mesh_be, **kw)
+    assert jnp.array_equal(f1.o_star, f2.o_star)
+    assert mesh_be.lowerings == 1, mesh_be.cache_info()
+    fs = admm.admm_ridge_consensus(
+        yw, tw, backend=SimulatedBackend(m, policy=pol), **kw)
+    rel = float(jnp.linalg.norm(fs.o_star - f1.o_star)
+                / jnp.linalg.norm(fs.o_star))
+    assert rel < 1e-4, rel
+
+    # 3) Full faulty training + mid-run kill/resume on the mesh.
+    cfg = ssfn.SSFNConfig(input_dim=10, num_classes=3, num_layers=2,
+                          hidden=24, admm_iters=60)
+    kx, kt, kinit = jax.random.split(jax.random.PRNGKey(2), 3)
+    xw = jax.random.normal(kx, (m, 10, 24))
+    labels = jax.random.randint(kt, (m, 24), 0, 3)
+    tw2 = jax.nn.one_hot(labels, 3).transpose(0, 2, 1)
+
+    train_be = MeshBackend(wmesh, policy=pol)
+    pf, logf = layerwise.train_decentralized_ssfn(
+        xw, tw2, cfg, kinit, backend=train_be)
+    # L=2 -> 3 layer solves, 3 distinct shapes, zero fault retraces.
+    assert train_be.lowerings == 3, train_be.cache_info()
+
+    ckpt = tempfile.mkdtemp()
+    layerwise.train_decentralized_ssfn(
+        xw, tw2, cfg, kinit, backend=train_be,
+        checkpoint_dir=ckpt, stop_after_layer=0)   # 'crash' after layer 0
+    pr, logr = layerwise.train_decentralized_ssfn(
+        xw, tw2, cfg, kinit, backend=train_be,
+        checkpoint_dir=ckpt, resume=True)
+    for a, b in zip(pf.o, pr.o):
+        assert jnp.array_equal(a, b)
+    assert logf.comm_scalars == logr.comm_scalars
+    assert np.array_equal(logf.admm_objective, logr.admm_objective)
+    print("ELASTIC8_OK", rel)
+    """)
+    assert "ELASTIC8_OK" in out
+
+
 def test_distributed_admm_on_8_devices():
     out = run_subprocess("""
     from functools import partial

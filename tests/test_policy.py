@@ -11,15 +11,16 @@ import pytest
 from repro.core import admm, consensus, topology
 from repro.core.backend import MeshBackend, SimulatedBackend, make_backend
 from repro.core.policy import (
+    AsyncGossip,
     ConsensusPolicy,
     ExactMean,
+    FaultModel,
     Gossip,
     LossyGossip,
     QuantizedGossip,
     RingGossip,
     StaleMixing,
     parse_policy,
-    policy_from_mode,
 )
 from repro.core.topology import (
     FullyConnected,
@@ -110,15 +111,6 @@ def test_parse_policy_flag_fallbacks():
     assert parse_policy("gossip:3", rounds=10) == RingGossip(rounds=3, degree=1)
 
 
-def test_policy_from_mode_maps_legacy_strings():
-    assert policy_from_mode("exact") == ExactMean()
-    assert policy_from_mode("gossip", degree=2, num_rounds=4) == RingGossip(
-        rounds=4, degree=2
-    )
-    with pytest.raises(ValueError, match="unknown consensus mode"):
-        policy_from_mode("psum")
-
-
 def test_policy_validation():
     with pytest.raises(ValueError, match="degree"):
         RingGossip(rounds=1, degree=0)
@@ -137,17 +129,23 @@ def test_policy_validation():
 
 
 # ------------------------------------------------------------------
-# Deprecated string-mode aliases
+# Removed string-mode aliases: clean TypeError with a migration hint
 # ------------------------------------------------------------------
 
-def test_mode_string_is_deprecated_alias():
-    with pytest.warns(DeprecationWarning, match="deprecated alias"):
-        b = SimulatedBackend(8, mode="gossip", degree=2, num_rounds=5)
-    assert b.policy == RingGossip(rounds=5, degree=2)
-    assert (b.mode, b.degree, b.num_rounds) == ("gossip", 2, 5)
-    with pytest.warns(DeprecationWarning, match="deprecated alias"):
-        b = make_backend("simulated", 4, mode="exact")
-    assert b.policy == ExactMean()
+def test_mode_string_alias_is_removed():
+    with pytest.raises(TypeError, match="mode.*removed.*parse_policy"):
+        SimulatedBackend(8, mode="gossip", degree=2, num_rounds=5)
+    with pytest.raises(TypeError, match="mode.*removed.*parse_policy"):
+        make_backend("simulated", 4, mode="exact")
+    with pytest.raises(TypeError, match="num_rounds.*removed"):
+        SimulatedBackend(8, num_rounds=5)
+    with pytest.raises(TypeError, match="mode.*removed"):
+        MeshBackend(mode="exact")
+    # The migration target works: spec strings / policy objects only.
+    assert make_backend("simulated", 4, policy="exact").policy == ExactMean()
+    # Unrelated unknown kwargs still fail like any Python signature.
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        SimulatedBackend(4, flavor="exact")
 
 
 def test_make_consensus_fn_is_deprecated_alias():
@@ -155,11 +153,6 @@ def test_make_consensus_fn_is_deprecated_alias():
         fn = consensus.make_consensus_fn("exact")
     x = jnp.arange(12.0).reshape(4, 3)
     assert jnp.allclose(fn(x), jnp.broadcast_to(x.mean(0), x.shape))
-
-
-def test_policy_and_mode_mutually_exclusive():
-    with pytest.raises(ValueError, match="not both"):
-        SimulatedBackend(4, policy=ExactMean(), mode="exact")
 
 
 def test_default_backend_has_exact_policy_without_warning():
@@ -648,6 +641,10 @@ _GRAMMAR_SPECS = [
     "quantized:4", "quantized:8",
     "lossy:0.1", "lossy:0.2:3", "lossy:0.2:3:2",
     "stale:0", "stale:2",
+    "gossip:3:wire=bf16", "stale:2:wire=f16",
+    "async", "async:interval=4", "async:rounds=2:drop=0.1:seed=7",
+    "async:interval=2:fail=1+3:fail_at=30",
+    "async:stragglers=0:straggle=2:drop=0.05",
 ]
 
 
@@ -659,7 +656,8 @@ def test_spec_policy_repr_round_trip(spec):
     namespace = {
         "ExactMean": ExactMean, "Gossip": Gossip, "RingGossip": RingGossip,
         "QuantizedGossip": QuantizedGossip, "LossyGossip": LossyGossip,
-        "StaleMixing": StaleMixing, "Ring": Ring, "Torus": Torus,
+        "StaleMixing": StaleMixing, "AsyncGossip": AsyncGossip,
+        "FaultModel": FaultModel, "Ring": Ring, "Torus": Torus,
         "Hypercube": Hypercube, "FullyConnected": FullyConnected,
         "RandomGeometric": RandomGeometric, "TimeVarying": TimeVarying,
     }
