@@ -57,6 +57,16 @@ cached executable per (drop, interval) policy value) reporting
 ``iter_ms``, interval-aware eq.-15 ``bytes_per_worker``, and the
 ``oracle_rel`` convergence cost of the injected faults.
 
+The ``byzantine`` section tracks robust aggregation under seeded
+attacks: an attack (none / signflip / nanbomb) x policy (trimmed /
+median / clipped, plus the vulnerable async baseline) sweep through one
+shared backend — per cell the ``iter_ms`` robustness overhead, the
+``oracle_rel`` against the honest-data oracle (attacked rows measure
+against the leave-one-out solution: a Byzantine worker's shard is
+unlearnable since every payload it emits is corrupted), and the
+``jitter_events`` count from the guarded Cholesky.  One lowering per
+(policy, fault-model) value — attacks are data, not structure.
+
 Regression gate: ``--check-regression`` (or env
 ``BENCH_CHECK_REGRESSION=1``, used by the CI smoke job) loads the
 previously committed JSON before overwriting it and fails if any
@@ -115,18 +125,19 @@ def check_regression(
     regression descriptions (empty = pass).
     """
     problems = []
-    for name, base_row in baseline.get("backends", {}).items():
-        fresh_row = fresh.get("backends", {}).get(name)
-        if not fresh_row:
-            continue
-        base, new = base_row.get("iter_ms"), fresh_row.get("iter_ms")
-        if not base or not new:
-            continue
-        if new > base * (1.0 + threshold):
-            problems.append(
-                f"{name}: iter_ms {base:.4f} -> {new:.4f} "
-                f"(+{(new / base - 1) * 100:.0f}% > +{threshold * 100:.0f}%)"
-            )
+    for section in ("backends", "byzantine"):
+        for name, base_row in baseline.get(section, {}).items():
+            fresh_row = fresh.get(section, {}).get(name)
+            if not isinstance(base_row, dict) or not isinstance(fresh_row, dict):
+                continue
+            base, new = base_row.get("iter_ms"), fresh_row.get("iter_ms")
+            if not base or not new:
+                continue
+            if new > base * (1.0 + threshold):
+                problems.append(
+                    f"{section}/{name}: iter_ms {base:.4f} -> {new:.4f} "
+                    f"(+{(new / base - 1) * 100:.0f}% > +{threshold * 100:.0f}%)"
+                )
     return problems
 
 
@@ -551,6 +562,76 @@ def run(
         assert faults_backend.lowerings == len(report["faults"]), (
             faults_backend.cache_info()
         )
+
+    # Byzantine robustness: attack x policy sweep through ONE shared
+    # backend.  Every (policy, fault-model) pair is a policy VALUE —
+    # attacks corrupt the transmitted payload inside the cached SPMD
+    # program, so iter_ms measures the real robust-aggregation overhead
+    # (order statistics + screening on every link), never a retrace.
+    # Attacked rows score against the honest-data (leave-one-out)
+    # oracle: a Byzantine worker's shard is unlearnable because every
+    # payload it emits is corrupted.
+    report["byzantine"] = {}
+    if degree >= 1 and m >= 4:
+        from repro.dssfn import parse_spec as parse_byz_spec
+
+        byz = m // 2
+        keep = [i for i in range(m) if i != byz]
+        y_h = yw[jnp.array(keep)].transpose(1, 0, 2).reshape(n, -1)
+        t_h = tw[jnp.array(keep)].transpose(1, 0, 2).reshape(q, -1)
+        oracle_honest = admm.exact_constrained_ridge(y_h, t_h, eps_radius=eps)
+        byz_backend = make("mesh")
+        byz_cells = 0
+        for pname, ptoken in (
+            ("trimmed", "trimmed:f=1:rounds=3"),
+            ("median", "median:rounds=3"),
+            ("clipped", "clipped:tau=1.0:rounds=3"),
+            ("async", "async:rounds=3"),   # the vulnerable baseline
+        ):
+            for attack in ("none", "signflip", "nanbomb"):
+                spec = ptoken
+                if attack != "none":
+                    spec += f":byz={byz}:attack={attack}"
+                bpol = parse_byz_spec(spec + "@hypercube")
+
+                def byz_solve(bpol=bpol):
+                    return admm.admm_ridge_consensus(
+                        yw, tw, mu=1e-2, eps_radius=eps, num_iters=k,
+                        backend=byz_backend, policy=bpol, trace_every=0,
+                    )
+
+                res, b_compile_s = timed(byz_solve)
+                res, dt = steady(byz_solve)
+                byz_cells += 1
+                ref = oracle if attack == "none" else oracle_honest
+                rel_oracle = float(
+                    jnp.linalg.norm(res.o_star - ref) / jnp.linalg.norm(ref)
+                )
+                jitter = (
+                    int((jnp.asarray(res.jitter) > 0).sum())
+                    if res.jitter is not None else 0
+                )
+                bname = f"{pname}_{attack}"
+                report["byzantine"][bname] = {
+                    "policy": bpol.describe(),
+                    "attack": attack,
+                    "oracle": "full" if attack == "none" else "honest",
+                    "compile_s": round(b_compile_s, 4),
+                    "iter_ms": round(dt / k * 1e3, 4),
+                    "bytes_per_worker": _consensus_bytes(bpol, n, q, k, m),
+                    "oracle_rel": rel_oracle,
+                    "jitter_events": jitter,
+                }
+                rows.append(csv_row(
+                    f"mesh_byz_{bname}", dt * 1e6,
+                    f"M={m};iter_us={dt / k * 1e6:.1f};attack={attack};"
+                    f"oracle_rel={rel_oracle:.2e};jitter={jitter}",
+                ))
+                if verbose:
+                    print(rows[-1], flush=True)
+        # One lowering per (policy, fault-model) value, zero retraces.
+        report["byzantine_lowerings"] = byz_backend.lowerings
+        assert byz_backend.lowerings == byz_cells, byz_backend.cache_info()
 
     # Centralized-equivalence parity: same mode, different runtime.
     report["parity"] = {}

@@ -2,16 +2,45 @@
 
 Arrays are gathered to host (fine at the example scale; a production
 deployment would swap in tensorstore/orbax behind the same interface).
+
+Crash-safety contract:
+
+- :func:`save_pytree` is atomic per checkpoint: both the npz and its
+  metadata sidecar are staged as temp files in the target directory and
+  published with ``os.replace`` — metadata first, npz last, so a
+  complete npz at its final name implies its sidecar is complete too.
+  A kill mid-save leaves either the previous checkpoint intact or a
+  ``*.tmp.*`` stage file that no reader ever opens.
+- :func:`load_pytree_flat` never lets a truncated or schema-mismatched
+  file escape as a raw ``KeyError``/``zipfile.BadZipFile``: every
+  corruption mode is re-raised as :class:`CheckpointCorruptError`
+  naming the file and the defect, so resume logic can skip bad
+  checkpoints deliberately instead of crashing on them.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any
+import tempfile
+from typing import Any, Iterable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CheckpointCorruptError(Exception):
+    """A checkpoint file is unreadable or structurally wrong.
+
+    Raised (with the offending path and defect in the message) for
+    truncated npz archives, missing metadata sidecars, missing required
+    keys, and metadata/array shape mismatches.
+    """
+
+    def __init__(self, path: str, detail: str):
+        self.path = path
+        self.detail = detail
+        super().__init__(f"corrupt checkpoint {path!r}: {detail}")
 
 
 def _flatten_with_paths(tree: Any):
@@ -21,6 +50,31 @@ def _flatten_with_paths(tree: Any):
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
         out[key] = leaf
     return out
+
+
+def _meta_path(npz_path: str) -> str:
+    return npz_path + ".meta.json"
+
+
+def _atomic_write(final_path: str, write_fn) -> None:
+    """Stage via mkstemp in the destination directory, fsync, publish
+    with ``os.replace`` (atomic on POSIX within one filesystem)."""
+    directory = os.path.dirname(final_path) or "."
+    fd, tmp = tempfile.mkstemp(
+        dir=directory, prefix=os.path.basename(final_path) + ".tmp."
+    )
+    try:
+        with os.fdopen(fd, "wb") as f:
+            write_fn(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final_path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 def save_pytree(path: str, tree: Any) -> None:
@@ -34,12 +88,18 @@ def save_pytree(path: str, tree: Any) -> None:
         if a.dtype.name == "bfloat16":  # npz has no bf16: store the bits
             a = a.view(np.uint16)
         arrays[k] = a
-    np.savez(path, **arrays)
-    with open(path + ".meta.json", "w") as f:
-        json.dump(meta, f)
+    npz_path = path if path.endswith(".npz") else path + ".npz"
+    # Sidecar first, npz last: the npz appearing at its final name is
+    # the commit point, and it implies the sidecar is already in place.
+    _atomic_write(
+        _meta_path(npz_path), lambda f: f.write(json.dumps(meta).encode())
+    )
+    _atomic_write(npz_path, lambda f: np.savez(f, **arrays))
 
 
-def load_pytree_flat(path: str) -> dict[str, np.ndarray]:
+def load_pytree_flat(
+    path: str, *, expect_keys: Iterable[str] | None = None
+) -> dict[str, np.ndarray]:
     """Template-free load: the flat ``{tree-path: array}`` mapping
     ``save_pytree`` wrote, with bf16 leaves reconstructed from the
     sidecar metadata.
@@ -49,29 +109,83 @@ def load_pytree_flat(path: str) -> dict[str, np.ndarray]:
     the flat mapping first and rebuilds the training state from it (the
     checkpoint's own ``layer_next`` scalar determines how many per-layer
     entries exist).
+
+    Raises :class:`CheckpointCorruptError` for every way the file can
+    be bad: unreadable/truncated npz, missing metadata sidecar, keys in
+    ``expect_keys`` absent from the archive, and arrays whose shape
+    disagrees with the sidecar record.
     """
     npz_path = path if path.endswith(".npz") else path + ".npz"
-    data = np.load(npz_path)
-    meta_path = npz_path + ".meta.json"
+    if not os.path.exists(npz_path):
+        raise CheckpointCorruptError(npz_path, "file does not exist")
+    meta_path = _meta_path(npz_path)
     if not os.path.exists(meta_path):  # save_pytree("x") -> x.meta.json
-        meta_path = npz_path.removesuffix(".npz") + ".meta.json"
-    with open(meta_path) as f:
-        meta = json.load(f)
+        legacy = npz_path.removesuffix(".npz") + ".meta.json"
+        if os.path.exists(legacy):
+            meta_path = legacy
+        else:
+            raise CheckpointCorruptError(
+                npz_path, f"metadata sidecar {meta_path!r} is missing"
+            )
+    try:
+        with open(meta_path) as f:
+            meta = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(
+            npz_path, f"unreadable metadata sidecar {meta_path!r} ({e})"
+        ) from e
+    try:
+        data = np.load(npz_path)
+    except Exception as e:  # zipfile.BadZipFile, OSError, pickle errors
+        raise CheckpointCorruptError(
+            npz_path, f"unreadable npz archive ({e})"
+        ) from e
     out = {}
-    for key in data.files:
-        arr = data[key]
-        if meta.get(key, {}).get("dtype") == "bfloat16":
-            import ml_dtypes
+    try:
+        names = set(data.files)
+        if expect_keys is not None:
+            missing = sorted(set(expect_keys) - names)
+            if missing:
+                raise CheckpointCorruptError(
+                    npz_path, f"missing required key(s) {missing}"
+                )
+        for key in data.files:
+            try:
+                arr = data[key]
+            except Exception as e:  # truncated member, bad CRC
+                raise CheckpointCorruptError(
+                    npz_path, f"unreadable array {key!r} ({e})"
+                ) from e
+            rec = meta.get(key, {})
+            if rec.get("dtype") == "bfloat16":
+                import ml_dtypes
 
-            arr = arr.view(ml_dtypes.bfloat16)
-        out[key] = arr
+                arr = arr.view(ml_dtypes.bfloat16)
+            if "shape" in rec and list(arr.shape) != list(rec["shape"]):
+                raise CheckpointCorruptError(
+                    npz_path,
+                    f"array {key!r} has shape {list(arr.shape)}, "
+                    f"metadata records {rec['shape']}",
+                )
+            out[key] = arr
+    finally:
+        data.close()
     return out
+
+
+def is_valid_checkpoint(path: str) -> bool:
+    """True iff the checkpoint loads end-to-end (resume-scan predicate)."""
+    try:
+        load_pytree_flat(path)
+    except CheckpointCorruptError:
+        return False
+    return True
 
 
 def load_pytree(path: str, like: Any) -> Any:
     npz_path = path if path.endswith(".npz") else path + ".npz"
     data = np.load(npz_path)
-    with open(npz_path.removesuffix(".npz") + ".npz.meta.json") as f:
+    with open(_meta_path(npz_path)) as f:
         meta = json.load(f)
     flat_like = _flatten_with_paths(like)
     restored = {}

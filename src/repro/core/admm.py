@@ -65,10 +65,55 @@ class ADMMResult(NamedTuple):
     o_workers: Array
     lam: Array
     trace: "ADMMTrace | None"   # None when trace_every=0 (hot path)
+    #: Per-worker guarded-Cholesky jitter level (int32; 0 = factored
+    #: clean).  None on paths predating the guard (legacy consensus_fn).
+    jitter: "Array | None" = None
+
+
+def guarded_cholesky(
+    g: Array, *, max_tries: int = 6, base_jitter: float = 1e-8
+):
+    """Cholesky with escalating diagonal jitter: the self-healing
+    factorization for ill-conditioned / rank-deficient Gram matrices.
+
+    ``jnp.linalg.cholesky`` signals a non-PD input by returning NaN
+    (never raising), so recovery is a ``lax.while_loop`` on factor
+    health: try G as-is, then G + eps_k I with
+    ``eps_k = scale * base_jitter * 10**k`` (``scale`` = mean
+    |diagonal|, so the jitter is relative to the matrix's magnitude),
+    escalating until the factor is finite or ``max_tries`` retries are
+    spent.  Traces cleanly under vmap and shard_map — it is data-
+    dependent control flow, not Python control flow.
+
+    Returns ``(chol, jitter_level)``: level 0 means the plain factor
+    was healthy; level k >= 1 means the factor used ``eps_{k-1}``.  A
+    still-non-finite factor after ``max_tries`` is returned as-is —
+    the layerwise divergence guard owns that failure.
+    """
+    n = g.shape[-1]
+    eye = jnp.eye(n, dtype=g.dtype)
+    scale = jnp.maximum(
+        jnp.mean(jnp.abs(jnp.diagonal(g))), jnp.asarray(1.0, g.dtype)
+    )
+
+    def cond(state):
+        k, chol = state
+        return (k < max_tries) & ~jnp.all(jnp.isfinite(chol))
+
+    def body(state):
+        k, _ = state
+        eps = scale * base_jitter * jnp.asarray(10.0, g.dtype) ** k.astype(g.dtype)
+        return k + 1, jnp.linalg.cholesky(g + eps * eye)
+
+    k, chol = jax.lax.while_loop(
+        cond, body, (jnp.zeros((), jnp.int32), jnp.linalg.cholesky(g))
+    )
+    return chol, k
 
 
 def _worker_stats(y_workers: Array, t_workers: Array, mu: float, use_kernels: bool = False):
-    """Per-worker A_m = T_m Y_m^T and Cholesky of G_m = Y_m Y_m^T + I/mu.
+    """Per-worker A_m = T_m Y_m^T and guarded Cholesky of
+    G_m = Y_m Y_m^T + I/mu (plus the per-worker jitter level).
 
     use_kernels=True routes the Gram product through the Pallas ``gram``
     kernel (TPU hot-path; interpret mode elsewhere).
@@ -82,9 +127,9 @@ def _worker_stats(y_workers: Array, t_workers: Array, mu: float, use_kernels: bo
     else:
         gram = jnp.einsum("mij,mkj->mik", y_workers, y_workers)
         gram = gram + (1.0 / mu) * jnp.eye(n, dtype=y_workers.dtype)
-    chol = jax.vmap(lambda g: jnp.linalg.cholesky(g))(gram)
+    chol, jitter = jax.vmap(guarded_cholesky)(gram)
     a = jnp.einsum("mqj,mnj->mqn", t_workers, y_workers)
-    return a, chol
+    return a, chol, jitter
 
 
 def _o_update(a: Array, chol: Array, z: Array, lam: Array, mu: float) -> Array:
@@ -166,7 +211,7 @@ def admm_ridge_consensus(
     q = t_workers.shape[1]
     dtype = y_workers.dtype
 
-    a, chol = _worker_stats(y_workers, t_workers, mu, use_kernels=use_kernels)
+    a, chol, jitter = _worker_stats(y_workers, t_workers, mu, use_kernels=use_kernels)
 
     z_init = jnp.zeros((q, n), dtype) if z0 is None else z0.astype(dtype)
     state = ADMMState(
@@ -200,11 +245,15 @@ def admm_ridge_consensus(
         step, state, None, length=num_iters
     )
     trace = ADMMTrace(objs, primals, duals, cerrs)
-    return ADMMResult(o_star=state.z, o_workers=state.o, lam=state.lam, trace=trace)
+    return ADMMResult(
+        o_star=state.z, o_workers=state.o, lam=state.lam, trace=trace,
+        jitter=jitter,
+    )
 
 
 def _worker_stats_local(y_m: Array, t_m: Array, mu: float, use_kernels: bool):
-    """Worker-local A_m = T_m Y_m^T and Cholesky of G_m = Y_m Y_m^T + I/mu.
+    """Worker-local A_m = T_m Y_m^T and guarded Cholesky of
+    G_m = Y_m Y_m^T + I/mu (plus this worker's jitter level).
 
     The local view of ``_worker_stats`` for SPMD execution: same math, no
     worker axis, same Pallas ``gram`` kernel routing on aligned shapes.
@@ -216,9 +265,9 @@ def _worker_stats_local(y_m: Array, t_m: Array, mu: float, use_kernels: bool):
         gram = gram_kernel(y_m, mu=mu).astype(y_m.dtype)
     else:
         gram = y_m @ y_m.T + (1.0 / mu) * jnp.eye(n, dtype=y_m.dtype)
-    chol = jnp.linalg.cholesky(gram)
+    chol, jitter = guarded_cholesky(gram)
     a = t_m @ y_m.T
-    return a, chol
+    return a, chol, jitter
 
 
 def validate_trace_every(trace_every: int, num_iters: int) -> int:
@@ -451,12 +500,13 @@ def _admm_backend_path(
     z_init = jnp.zeros((q, n), dtype) if z0 is None else z0.astype(dtype)
 
     def worker(y_m: Array, t_m: Array, z_init_rep: Array):
-        a, chol = _worker_stats_local(y_m, t_m, mu, use_kernels)
-        return worker_admm_iterations(
+        a, chol, jitter = _worker_stats_local(y_m, t_m, mu, use_kernels)
+        state, traces = worker_admm_iterations(
             backend, a, chol, y_m, t_m, z_init_rep,
             mu=mu, eps_radius=eps_radius, num_iters=num_iters, policy=policy,
             trace_every=trace_every,
         )
+        return state, traces, jitter
 
     # trace_every changes the traced output pytree (no trace leaves at
     # 0, K/N-long leaves at N>1), so it must key the executable cache.
@@ -464,7 +514,7 @@ def _admm_backend_path(
         "admm_ridge", float(mu), float(eps_radius), int(num_iters),
         bool(use_kernels), trace_every,
     )
-    (o_w, z_w, lam_w), traces = backend.run(
+    (o_w, z_w, lam_w), traces, jitter_w = backend.run(
         worker, y_workers, t_workers, replicated=(z_init,), key=cache_key,
         policy=policy,
     )
@@ -472,7 +522,9 @@ def _admm_backend_path(
     if traces is not None:
         objs, primals, duals, cerrs = traces
         trace = ADMMTrace(objs[0], primals[0], duals[0], cerrs[0])
-    return ADMMResult(o_star=z_w[0], o_workers=o_w, lam=lam_w, trace=trace)
+    return ADMMResult(
+        o_star=z_w[0], o_workers=o_w, lam=lam_w, trace=trace, jitter=jitter_w
+    )
 
 
 def centralized_ridge_admm(

@@ -276,6 +276,214 @@ def faulty_schedule_gossip_step(
     return acc + lost * x
 
 
+def _receive_screened(
+    x: jax.Array,
+    axis_name: str,
+    schedule,
+    alive: jax.Array | None,
+    *,
+    worker_index: jax.Array | None = None,
+    transmit: jax.Array | None = None,
+    wire_dtype: str | None = None,
+):
+    """Gather one payload per schedule hop, screening every incoming
+    message for health before it can touch the aggregate.
+
+    Returns ``(payloads, oks, weights, self_weight)`` where ``payloads[k]``
+    is hop k's received message with the whole message REPLACED by the
+    receiver's own ``x`` when the link is down (``alive`` gate, the PR-6
+    rerouting) OR the payload contains any non-finite entry (the
+    numerical-health screen), and ``oks[k]`` is the scalar bool health
+    gate itself (True = the raw message survived).  Both reroute cases
+    degrade into the diagonal reroute of
+    :func:`faulty_schedule_gossip_step`: a NaN-bombing peer is
+    indistinguishable from a dropped link, never a poisoned mean.  The
+    ``oks`` flags let order-statistic aggregators keep rerouted links out
+    of their neighborhood-scale estimates (a rerouted link sits at
+    distance zero, which would otherwise drag the scale down and get an
+    honest link trimmed in its place).
+
+    ``transmit`` substitutes what peers receive (Byzantine corruption /
+    straggler replay); the local ``x`` used for rerouting stays fresh.
+    The per-link health gate is computed with ``jnp.where`` on a scalar
+    predicate — non-finite values never enter a multiply, so no
+    ``NaN * 0`` leak.
+    """
+    me = (
+        jax.lax.axis_index(axis_name) if worker_index is None else worker_index
+    )
+    out = x if transmit is None else transmit
+    wire = out if wire_dtype is None else out.astype(wire_dtype)
+    m = schedule.num_workers
+    a_me = None
+    if alive is not None:
+        alive = alive.astype(x.dtype)
+        a_me = alive[me]
+    payloads = []
+    oks = []
+    for perm in schedule.perms:
+        msg = jax.lax.ppermute(wire, axis_name, perm).astype(x.dtype)
+        ok = jnp.all(jnp.isfinite(msg))
+        if alive is not None:
+            src = np.zeros(m, dtype=np.int32)
+            for s, d in perm:
+                src[d] = s
+            up = (a_me * alive[jnp.asarray(src)[me]]) > 0.5
+            ok = jnp.logical_and(ok, up)
+        payloads.append(jnp.where(ok, msg, x))
+        oks.append(ok)
+    return payloads, oks, schedule.weights, schedule.self_weight
+
+
+#: Neighborhood-scale factor of the trimmed-mean outlier screen: a link
+#: is trimmable when its payload's distance from the receiver exceeds
+#: this multiple of the median neighborhood distance.  Below 1 the screen
+#: trims the top-f links essentially unconditionally (which mis-flags
+#: honest extremes and wrecks the mixing rate); large values only catch
+#: payloads far outside the honest spread and let attacks that hide
+#: inside the ADMM dual disagreement through.  1.5 catches a signflip
+#: attacker (whose payload sits ~2||x|| from every honest receiver)
+#: while honest neighborhood distances stay within the screen.
+TRIM_SCREEN_FACTOR = 1.5
+
+
+def trimmed_mean_schedule_gossip_step(
+    x: jax.Array,
+    axis_name: str,
+    schedule,
+    *,
+    trim: int,
+    alive: jax.Array | None = None,
+    worker_index: jax.Array | None = None,
+    transmit: jax.Array | None = None,
+    wire_dtype: str | None = None,
+) -> jax.Array:
+    """One robust gossip round: screened trimmed-mean aggregation.
+
+    The classical coordinate-wise trimmed mean discards the extremes of
+    EVERY neighborhood, so its fixed point is biased by the honest
+    workers' own disagreement — in consensus ADMM (where local updates
+    re-inject disagreement each iteration) that bias never vanishes.
+    This step instead trims *adversarially deviant links only*: each of
+    the ``trim`` most-deviant payloads (Frobenius distance from the
+    receiver's own value) is rerouted to the diagonal — exactly the
+    dead-link reroute of :func:`faulty_schedule_gossip_step` — but only
+    when it stands out from the neighborhood scale,
+
+        d_k > TRIM_SCREEN_FACTOR * median({d_j}) + 1e-6 * (1 + ||x||),
+
+    a test no honest payload passes once values concentrate.  Honest
+    links therefore mix with their exact gossip weights (the honest-
+    subset mean is preserved — trims reroute weight to the receiver,
+    never leak it), while a Byzantine payload beyond the honest spread
+    loses its entire link weight.  Up to ``trim`` arbitrarily-corrupted
+    neighbors per neighborhood are neutralized; ``trim`` within the
+    classical breakdown bound 2*trim < |neighborhood| is enforced by the
+    policy layer.  Requires a uniform equal-weight schedule (the paper's
+    h_ij = 1/|N_i| rule, so "most deviant" is well-defined without
+    weight asymmetry).
+    """
+    if not schedule.uniform:
+        raise ValueError(
+            "trimmed-mean gossip needs a uniform equal-weight schedule"
+        )
+    payloads, oks, _, _ = _receive_screened(
+        x, axis_name, schedule, alive,
+        worker_index=worker_index, transmit=transmit, wire_dtype=wire_dtype,
+    )
+    s = len(payloads) + 1
+    if not 0 <= 2 * trim < s:
+        raise ValueError(
+            f"trim={trim} needs 2*trim < neighborhood size {s}"
+        )
+    if trim == 0:
+        return jnp.mean(jnp.stack([x] + payloads, axis=0), axis=0)
+    ok = jnp.stack(oks)
+    raw = jnp.stack(
+        [jnp.sqrt(jnp.sum(jnp.square(p - x))) for p in payloads]
+    )
+    # A health-rerouted link sits at distance 0 (its payload IS x); rank
+    # it as maximally deviant so it consumes the trim budget, and keep it
+    # out of the neighborhood-scale median (nanmedian over healthy links
+    # only) so it cannot drag the scale down onto an honest link.
+    dists = jnp.where(ok, raw, jnp.inf)
+    med = jnp.nanmedian(jnp.where(ok, raw, jnp.nan))
+    floor = 1e-6 * (1.0 + jnp.sqrt(jnp.sum(jnp.square(x))))
+    thresh = TRIM_SCREEN_FACTOR * med + floor
+    # rank 0 = most deviant; flag the `trim` most deviant links, but only
+    # those beyond the neighborhood-scale threshold.
+    ranks = jnp.argsort(jnp.argsort(-dists))
+    flags = jnp.logical_and(ranks < trim, dists > thresh)
+    acc = x
+    for k, p in enumerate(payloads):
+        acc = acc + jnp.where(flags[k], x, p)
+    return acc / s
+
+
+def median_schedule_gossip_step(
+    x: jax.Array,
+    axis_name: str,
+    schedule,
+    *,
+    alive: jax.Array | None = None,
+    worker_index: jax.Array | None = None,
+    transmit: jax.Array | None = None,
+    wire_dtype: str | None = None,
+) -> jax.Array:
+    """One robust gossip round: coordinate-wise median of the
+    neighborhood payload stack — the maximal-breakdown special case of
+    the trimmed mean (tolerates just under half the neighborhood being
+    corrupt).  Uniform schedules only, like the trimmed mean."""
+    if not schedule.uniform:
+        raise ValueError("median gossip needs a uniform equal-weight schedule")
+    payloads, _, _, _ = _receive_screened(
+        x, axis_name, schedule, alive,
+        worker_index=worker_index, transmit=transmit, wire_dtype=wire_dtype,
+    )
+    stack = jnp.stack([x] + payloads, axis=0)
+    return jnp.median(stack, axis=0)
+
+
+def clipped_schedule_gossip_step(
+    x: jax.Array,
+    axis_name: str,
+    schedule,
+    *,
+    tau: float,
+    alive: jax.Array | None = None,
+    worker_index: jax.Array | None = None,
+    transmit: jax.Array | None = None,
+    wire_dtype: str | None = None,
+) -> jax.Array:
+    """One robust gossip round with norm-clipped incoming payloads
+    (Karimireddy et al.-style centered clipping): each screened payload's
+    deviation from self is shrunk onto the Frobenius ball of radius
+    ``tau`` before the standard weighted accumulation,
+
+        recv_k' = x + min(1, tau / ||recv_k - x||) (recv_k - x)
+
+    so one attacker can displace this worker by at most w_k * tau per
+    round no matter how extreme its payload.  Payloads within the ball
+    pass through UNTOUCHED (``jnp.where`` selects the raw message), which
+    keeps the zero-attacker round bit-identical to the weighted
+    :func:`schedule_gossip_step` path on non-uniform schedules and equal
+    to it up to the uniform path's sum-then-divide association otherwise.
+    Works on any schedule (weights are respected, not assumed equal)."""
+    if tau <= 0.0:
+        raise ValueError(f"clip radius tau must be > 0, got {tau}")
+    payloads, _, weights, self_weight = _receive_screened(
+        x, axis_name, schedule, alive,
+        worker_index=worker_index, transmit=transmit, wire_dtype=wire_dtype,
+    )
+    acc = jnp.asarray(self_weight, x.dtype) * x
+    for msg, w in zip(payloads, weights):
+        delta = msg - x
+        norm = jnp.sqrt(jnp.sum(delta * delta))
+        clipped = x + (tau / jnp.maximum(norm, 1e-30)) * delta
+        acc = acc + w * jnp.where(norm <= tau, msg, clipped)
+    return acc
+
+
 def quantize_stochastic(x: jax.Array, bits: int, key: jax.Array) -> jax.Array:
     """Unbiased per-tensor stochastic-rounding quantization to 2^bits
     levels over the tensor's dynamic range: E[q(x)] = x."""

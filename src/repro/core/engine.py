@@ -52,6 +52,9 @@ class LayerStepResult(NamedTuple):
     #: (K/trace_every,) device-resident worker-0 traces; None when
     #: trace_every=0 (the collective-free hot path).
     trace: "admm_lib.ADMMTrace | None"
+    #: (M,) per-worker guarded-Cholesky jitter level (int32; 0 = the
+    #: Gram factored clean — see ``admm.guarded_cholesky``).
+    jitter: "Array | None" = None
 
 
 def _aligned(*dims: int) -> bool:
@@ -59,7 +62,8 @@ def _aligned(*dims: int) -> bool:
 
 
 def _propagate_and_stats(w, y_m, t_m, mu: float, use_kernels: bool):
-    """relu(W @ Y_m) then (A_m, chol(G_m)) — fused on aligned shapes."""
+    """relu(W @ Y_m) then (A_m, chol(G_m), jitter) — fused on aligned
+    shapes; the Cholesky is the guarded (self-healing) factorization."""
     n_out, n_in = w.shape
     j = y_m.shape[1]
     if use_kernels and _aligned(n_out, n_in, j):
@@ -68,14 +72,14 @@ def _propagate_and_stats(w, y_m, t_m, mu: float, use_kernels: bool):
         y_new, gram = propagate_gram(w, y_m, mu=mu)
         y_new = y_new.astype(y_m.dtype)
         gram = gram.astype(y_m.dtype)
-        chol = jnp.linalg.cholesky(gram)
+        chol, jitter = admm_lib.guarded_cholesky(gram)
         a = t_m @ y_new.T
-        return y_new, a, chol
+        return y_new, a, chol, jitter
     # Unfused: plain propagation, then the same stats construction (and
     # gram-kernel routing) the direct ADMM path uses.
     y_new = jax.nn.relu(w @ y_m)
-    a, chol = admm_lib._worker_stats_local(y_new, t_m, mu, use_kernels)
-    return y_new, a, chol
+    a, chol, jitter = admm_lib._worker_stats_local(y_new, t_m, mu, use_kernels)
+    return y_new, a, chol, jitter
 
 
 def fused_layer_step(
@@ -146,11 +150,13 @@ def fused_layer_step(
 
     def worker(y_m: Array, t_m: Array, *w_rep: Array):
         if w_rep:
-            y_m, a, chol = _propagate_and_stats(
+            y_m, a, chol, jitter = _propagate_and_stats(
                 w_rep[0], y_m, t_m, mu, use_kernels
             )
         else:
-            a, chol = admm_lib._worker_stats_local(y_m, t_m, mu, use_kernels)
+            a, chol, jitter = admm_lib._worker_stats_local(
+                y_m, t_m, mu, use_kernels
+            )
         q, n = a.shape
         z_init = jnp.zeros((q, n), a.dtype)
         (o, z, lam), traces = admm_lib.worker_admm_iterations(
@@ -158,7 +164,7 @@ def fused_layer_step(
             mu=mu, eps_radius=eps_radius, num_iters=num_iters, policy=policy,
             trace_every=trace_every,
         )
-        return (o, z, lam, y_m), traces
+        return (o, z, lam, y_m), traces, jitter
 
     cache_key = (
         "dssfn_layer",
@@ -169,7 +175,7 @@ def fused_layer_step(
         w is not None,
         trace_every,
     )
-    (o_w, z_w, lam_w, y_next), traces = backend.run(
+    (o_w, z_w, lam_w, y_next), traces, jitter_w = backend.run(
         worker,
         y_workers,
         t_workers,
@@ -183,5 +189,6 @@ def fused_layer_step(
         objs, primals, duals, cerrs = traces
         trace = admm_lib.ADMMTrace(objs[0], primals[0], duals[0], cerrs[0])
     return LayerStepResult(
-        o_star=z_w[0], o_workers=o_w, lam=lam_w, y_workers=y_next, trace=trace
+        o_star=z_w[0], o_workers=o_w, lam=lam_w, y_workers=y_next,
+        trace=trace, jitter=jitter_w,
     )

@@ -23,7 +23,8 @@ from __future__ import annotations
 
 import os
 import time
-from dataclasses import dataclass
+import warnings
+from dataclasses import dataclass, field
 from typing import Callable
 
 import jax
@@ -49,16 +50,32 @@ def checkpoint_path(directory: str, layer_next: int) -> str:
 
 
 def latest_checkpoint(directory: str) -> str | None:
-    """Newest (deepest) checkpoint in ``directory``, or None."""
+    """Newest (deepest) COMPLETE checkpoint in ``directory``, or None.
+
+    A kill mid-save can leave a truncated npz (pre-atomic-write
+    checkpoints) or an npz without its metadata sidecar; those are
+    skipped with a warning and the scan falls back to the next-deepest
+    checkpoint instead of handing resume a corrupt file.
+    """
+    from repro.checkpoint.store import is_valid_checkpoint
+
     if not os.path.isdir(directory):
         return None
     names = [
         f for f in os.listdir(directory)
         if f.startswith(_CKPT_PREFIX) and f.endswith(".npz")
     ]
-    if not names:
-        return None
-    return os.path.join(directory, max(names))
+    for name in sorted(names, reverse=True):
+        path = os.path.join(directory, name)
+        if is_valid_checkpoint(path):
+            return path
+        warnings.warn(
+            f"skipping partial/corrupt checkpoint {path!r} "
+            "(interrupted save?)",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+    return None
 
 
 def _key_data(key: jax.Array) -> jax.Array:
@@ -76,11 +93,14 @@ def _save_checkpoint(
     directory: str, *, layer_next: int, key, y_workers, o_list,
     step: engine_lib.LayerStepResult, dev_traces, comm: int,
     prev_cost: float | None, active_mask: np.ndarray,
+    r_list=None, jitter_list=None,
 ) -> str:
     """Elastic-resume state after ``layer_next`` completed layers: layer
     features, per-layer readouts, the last solve's worker primals/duals,
-    the RNG key (layer weights are re-derived, not stored), membership,
-    and the device traces accumulated so far."""
+    the RNG key, the random matrices ACTUALLY used so far (divergence
+    rollback perturbs the key for future layers, so the key alone no
+    longer determines them), membership, and the device traces
+    accumulated so far."""
     from repro.checkpoint.store import save_pytree
 
     state = {
@@ -94,6 +114,12 @@ def _save_checkpoint(
         "prev_cost": np.float64(np.nan if prev_cost is None else prev_cost),
         "membership": np.asarray(active_mask, np.float64),
     }
+    if r_list is not None:
+        state["r"] = {str(i): r for i, r in enumerate(r_list)}
+    if jitter_list:
+        state["jit"] = np.stack(
+            [np.asarray(j, np.int32) for j in jitter_list]
+        )
     if dev_traces:
         fetched = [jax.tree.map(np.asarray, tr) for tr in dev_traces]
         state["tr"] = {
@@ -122,6 +148,14 @@ def _load_checkpoint(path: str) -> dict:
                 flat["tr/obj"][i], flat["tr/primal"][i],
                 flat["tr/dual"][i], flat["tr/cerr"][i],
             ))
+    r_list = None
+    if "r/0" in flat:
+        r_list = []
+        while f"r/{len(r_list)}" in flat:
+            r_list.append(jnp.asarray(flat[f"r/{len(r_list)}"]))
+    jitter_list = None
+    if "jit" in flat:
+        jitter_list = [np.asarray(j) for j in flat["jit"]]
     return {
         "layer_next": layer_next,
         "key": jnp.asarray(flat["key"]),
@@ -133,6 +167,10 @@ def _load_checkpoint(path: str) -> dict:
         "prev_cost": None if np.isnan(prev_cost) else prev_cost,
         "membership": flat["membership"],
         "traces": traces,
+        # Pre-PR-7 checkpoints have neither key: r falls back to key
+        # derivation and the jitter history restarts empty.
+        "r_list": r_list,
+        "jitter_list": jitter_list,
     }
 
 
@@ -156,10 +194,37 @@ class LayerwiseLog:
     consensus_error: np.ndarray
     wall_time_s: float
     comm_scalars: int                   # total scalars exchanged (eq. 15)
+    #: (layers, M) guarded-Cholesky jitter level per layer solve (int32;
+    #: all-zero on a numerically healthy run).  Empty on the legacy
+    #: consensus_fn path.
+    jitter_levels: np.ndarray = field(
+        default_factory=lambda: np.zeros((0, 0), np.int32)
+    )
+    #: Divergence-guard rollbacks taken during this run (0 = clean).
+    rollbacks: int = 0
 
 
 def _mu_for_layer(cfg: ssfn_lib.SSFNConfig, layer: int) -> float:
     return cfg.mu0 if layer == 0 else cfg.mul
+
+
+def _step_diverged(
+    step: engine_lib.LayerStepResult,
+    prev_cost: float | None,
+    blowup: float = 1e3,
+) -> bool:
+    """The divergence monitor: a non-finite consensus iterate, a
+    non-finite objective, or an objective that blew up past
+    ``blowup`` x the previous layer's cost.  One scalar fetch."""
+    if not bool(jnp.all(jnp.isfinite(step.o_star))):
+        return True
+    if step.trace is not None:
+        obj = float(step.trace.objective[-1])
+        if not np.isfinite(obj):
+            return True
+        if prev_cost is not None and obj > blowup * max(prev_cost, 1e-12):
+            return True
+    return False
 
 
 def train_decentralized_ssfn(
@@ -178,6 +243,8 @@ def train_decentralized_ssfn(
     checkpoint_every: int = 1,
     resume: bool = False,
     stop_after_layer: int | None = None,
+    guard_divergence: bool = False,
+    max_rollbacks: int = 2,
 ) -> tuple[ssfn_lib.SSFNParams, LayerwiseLog]:
     """Train dSSFN on M workers.
 
@@ -228,16 +295,32 @@ def train_decentralized_ssfn(
     stop_after_layer: complete this layer index, checkpoint, and return
         the partial model (the crash half of a kill/resume drill; also a
         cheap way to train the first layers now and the rest later).
+    guard_divergence: the numerical self-healing monitor — after every
+        layer solve, check for a non-finite consensus iterate, a
+        non-finite objective, or an objective blow-up past 1000x the
+        previous layer's cost.  On divergence the run rolls back to the
+        last complete checkpoint (or the loop entry state when there is
+        none), perturbs the RNG key so every not-yet-consumed random
+        matrix re-draws (the consumed ones are restored from the
+        checkpoint verbatim — completed layers keep their exact
+        weights), and retries — instead of crashing or silently
+        returning NaNs.  Costs one extra scalar fetch per layer.
+    max_rollbacks: divergence-rollback budget; the run raises
+        RuntimeError once a diverging layer has exhausted it.
     """
     if consensus_fn is not None and (backend is not None or policy is not None):
         raise ValueError("pass either consensus_fn or backend/policy, not both")
     if consensus_fn is not None and (
         checkpoint_dir is not None or resume or stop_after_layer is not None
+        or guard_divergence
     ):
         raise ValueError(
-            "checkpoint/resume runs through the backend engine path; the "
-            "legacy consensus_fn simulation does not support it"
+            "checkpoint/resume and the divergence guard run through the "
+            "backend engine path; the legacy consensus_fn simulation does "
+            "not support them"
         )
+    if max_rollbacks < 0:
+        raise ValueError(f"max_rollbacks must be >= 0, got {max_rollbacks}")
     if resume and checkpoint_dir is None:
         raise ValueError("resume=True needs a checkpoint_dir to restore from")
     if checkpoint_dir is not None and checkpoint_every < 1:
@@ -278,9 +361,11 @@ def train_decentralized_ssfn(
     w_next: Array | None = None
     # Device-resident (K,) traces per layer; fetched once after the loop.
     dev_traces: list[admm_lib.ADMMTrace] = []
+    jitter_list: list[np.ndarray] = []
     comm = 0
     prev_cost: float | None = None
     layer_start = 0
+    rollbacks = 0
 
     restored = None
     if resume:
@@ -292,19 +377,33 @@ def train_decentralized_ssfn(
         key = restored["key"]
         o_list = list(restored["o_list"])
         dev_traces = list(restored["traces"])
+        jitter_list = list(restored["jitter_list"] or [])
         comm = restored["comm"]
         prev_cost = restored["prev_cost"]
         y_workers = engine_backend.shard_workers(restored["y_workers"])
-        r_list = ssfn_lib.init_random_matrices(key, cfg)
+        r_list = (
+            list(restored["r_list"])
+            if restored["r_list"] is not None
+            else list(ssfn_lib.init_random_matrices(key, cfg))
+        )
         if layer_start <= cfg.num_layers:
             w_next = ssfn_lib.build_weight(
                 o_list[-1], r_list[layer_start - 1], q
             )
     else:
-        r_list = ssfn_lib.init_random_matrices(key, cfg)
+        r_list = list(ssfn_lib.init_random_matrices(key, cfg))
         y_workers = engine_backend.shard_workers(x_workers)   # y_0 = x
 
-    for layer in range(layer_start, cfg.num_layers + 1):
+    # The divergence guard's restart point before the first checkpoint
+    # exists (references only — none of these buffers is ever donated:
+    # donation starts at layer 2 with engine-materialized carries).
+    entry_state = (
+        layer_start, key, list(o_list), list(dev_traces), list(jitter_list),
+        comm, prev_cost, y_workers, w_next, list(r_list),
+    )
+
+    layer = layer_start
+    while layer <= cfg.num_layers:
         step = engine_lib.fused_layer_step(
             engine_backend,
             y_workers,
@@ -322,10 +421,69 @@ def train_decentralized_ssfn(
             # layer 0's pass-through output may alias it.
             donate_y=layer > 1,
         )
+
+        if guard_divergence and _step_diverged(step, prev_cost):
+            if rollbacks >= max_rollbacks:
+                raise RuntimeError(
+                    f"layer {layer} diverged and the rollback budget "
+                    f"(max_rollbacks={max_rollbacks}) is spent"
+                )
+            rollbacks += 1
+            ckpt = (
+                latest_checkpoint(checkpoint_dir)
+                if checkpoint_dir is not None else None
+            )
+            if ckpt is not None:
+                restored = _load_checkpoint(ckpt)
+                layer = restored["layer_next"]
+                key = restored["key"]
+                o_list = list(restored["o_list"])
+                dev_traces = list(restored["traces"])
+                jitter_list = list(restored["jitter_list"] or [])
+                comm = restored["comm"]
+                prev_cost = restored["prev_cost"]
+                y_workers = engine_backend.shard_workers(
+                    restored["y_workers"]
+                )
+                if restored["r_list"] is not None:
+                    r_list = list(restored["r_list"])
+            else:
+                (layer, key, o_list, dev_traces, jitter_list, comm,
+                 prev_cost, y_workers, w_next, r_list) = entry_state
+                o_list = list(o_list)
+                dev_traces = list(dev_traces)
+                jitter_list = list(jitter_list)
+                r_list = list(r_list)
+            warnings.warn(
+                f"layer solve diverged; rolling back to layer {layer} "
+                f"with a perturbed key (rollback {rollbacks}/"
+                f"{max_rollbacks})",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            # Perturb the key and re-draw every random matrix the
+            # restart point has not consumed.  r[layer-1] only feeds the
+            # NEXT propagation (it rebuilds w_next below), so it is
+            # still free to change; r[0..layer-2] shaped the restored
+            # features and must stay verbatim.
+            key = jax.random.fold_in(key, 7 + rollbacks)
+            fresh = ssfn_lib.init_random_matrices(key, cfg)
+            first_free = max(layer - 1, 0)
+            r_list[first_free:] = list(fresh[first_free:])
+            if layer == 0:
+                w_next = None
+            elif layer <= cfg.num_layers:
+                w_next = ssfn_lib.build_weight(
+                    o_list[-1], r_list[layer - 1], q
+                )
+            continue
+
         y_workers = step.y_workers
         o_list.append(step.o_star)
         if step.trace is not None:
             dev_traces.append(step.trace)
+        if step.jitter is not None:
+            jitter_list.append(np.asarray(jax.device_get(step.jitter)))
         # Communication accounting, eq. 15: Q * n_{l-1} scalars per
         # exchange, B exchanges per consensus, K communicating consensus
         # rounds per layer — the policy itself knows its exchange count
@@ -349,6 +507,7 @@ def train_decentralized_ssfn(
                 o_list=o_list, step=step, dev_traces=dev_traces,
                 comm=comm, prev_cost=prev_cost,
                 active_mask=_active_mask(policy, num_workers),
+                r_list=r_list, jitter_list=jitter_list,
             )
         if stopping:
             break
@@ -365,9 +524,14 @@ def train_decentralized_ssfn(
             ):
                 break
             prev_cost = cur
+        elif guard_divergence and step.trace is not None:
+            # Track the layer cost so the guard's blow-up check has a
+            # reference even without size estimation.
+            prev_cost = float(step.trace.objective[-1])
 
         if layer < cfg.num_layers:
             w_next = ssfn_lib.build_weight(step.o_star, r_list[layer], q)
+        layer += 1
 
     # One bulk fetch of every per-layer trace after the loop.  The
     # collective-free hot path (trace_every=0) has none: the log carries
@@ -381,7 +545,9 @@ def train_decentralized_ssfn(
         return np.stack([getattr(tr, field) for tr in traces])
 
     # Early size-estimation stop leaves fewer readouts than random matrices.
-    params = ssfn_lib.SSFNParams(o=tuple(o_list), r=r_list[: len(o_list) - 1])
+    params = ssfn_lib.SSFNParams(
+        o=tuple(o_list), r=tuple(r_list[: len(o_list) - 1])
+    )
     log = LayerwiseLog(
         layer_costs=layer_costs,
         admm_objective=stacked("objective"),
@@ -390,6 +556,11 @@ def train_decentralized_ssfn(
         consensus_error=stacked("consensus_error"),
         wall_time_s=time.perf_counter() - t0,
         comm_scalars=comm,
+        jitter_levels=(
+            np.stack(jitter_list)
+            if jitter_list else np.zeros((0, 0), np.int32)
+        ),
+        rollbacks=rollbacks,
     )
     return params, log
 

@@ -1,41 +1,30 @@
-"""Deprecated shim: non-ideal-network consensus is now policy objects.
+"""Deprecated shim: import from :mod:`repro.core.policy` instead.
 
-The paper's §IV future-work axis ("Extending this result to
-asynchronous and lossy peer-to-peer networks ... is a potential future
-direction") used to live here as *batched* simulations — dense-H
-``lossy_gossip_average``, ``make_quantized_consensus_fn``, an
-ARock-style ``async_admm_ridge_consensus`` — that only ran in the
-single-array worker layout and could never execute under ``MeshBackend``
-or the compile-once layer engine.
-
-Those code paths are gone.  Each non-ideal network is now a
-:mod:`repro.core.policy` ``ConsensusPolicy`` that runs *inside* the SPMD
-worker program under BOTH backends (vmap simulation and shard_map mesh),
-with its randomness/staleness state threaded through the ADMM scan
-carry:
-
-- quantized k-bit links   -> ``QuantizedGossip(bits, stochastic=True)``
-- lossy links             -> ``LossyGossip(drop_prob, rounds, degree)``
-- asynchronous/stale peers -> ``StaleMixing(delay)``
-
-and the stochastic quantizer reference implementation moved to
-``repro.core.consensus.quantize_stochastic``.  Usage::
-
-    from repro.core.policy import QuantizedGossip
-    admm.admm_ridge_consensus(yw, tw, ..., policy=QuantizedGossip(bits=8))
-
-This module re-exports the replacements so old imports keep resolving.
+Every name this module ever exported lives in ``repro.core.policy``
+(which also re-exports the quantizer reference implementations from
+``repro.core.consensus``).  The Byzantine-robust policies added after
+the PR-3 rewrite — ``TrimmedMeanGossip``, ``MedianGossip``,
+``ClippedGossip`` — were never published here; use the canonical
+module.  Importing this shim raises a :class:`DeprecationWarning` and
+will stop working in a future revision.
 """
 from __future__ import annotations
 
-from repro.core.consensus import (  # noqa: F401  (re-exports)
-    quantize_nearest,
-    quantize_stochastic,
+import warnings
+
+warnings.warn(
+    "repro.core.robust is deprecated; import consensus policies and "
+    "quantizers from repro.core.policy",
+    DeprecationWarning,
+    stacklevel=2,
 )
-from repro.core.policy import (  # noqa: F401  (re-exports)
+
+from repro.core.policy import (  # noqa: F401,E402  (re-exports)
     LossyGossip,
     QuantizedGossip,
     StaleMixing,
+    quantize_nearest,
+    quantize_stochastic,
 )
 
 __all__ = [

@@ -65,17 +65,22 @@ def parse_spec(
     One string names the whole consensus configuration — the policy half
     is the ``parse_policy`` grammar (``exact | gossip[:B[:d]] |
     quantized:bits | lossy:p[:B[:d]] | stale:delay |
-    async[:key=value...]``, plus ``wire=``/fault ``key=value`` segments)
-    and the optional ``@topology`` half is the ``parse_topology`` grammar
-    (``ring:d | torus:RxC | hypercube | geometric:r[:seed] | full``,
-    ``+``-joined for time-varying cycles).  Launchers, benchmarks and
-    examples all route through this one parser, so the same string works
-    everywhere::
+    async[:key=value...] | trimmed[:key=value...] |
+    median[:key=value...] | clipped[:tau][:key=value...]``, plus
+    ``wire=``/fault ``key=value`` segments — the Byzantine pair is
+    ``byz=0+3:attack=signflip|scale:c|noise:s|nanbomb|replay:d``, and
+    ``attack=`` alone arms worker 0) and the optional ``@topology`` half
+    is the ``parse_topology`` grammar (``ring:d | torus:RxC | hypercube
+    | geometric:r[:seed] | full``, ``+``-joined for time-varying
+    cycles).  Launchers, benchmarks and examples all route through this
+    one parser, so the same string works everywhere::
 
         parse_spec("gossip:4:2")
         parse_spec("gossip:4@torus:2x4")
         parse_spec("async:interval=4:drop=0.1@torus:2x4")
         parse_spec("stale:2:wire=bf16@hypercube")
+        parse_spec("trimmed:f=1:attack=signflip@torus:2x4")
+        parse_spec("clipped:tau=0.5:byz=3:attack=nanbomb@hypercube")
 
     ``degree``/``rounds`` fill spec segments left implicit (the
     launcher's legacy ``--degree``/``--rounds`` flags).
@@ -179,6 +184,13 @@ class TrainSpec:
     #: Complete this layer index, checkpoint, and return the partial
     #: model (the crash half of a kill/resume drill).
     stop_after_layer: int | None = None
+    #: Numerical self-healing: monitor each layer solve for non-finite
+    #: iterates / objective blow-up, and on divergence roll back to the
+    #: last complete checkpoint with a perturbed RNG key instead of
+    #: crashing (``layerwise.train_decentralized_ssfn``).
+    guard_divergence: bool = False
+    #: Divergence-rollback budget (RuntimeError once spent).
+    max_rollbacks: int = 2
 
     def resolve_membership(self) -> Membership | None:
         if self.membership is None or isinstance(self.membership, Membership):
@@ -312,6 +324,8 @@ def train(spec: TrainSpec, x_workers, t_workers, key) -> TrainResult:
             checkpoint_every=spec.checkpoint_every,
             resume=spec.resume,
             stop_after_layer=spec.stop_after_layer,
+            guard_divergence=spec.guard_divergence,
+            max_rollbacks=spec.max_rollbacks,
         )
     return TrainResult(
         params=params, log=log, backend=backend, policy=policy, spec=spec

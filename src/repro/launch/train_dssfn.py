@@ -19,6 +19,18 @@ spec string::
     --consensus lossy:0.1       ring gossip with 10% link drops
     --consensus stale:2         peers see 2-rounds-stale values
 
+Byzantine-resilient policies pair a robust aggregator with a seeded
+attack injected into the transmitted payload (README "Byzantine
+resilience & numerical self-healing")::
+
+    --consensus trimmed:f=1:attack=signflip@torus:2x4
+    --consensus median:byz=3:attack=nanbomb
+    --consensus clipped:tau=0.5:attack=scale:10
+
+``--guard-divergence`` adds the numerical self-healing layer on top:
+a diverging layer solve rolls back to the last complete checkpoint
+with a perturbed RNG key (pair it with ``--checkpoint-dir``).
+
 (``--consensus gossip`` with no args keeps honouring the legacy
 ``--degree``/``--rounds`` flags.)
 
@@ -80,8 +92,10 @@ def parse_args(argv=None) -> argparse.Namespace:
         default="exact",
         help="consensus spec (dssfn.parse_spec grammar): exact | "
         "gossip[:B[:d]] | quantized:bits | lossy:p[:B[:d]] | stale:delay "
-        "| async[:key=value...], each optionally '@topology' "
-        "(e.g. async:interval=4:drop=0.1@torus:2x4)",
+        "| async[:key=value...] | trimmed[:f=F] | median | clipped:tau, "
+        "each optionally '@topology'; robust policies take fault keys "
+        "(byz=i, attack=signflip|scale:c|noise:s|nanbomb|replay:d), e.g. "
+        "trimmed:f=1:attack=signflip@torus:2x4",
     )
     ap.add_argument(
         "--topology",
@@ -177,6 +191,20 @@ def parse_args(argv=None) -> argparse.Namespace:
         help="complete this layer index, checkpoint, and exit (the crash "
         "half of a kill/resume drill)",
     )
+    ap.add_argument(
+        "--guard-divergence",
+        action="store_true",
+        help="monitor each layer solve for divergence (non-finite or "
+        "exploding objective) and roll back to the last complete "
+        "checkpoint with a perturbed RNG key instead of training on",
+    )
+    ap.add_argument(
+        "--max-rollbacks",
+        type=int,
+        default=2,
+        help="divergence-rollback budget before the run raises "
+        "(with --guard-divergence)",
+    )
     ap.add_argument("--out", default=None, help="optional JSON results path")
     ap.add_argument(
         "--no-host-mesh",
@@ -265,6 +293,8 @@ def train_one(kind: str, args, data, xw, tw, cfg, key) -> dict:
         checkpoint_every=args.checkpoint_every,
         resume=args.resume,
         stop_after_layer=args.stop_after_layer,
+        guard_divergence=args.guard_divergence,
+        max_rollbacks=args.max_rollbacks,
     )
     t0 = time.perf_counter()
     result = dssfn.train(spec, xw, tw, key)
@@ -283,6 +313,10 @@ def train_one(kind: str, args, data, xw, tw, cfg, key) -> dict:
         # trace_every=0 runs collective-free: no objective to report.
         "final_objective": log.layer_costs[-1] if log.layer_costs else None,
         "comm_scalars": log.comm_scalars,
+        # Self-healing telemetry: guarded-Cholesky jitter escalations and
+        # divergence rollbacks taken (README "Byzantine resilience").
+        "jitter_events": int((log.jitter_levels > 0).sum()),
+        "rollbacks": log.rollbacks,
         # Compile-once layer engine: lowerings == distinct layer shapes,
         # not layer solves (the compile-count regression test's invariant).
         "executable_cache": backend.cache_info(),

@@ -1,0 +1,476 @@
+"""Byzantine-resilient consensus and numerical self-healing.
+
+The robustness-PR acceptance invariants:
+
+- seeded attack injection is pure data inside the cached SPMD program:
+  only Byzantine slots corrupt their wire payload, deterministically,
+  and every (policy, fault-model) pair lowers exactly once;
+- zero-attacker robust policies are bit-identical to plain serial
+  ``Gossip`` over the same graph (property-tested over M <= 16);
+- one signflip/nanbomb attacker is tolerated with bounded deviation
+  from the honest mean, and NaN payloads never reach an aggregate;
+- M=8 consensus ADMM with one attacker: ``TrimmedMeanGossip(f=1)``
+  lands within 2x of the no-attack baseline's oracle distance while
+  the non-robust gossip path fails that bound;
+- the guarded Cholesky factors rank-deficient Grams by escalating
+  diagonal jitter and reports the jitter level it needed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import admm, consensus
+from repro.core.backend import SimulatedBackend
+from repro.core.policy import (
+    AsyncGossip,
+    ClippedGossip,
+    ConsensusContext,
+    ExactMean,
+    FaultModel,
+    Gossip,
+    MedianGossip,
+    TrimmedMeanGossip,
+    parse_policy,
+)
+from repro.core.topology import Hypercube, Ring, Torus
+from repro.testing import given, settings, st
+
+
+def _mix_once(policy, x):
+    """One realized mix over stacked worker values (the backends' vmap
+    SPMD semantics)."""
+    ctx = ConsensusContext("workers", x.shape[0])
+
+    def body(xi):
+        state = policy.init_state(xi, ctx)
+        y, _ = policy.mix(xi, state, ctx)
+        return y
+
+    return jax.vmap(body, axis_name="workers")(x)
+
+
+def _problem(key, n=16, q=3, j=160, m=8):
+    ky, kt = jax.random.split(key)
+    y = jax.random.normal(ky, (n, j))
+    t = jax.random.normal(kt, (q, j))
+    yw = y.reshape(n, m, j // m).transpose(1, 0, 2)
+    tw = t.reshape(q, m, j // m).transpose(1, 0, 2)
+    return yw, tw
+
+
+# ------------------------------------------------------------------
+# Attack injection: FaultModel byzantine/attack surface
+# ------------------------------------------------------------------
+
+def test_attack_spec_validation():
+    for spec in ("signflip", "scale:10", "noise:0.5", "nanbomb", "replay:2"):
+        FaultModel(byzantine=(0,), attack=spec)  # parses
+    with pytest.raises(ValueError, match="unknown attack"):
+        FaultModel(attack="meteor")
+    with pytest.raises(ValueError, match="takes no"):
+        FaultModel(attack="signflip:2")
+    with pytest.raises(ValueError, match="needs an argument"):
+        FaultModel(attack="scale")
+    with pytest.raises(ValueError, match="replay depth"):
+        FaultModel(attack="replay:0")
+    with pytest.raises(ValueError, match="every worker Byzantine"):
+        FaultModel(byzantine=(0, 1, 2, 3)).validate(4)
+
+
+def test_byzantine_arms_fault_model():
+    assert FaultModel().is_null
+    assert FaultModel(attack="nanbomb").is_null  # attack without attackers
+    fm = FaultModel(byzantine=(2,), attack="nanbomb")
+    assert not fm.is_null
+    assert fm.attack_kind == "nanbomb"
+    assert fm.replay_depth == 0
+    assert FaultModel(byzantine=(1,), attack="replay:3").replay_depth == 3
+
+
+def test_corrupted_payload_kinds():
+    fm = lambda a: FaultModel(byzantine=(0,), attack=a)  # noqa: E731
+    x = jnp.arange(6.0).reshape(2, 3)
+    np.testing.assert_array_equal(
+        fm("signflip").corrupted_payload(x, iteration=0, round_idx=0), -x
+    )
+    np.testing.assert_array_equal(
+        fm("scale:10").corrupted_payload(x, iteration=0, round_idx=0), 10 * x
+    )
+    assert bool(
+        jnp.all(
+            jnp.isnan(fm("nanbomb").corrupted_payload(x, iteration=0, round_idx=0))
+        )
+    )
+    buf = jnp.full_like(x, 7.0)
+    np.testing.assert_array_equal(
+        fm("replay:1").corrupted_payload(x, iteration=0, round_idx=0, replay=buf),
+        buf,
+    )
+    with pytest.raises(ValueError, match="replay attack needs"):
+        fm("replay:1").corrupted_payload(x, iteration=0, round_idx=0)
+    # noise is seeded: same (iteration, round) -> same draw, new round ->
+    # new draw, and every worker computes the identical corruption.
+    n1 = fm("noise:0.5").corrupted_payload(x, iteration=3, round_idx=1)
+    n2 = fm("noise:0.5").corrupted_payload(x, iteration=3, round_idx=1)
+    n3 = fm("noise:0.5").corrupted_payload(x, iteration=3, round_idx=2)
+    assert jnp.array_equal(n1, n2)
+    assert not jnp.array_equal(n1, n3)
+
+
+def test_transmit_for_corrupts_only_byzantine_slots():
+    fm = FaultModel(byzantine=(1, 3), attack="signflip")
+    x = jnp.ones((4,))
+    for w in range(5):
+        tx = fm.transmit_for(
+            x, worker_index=jnp.asarray(w), num_workers=5,
+            iteration=jnp.zeros((), jnp.int32), round_idx=0,
+        )
+        expect = -x if w in (1, 3) else x
+        np.testing.assert_array_equal(np.asarray(tx), np.asarray(expect))
+
+
+def test_nanbomb_never_leaks_into_honest_transmissions():
+    """The corrupted payload is selected with jnp.where on a scalar
+    predicate — an honest worker's wire value stays finite even though
+    the NaN payload is materialized in-program."""
+    fm = FaultModel(byzantine=(2,), attack="nanbomb")
+    tx = fm.transmit_for(
+        jnp.ones((3,)), worker_index=jnp.asarray(0), num_workers=4,
+        iteration=jnp.zeros((), jnp.int32), round_idx=0,
+    )
+    assert bool(jnp.all(jnp.isfinite(tx)))
+
+
+# ------------------------------------------------------------------
+# Zero-attacker bit-identity (property over M <= 16)
+# ------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(m=st.sampled_from([4, 8, 16]), kind=st.sampled_from(
+    ["trimmed", "median", "clipped"]
+))
+def test_robust_policies_bit_identical_to_gossip_when_clean(m, kind):
+    x = jax.random.normal(jax.random.PRNGKey(m), (m, 5))
+    topo = Ring(1)  # valid for every sampled M
+    make = {
+        "trimmed": lambda: TrimmedMeanGossip(f=1, rounds=3, topology=topo),
+        "median": lambda: MedianGossip(rounds=3, topology=topo),
+        "clipped": lambda: ClippedGossip(tau=0.5, rounds=3, topology=topo),
+    }[kind]
+    out = _mix_once(make(), x)
+    ref = _mix_once(Gossip(rounds=3, topology=topo, compress=False), x)
+    assert jnp.array_equal(out, ref), kind
+
+
+# ------------------------------------------------------------------
+# Attack tolerance: bounded deviation, NaN screening
+# ------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(m=st.sampled_from([8, 16]), attack=st.sampled_from(
+    ["signflip", "nanbomb"]
+))
+def test_robust_mix_tolerates_one_attacker_with_bounded_deviation(m, attack):
+    """Concentrated honest values + one attacker: the robust mix stays
+    inside the honest hull (deviation bounded by the honest spread),
+    where plain mixing is thrown far outside it (or NaN-poisoned)."""
+    spread = 0.01
+    honest = 2.0 + spread * jax.random.normal(jax.random.PRNGKey(m), (m, 4))
+    fm = FaultModel(byzantine=(3,), attack=attack)
+    hmean = jnp.delete(honest, 3, axis=0).mean(axis=0)
+    for pol in (
+        TrimmedMeanGossip(f=1, rounds=2, topology=Hypercube(), faults=fm),
+        MedianGossip(rounds=2, topology=Hypercube(), faults=fm),
+        ClippedGossip(tau=5 * spread, rounds=2, topology=Hypercube(), faults=fm),
+    ):
+        out = _mix_once(pol, honest)
+        assert bool(jnp.all(jnp.isfinite(out))), type(pol).__name__
+        dev = float(jnp.max(jnp.abs(out - hmean[None, :])))
+        assert dev < 10 * spread, (type(pol).__name__, dev)
+    vuln = _mix_once(
+        AsyncGossip(rounds=2, topology=Hypercube(), faults=fm), honest
+    )
+    if attack == "nanbomb":
+        assert not bool(jnp.all(jnp.isfinite(vuln)))
+    else:
+        assert float(jnp.max(jnp.abs(vuln - hmean[None, :]))) > 10 * spread
+
+
+def test_nan_screen_reroutes_link_weight_to_diagonal():
+    """A nanbombed link degrades into the PR-6 dead-link reroute: the
+    receiver's mix equals the faulty-gossip step with that link down."""
+    m = 8
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, 3))
+    fm = FaultModel(byzantine=(0,), attack="nanbomb")
+    out = _mix_once(
+        TrimmedMeanGossip(f=1, rounds=1, topology=Ring(1), faults=fm), x
+    )
+    assert bool(jnp.all(jnp.isfinite(out)))
+    # Ring(1) neighborhoods are {i-1, i, i+1}; with worker 0's payload
+    # rerouted, worker 1 averages (x0->x1 replaced by x1).
+    np.testing.assert_allclose(
+        np.asarray(out[1]),
+        np.asarray((x[1] + x[1] + x[2]) / 3.0),
+        rtol=1e-6,
+    )
+    # Workers not adjacent to the attacker mix exactly.
+    np.testing.assert_allclose(
+        np.asarray(out[4]),
+        np.asarray((x[3] + x[4] + x[5]) / 3.0),
+        rtol=1e-6,
+    )
+
+
+# ------------------------------------------------------------------
+# End-to-end ADMM acceptance: robust converges, plain fails
+# ------------------------------------------------------------------
+
+def test_trimmed_mean_admm_within_2x_of_no_attack_oracle_rel():
+    """M=8, one attacker: TrimmedMeanGossip(f=1) reaches an oracle
+    distance within 2x of the no-attack baseline — measured against the
+    honest-data oracle, since a Byzantine worker's shard is unlearnable
+    (every payload it emits is corrupted) — while the non-robust gossip
+    path fails the same bound on both attacks."""
+    m = 8
+    yw, tw = _problem(jax.random.PRNGKey(4), m=m)
+    kw = dict(mu=1e-2, eps_radius=6.0, num_iters=40)
+    oracle = admm.admm_ridge_consensus(
+        yw, tw, backend=SimulatedBackend(m), policy=ExactMean(), **kw
+    )
+    keep = np.array([i for i in range(m) if i != 3])
+    oracle_honest = admm.admm_ridge_consensus(
+        yw[keep], tw[keep], backend=SimulatedBackend(m - 1),
+        policy=ExactMean(), **kw
+    )
+
+    def rel(res, ref):
+        return float(
+            jnp.linalg.norm(res.o_star - ref.o_star)
+            / jnp.linalg.norm(ref.o_star)
+        )
+
+    topo = Hypercube()
+    baseline = rel(
+        admm.admm_ridge_consensus(
+            yw, tw, backend=SimulatedBackend(m),
+            policy=TrimmedMeanGossip(f=1, rounds=3, topology=topo), **kw
+        ),
+        oracle,
+    )
+    bound = 2.0 * baseline
+    for attack in ("signflip", "nanbomb"):
+        fm = FaultModel(byzantine=(3,), attack=attack)
+        robust = admm.admm_ridge_consensus(
+            yw, tw, backend=SimulatedBackend(m),
+            policy=TrimmedMeanGossip(f=1, rounds=3, topology=topo, faults=fm),
+            **kw,
+        )
+        r = rel(robust, oracle_honest)
+        assert np.isfinite(r) and r <= bound, (attack, r, bound)
+        vuln = admm.admm_ridge_consensus(
+            yw, tw, backend=SimulatedBackend(m),
+            policy=AsyncGossip(rounds=3, topology=topo, faults=fm), **kw
+        )
+        rv = rel(vuln, oracle_honest)
+        assert not np.isfinite(rv) or rv > bound, (attack, rv, bound)
+
+
+# ------------------------------------------------------------------
+# Compile-count: (policy, fault-model) pairs lower exactly once
+# ------------------------------------------------------------------
+
+def test_byzantine_fault_models_ride_executable_cache_key():
+    m = 8
+    yw, tw = _problem(jax.random.PRNGKey(11), m=m)
+    backend = SimulatedBackend(m)
+    kw = dict(mu=1e-2, eps_radius=6.0, num_iters=10, backend=backend)
+    pols = [
+        TrimmedMeanGossip(f=1, rounds=2, topology=Hypercube()),
+        TrimmedMeanGossip(
+            f=1, rounds=2, topology=Hypercube(),
+            faults=FaultModel(byzantine=(3,), attack="signflip"),
+        ),
+        TrimmedMeanGossip(
+            f=1, rounds=2, topology=Hypercube(),
+            faults=FaultModel(byzantine=(3,), attack="nanbomb"),
+        ),
+        MedianGossip(
+            rounds=2, topology=Hypercube(),
+            faults=FaultModel(byzantine=(3,), attack="scale:10"),
+        ),
+        ClippedGossip(
+            tau=0.5, rounds=2, topology=Hypercube(),
+            faults=FaultModel(byzantine=(3,), attack="noise:0.5"),
+        ),
+    ]
+    for pol in pols:
+        admm.admm_ridge_consensus(yw, tw, policy=pol, **kw)
+    assert backend.lowerings == len(pols), backend.cache_info()
+    # Second sweep over every (policy, fault-model) pair: pure cache hits.
+    for pol in pols:
+        admm.admm_ridge_consensus(yw, tw, policy=pol, **kw)
+    assert backend.lowerings == len(pols), backend.cache_info()
+    assert backend.cache_hits >= len(pols)
+
+
+def test_replay_attack_threads_transmit_history():
+    """replay:d transmits the payload from d mixes ago (zeros before the
+    window fills) — the state threads through repeated mix calls."""
+    m = 4
+    fm = FaultModel(byzantine=(1,), attack="replay:1")
+    pol = TrimmedMeanGossip(f=1, rounds=1, topology=Ring(1), faults=fm)
+    ctx = ConsensusContext("workers", m)
+    xs = [
+        jax.random.normal(jax.random.PRNGKey(9 + i), (m, 3)) for i in range(2)
+    ]
+
+    def body(x1, x2):
+        state = pol.init_state(x1, ctx)
+        y1, state = pol.mix(x1, state, ctx)
+        y2, state = pol.mix(x2, state, ctx)
+        return y1, y2
+
+    y1, y2 = jax.vmap(body, axis_name="workers")(*xs)
+    assert bool(jnp.all(jnp.isfinite(y1)))
+    assert bool(jnp.all(jnp.isfinite(y2)))
+
+
+# ------------------------------------------------------------------
+# Guarded Cholesky: self-healing factorization
+# ------------------------------------------------------------------
+
+def test_guarded_cholesky_clean_gram_reports_zero_jitter():
+    y = jax.random.normal(jax.random.PRNGKey(0), (6, 40))
+    g = y @ y.T + 0.1 * jnp.eye(6)
+    chol, jitter = admm.guarded_cholesky(g)
+    assert int(jitter) == 0
+    np.testing.assert_allclose(
+        np.asarray(chol @ chol.T), np.asarray(g), atol=1e-4
+    )
+    # Matches the unguarded factorization bit for bit on clean input.
+    assert jnp.array_equal(chol, jnp.linalg.cholesky(g))
+
+
+def test_guarded_cholesky_recovers_rank_deficient_gram():
+    """A rank-deficient Gram (duplicated features, mu -> inf limit) makes
+    plain Cholesky return NaN; the guard escalates diagonal jitter until
+    the factorization goes through and reports the level it needed."""
+    y = jax.random.normal(jax.random.PRNGKey(1), (4, 20))
+    y = jnp.concatenate([y, y], axis=0)  # rank 4 of 8
+    g = y @ y.T
+    assert not bool(jnp.all(jnp.isfinite(jnp.linalg.cholesky(g))))
+    chol, jitter = admm.guarded_cholesky(g)
+    assert bool(jnp.all(jnp.isfinite(chol)))
+    assert int(jitter) >= 1
+    # Cholesky is backward stable: the factor reconstructs the jittered
+    # Gram it actually factored (eps at the reported escalation level).
+    scale = float(jnp.mean(jnp.abs(jnp.diagonal(g))))
+    eps = scale * 1e-8 * 10.0 ** (int(jitter) - 1)
+    rel = jnp.linalg.norm(chol @ chol.T - (g + eps * jnp.eye(8)))
+    assert float(rel) < 1e-4 * jnp.linalg.norm(g)
+
+
+def test_guarded_cholesky_traces_under_vmap():
+    y = jax.random.normal(jax.random.PRNGKey(3), (3, 5, 30))
+    grams = jnp.einsum("mij,mkj->mik", y, y) + 0.1 * jnp.eye(5)
+    chol, jitter = jax.vmap(admm.guarded_cholesky)(grams)
+    assert chol.shape == (3, 5, 5)
+    assert jitter.shape == (3,)
+    assert bool(jnp.all(jitter == 0))
+
+
+def test_admm_result_reports_jitter_per_worker():
+    yw, tw = _problem(jax.random.PRNGKey(5), m=4)
+    res = admm.admm_ridge_consensus(
+        yw, tw, backend=SimulatedBackend(4), mu=1e-2, eps_radius=6.0,
+        num_iters=5,
+    )
+    assert res.jitter is not None
+    assert res.jitter.shape == (4,)
+    assert bool(jnp.all(res.jitter == 0))  # well-conditioned problem
+
+
+# ------------------------------------------------------------------
+# Spec grammar: robust policy round-trips
+# ------------------------------------------------------------------
+
+def test_parse_robust_specs_round_trip():
+    cases = {
+        "trimmed": TrimmedMeanGossip(),
+        "trimmed:f=2:rounds=3": TrimmedMeanGossip(f=2, rounds=3),
+        "trimmed:f=1:attack=signflip@torus:2x4": TrimmedMeanGossip(
+            f=1, topology=Torus(2, 4),
+            faults=FaultModel(byzantine=(0,), attack="signflip"),
+        ),
+        "median": MedianGossip(),
+        "median:byz=3:attack=nanbomb@hypercube": MedianGossip(
+            topology=Hypercube(),
+            faults=FaultModel(byzantine=(3,), attack="nanbomb"),
+        ),
+        "median:attack=noise:0.5": MedianGossip(
+            faults=FaultModel(byzantine=(0,), attack="noise:0.5"),
+        ),
+        "clipped:0.5": ClippedGossip(tau=0.5),
+        "clipped:tau=0.25:rounds=2": ClippedGossip(tau=0.25, rounds=2),
+        "clipped:tau=0.5:byz=1+2:attack=replay:3": ClippedGossip(
+            tau=0.5, faults=FaultModel(byzantine=(1, 2), attack="replay:3"),
+        ),
+        "trimmed:attack=scale:10:rounds=2": TrimmedMeanGossip(
+            rounds=2, faults=FaultModel(byzantine=(0,), attack="scale:10"),
+        ),
+        "trimmed:wire=bf16": TrimmedMeanGossip(wire_dtype="bfloat16"),
+    }
+    for spec, expected in cases.items():
+        assert parse_policy(spec) == expected, spec
+
+
+def test_parse_robust_spec_errors():
+    with pytest.raises(ValueError, match="either positionally"):
+        parse_policy("clipped:0.5:tau=0.7")
+    with pytest.raises(ValueError, match="unknown attack"):
+        parse_policy("trimmed:attack=meteor")
+    with pytest.raises(ValueError, match="f >= 1"):
+        parse_policy("trimmed:f=0")
+    with pytest.raises(ValueError, match="tau must be > 0"):
+        parse_policy("clipped:0")
+
+
+def test_unknown_policy_error_lists_full_grammar():
+    with pytest.raises(ValueError) as ei:
+        parse_policy("bogus")
+    msg = str(ei.value)
+    for token in (
+        "exact", "gossip", "quantized", "lossy", "stale", "async",
+        "trimmed", "median", "clipped", "signflip", "nanbomb", "replay",
+        "torus:RxC", "hypercube", "geometric", "ring", "full",
+    ):
+        assert token in msg, token
+
+
+def test_robust_policy_validation_errors():
+    with pytest.raises(ValueError, match="uniform"):
+        # geometric graphs compile to weighted Metropolis hops
+        from repro.core.topology import RandomGeometric
+
+        TrimmedMeanGossip(
+            f=1, topology=RandomGeometric(radius=0.9, seed=0)
+        ).validate(8)
+    with pytest.raises(ValueError, match="neighborhood"):
+        TrimmedMeanGossip(f=2, topology=Ring(1)).validate(8)
+    with pytest.raises(ValueError, match="stragglers"):
+        MedianGossip(
+            topology=Ring(1), faults=FaultModel(stragglers=(1,))
+        ).validate(8)
+
+
+def test_robust_policies_account_eq15_wire():
+    pol = TrimmedMeanGossip(f=1, rounds=2, topology=Hypercube())
+    ref = Gossip(rounds=2, topology=Hypercube(), compress=False)
+    kw = dict(scalars=100, num_consensus=10, num_workers=8)
+    assert pol.exchanges_for(8) == ref.exchanges_for(8)
+    assert pol.comm_scalars(**kw) == ref.comm_scalars(**kw)
+    bf = TrimmedMeanGossip(
+        f=1, rounds=2, topology=Hypercube(), wire_dtype="bfloat16"
+    )
+    assert bf.wire_bytes(**kw) == pol.wire_bytes(**kw) // 2

@@ -7,6 +7,7 @@ state (layer weights, ADMM duals, staleness buffers, RNG keys) bit for
 bit, and a resumed ``train_decentralized_ssfn`` run must reproduce the
 uninterrupted run's final iterate exactly.
 """
+import json
 import os
 
 import jax
@@ -15,7 +16,13 @@ import numpy as np
 import pytest
 
 from repro import dssfn
-from repro.checkpoint.store import load_pytree, load_pytree_flat, save_pytree
+from repro.checkpoint.store import (
+    CheckpointCorruptError,
+    is_valid_checkpoint,
+    load_pytree,
+    load_pytree_flat,
+    save_pytree,
+)
 from repro.core import layerwise, ssfn
 from repro.core.layerwise import checkpoint_path, latest_checkpoint
 from repro.core.policy import AsyncGossip, FaultModel
@@ -233,6 +240,301 @@ def test_resume_with_empty_directory_trains_from_scratch(tmp_path):
         xw, tw, key,
     )
     _assert_same_run(plain, resumed)
+
+
+# ------------------------------------------------------------------
+# Corrupt-checkpoint handling: CheckpointCorruptError + resume skips
+# ------------------------------------------------------------------
+
+def _truncate(path, keep=40):
+    with open(path, "rb") as f:
+        head = f.read(keep)
+    with open(path, "wb") as f:
+        f.write(head)
+
+
+def test_load_pytree_flat_corruption_modes(tmp_path):
+    """Every way a checkpoint can be bad surfaces as a
+    CheckpointCorruptError naming the file and the defect — never a raw
+    KeyError / BadZipFile escaping into resume logic."""
+    path = os.path.join(tmp_path, "st.npz")
+
+    with pytest.raises(CheckpointCorruptError, match="does not exist"):
+        load_pytree_flat(path)
+
+    save_pytree(path, {"a": np.arange(4.0), "b": np.int64(3)})
+    assert is_valid_checkpoint(path)
+
+    # Missing metadata sidecar.
+    os.rename(path + ".meta.json", path + ".meta.json.bak")
+    with pytest.raises(CheckpointCorruptError, match="sidecar"):
+        load_pytree_flat(path)
+    assert not is_valid_checkpoint(path)
+    os.rename(path + ".meta.json.bak", path + ".meta.json")
+
+    # Garbage sidecar JSON.
+    with open(path + ".meta.json", "r+") as f:
+        f.write("{oops")
+    with pytest.raises(CheckpointCorruptError, match="metadata sidecar"):
+        load_pytree_flat(path)
+
+    # Restore the sidecar, then check the key/shape screens.
+    save_pytree(path, {"a": np.arange(4.0), "b": np.int64(3)})
+    with pytest.raises(CheckpointCorruptError, match=r"missing required key\(s\).*\['c'\]"):
+        load_pytree_flat(path, expect_keys=["a", "b", "c"])
+
+    with open(path + ".meta.json") as f:
+        meta = json.load(f)
+    meta["a"]["shape"] = [5]
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(CheckpointCorruptError, match="shape"):
+        load_pytree_flat(path)
+
+    # Truncated npz (the kill-mid-save signature on pre-atomic writers).
+    save_pytree(path, {"a": np.arange(4.0), "b": np.int64(3)})
+    _truncate(path)
+    with pytest.raises(CheckpointCorruptError, match="npz archive"):
+        load_pytree_flat(path)
+    assert not is_valid_checkpoint(path)
+
+
+def test_latest_checkpoint_skips_partial_with_warning(tmp_path):
+    """A truncated deepest checkpoint is skipped (with a RuntimeWarning)
+    and the scan falls back to the next-deepest complete one."""
+    d = str(tmp_path)
+    for ln in (1, 2, 3):
+        save_pytree(checkpoint_path(d, ln), {"layer_next": np.int64(ln)})
+    _truncate(checkpoint_path(d, 3))
+    with pytest.warns(RuntimeWarning, match="partial/corrupt"):
+        picked = latest_checkpoint(d)
+    assert picked == checkpoint_path(d, 2)
+
+    # An npz that lost its sidecar (kill between the two publishes of a
+    # pre-sidecar-first writer) is equally skipped.
+    os.remove(checkpoint_path(d, 2) + ".meta.json")
+    with pytest.warns(RuntimeWarning, match="partial/corrupt"):
+        picked = latest_checkpoint(d)
+    assert picked == checkpoint_path(d, 1)
+
+
+def test_atomic_save_never_exposes_partial_state(tmp_path, monkeypatch):
+    """save_pytree publishes via tmp + os.replace: a save that dies
+    mid-write leaves the previous checkpoint bit-intact and no stage
+    debris behind."""
+    path = os.path.join(tmp_path, "st.npz")
+    save_pytree(path, {"a": np.arange(3.0)})
+
+    class Boom(RuntimeError):
+        pass
+
+    def exploding_savez(f, **arrays):
+        f.write(b"partial bytes that must never be published")
+        raise Boom("disk full")
+
+    monkeypatch.setattr(np, "savez", exploding_savez)
+    with pytest.raises(Boom):
+        save_pytree(path, {"a": np.arange(3.0) + 1})
+    monkeypatch.undo()
+
+    # Old checkpoint still loads; the failed stage file was unlinked.
+    assert is_valid_checkpoint(path)
+    assert np.array_equal(load_pytree_flat(path)["a"], np.arange(3.0))
+    assert [n for n in os.listdir(tmp_path) if ".tmp." in n] == []
+
+
+def test_resume_recovers_from_kill_mid_save(tmp_path):
+    """Full drill: train to layer 1 with checkpoints, then fake a kill
+    mid-way through saving the NEXT checkpoint (truncated npz at its
+    final name + an orphaned stage file).  --resume must warn, fall back
+    to the deepest complete checkpoint, and still reproduce the
+    uninterrupted run bit for bit."""
+    xw, tw = _data(jax.random.PRNGKey(3))
+    key = jax.random.PRNGKey(7)
+    base = dict(cfg=_cfg(), backend="simulated", workers=4)
+    full = dssfn.train(dssfn.TrainSpec(**base), xw, tw, key)
+
+    ckpt = os.path.join(tmp_path, "ckpt")
+    dssfn.train(
+        dssfn.TrainSpec(**base, checkpoint_dir=ckpt, stop_after_layer=1),
+        xw, tw, key,
+    )
+    good = checkpoint_path(ckpt, 2)
+    assert latest_checkpoint(ckpt) == good
+
+    # Forge the kill-mid-save crime scene around layer 3's checkpoint.
+    with open(good, "rb") as f:
+        blob = f.read()
+    deeper = checkpoint_path(ckpt, 3)
+    with open(deeper, "wb") as f:
+        f.write(blob[: len(blob) // 2])
+    with open(deeper + ".tmp.abc123", "wb") as f:
+        f.write(b"orphaned stage file")
+
+    with pytest.warns(RuntimeWarning, match="partial/corrupt"):
+        resumed = dssfn.train(
+            dssfn.TrainSpec(**base, checkpoint_dir=ckpt, resume=True),
+            xw, tw, key,
+        )
+    _assert_same_run(full, resumed)
+
+
+def test_checkpoint_roundtrips_random_matrices(tmp_path):
+    """The checkpoint stores the random matrices ACTUALLY used (r/<i>) —
+    divergence rollback perturbs the key mid-run, so the key alone no
+    longer determines them — and the resumed run reuses them verbatim."""
+    xw, tw = _data(jax.random.PRNGKey(3))
+    key = jax.random.PRNGKey(7)
+    ckpt = os.path.join(tmp_path, "ckpt")
+    res = dssfn.train(
+        dssfn.TrainSpec(
+            cfg=_cfg(), backend="simulated", workers=4,
+            checkpoint_dir=ckpt, stop_after_layer=1,
+        ),
+        xw, tw, key,
+    )
+    flat = load_pytree_flat(latest_checkpoint(ckpt))
+    stored = 0
+    while f"r/{stored}" in flat:
+        stored += 1
+    # The checkpoint carries the FULL draw (future layers included, so
+    # a rollback can tell consumed from free); the partial model exposes
+    # the consumed prefix, which must match verbatim.
+    assert stored == _cfg().num_layers
+    assert len(res.params.r) <= stored
+    for i, r in enumerate(res.params.r):
+        assert np.array_equal(flat[f"r/{i}"], np.asarray(r))
+
+
+# ------------------------------------------------------------------
+# Divergence guard: rollback, key perturbation, budget exhaustion
+# ------------------------------------------------------------------
+
+class _FakeStep:
+    def __init__(self, o_star, objective=None):
+        self.o_star = jnp.asarray(o_star)
+        self.trace = None
+        if objective is not None:
+            class _Tr:
+                pass
+            self.trace = _Tr()
+            self.trace.objective = np.asarray(objective)
+
+
+def test_step_diverged_predicate():
+    ok = _FakeStep(np.ones((3, 4)), objective=[2.0, 1.0])
+    assert not layerwise._step_diverged(ok, prev_cost=1.5)
+    # Non-finite iterate.
+    assert layerwise._step_diverged(
+        _FakeStep(np.array([1.0, np.nan])), prev_cost=None
+    )
+    # Non-finite objective.
+    assert layerwise._step_diverged(
+        _FakeStep(np.ones(3), objective=[np.inf]), prev_cost=None
+    )
+    # Blow-up past 1000x the previous layer's cost.
+    assert layerwise._step_diverged(
+        _FakeStep(np.ones(3), objective=[5e3]), prev_cost=1.0
+    )
+    assert not layerwise._step_diverged(
+        _FakeStep(np.ones(3), objective=[5e3]), prev_cost=None
+    )
+
+
+def test_divergence_guard_rolls_back_with_perturbed_key(
+    tmp_path, monkeypatch
+):
+    """Force the monitor to flag the first solve as diverged: the run
+    must warn, roll back, perturb the key (different random matrices
+    than the clean run), and still converge — reporting rollbacks=1."""
+    xw, tw = _data(jax.random.PRNGKey(3))
+    key = jax.random.PRNGKey(7)
+    base = dict(cfg=_cfg(), backend="simulated", workers=4)
+    clean = dssfn.train(dssfn.TrainSpec(**base), xw, tw, key)
+
+    real = layerwise._step_diverged
+    calls = {"n": 0}
+
+    def fake(step, prev_cost, blowup=1e3):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            return True
+        return real(step, prev_cost, blowup)
+
+    monkeypatch.setattr(layerwise, "_step_diverged", fake)
+    with pytest.warns(RuntimeWarning, match="rolling back"):
+        healed = dssfn.train(
+            dssfn.TrainSpec(**base, guard_divergence=True), xw, tw, key,
+        )
+    assert healed.log.rollbacks == 1
+    assert len(healed.params.o) == len(clean.params.o)
+    for o in healed.params.o:
+        assert bool(np.all(np.isfinite(np.asarray(o))))
+    # The retry re-drew the not-yet-consumed random matrices.
+    assert not np.array_equal(
+        np.asarray(healed.params.r[0]), np.asarray(clean.params.r[0])
+    )
+
+
+def test_divergence_guard_restores_checkpointed_layers_verbatim(
+    tmp_path, monkeypatch
+):
+    """When a checkpoint exists, rollback restores the completed layers'
+    weights bit-for-bit and only re-draws from the restart layer on."""
+    xw, tw = _data(jax.random.PRNGKey(3))
+    key = jax.random.PRNGKey(7)
+    ckpt = os.path.join(tmp_path, "ckpt")
+    base = dict(
+        cfg=_cfg(), backend="simulated", workers=4,
+        checkpoint_dir=ckpt, checkpoint_every=1,
+    )
+    clean = dssfn.train(dssfn.TrainSpec(**base), xw, tw, key)
+
+    import shutil
+    shutil.rmtree(ckpt)
+
+    real = layerwise._step_diverged
+    calls = {"n": 0}
+
+    def fake(step, prev_cost, blowup=1e3):
+        calls["n"] += 1
+        # Layers 0 and 1 succeed (and checkpoint); layer 2's first
+        # attempt "diverges".
+        if calls["n"] == 3:
+            return True
+        return real(step, prev_cost, blowup)
+
+    monkeypatch.setattr(layerwise, "_step_diverged", fake)
+    with pytest.warns(RuntimeWarning, match="rolling back to layer 2"):
+        healed = dssfn.train(
+            dssfn.TrainSpec(**base, guard_divergence=True), xw, tw, key,
+        )
+    assert healed.log.rollbacks == 1
+    # Consumed layers (restored from the checkpoint) are bit-identical;
+    # the restart layer drew a fresh random matrix.
+    for a, b in zip(clean.params.o[:2], healed.params.o[:2]):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert np.array_equal(
+        np.asarray(clean.params.r[0]), np.asarray(healed.params.r[0])
+    )
+    assert not np.array_equal(
+        np.asarray(clean.params.r[1]), np.asarray(healed.params.r[1])
+    )
+
+
+def test_divergence_guard_budget_exhaustion_raises(monkeypatch):
+    xw, tw = _data(jax.random.PRNGKey(3))
+    monkeypatch.setattr(
+        layerwise, "_step_diverged", lambda step, prev_cost, blowup=1e3: True
+    )
+    with pytest.raises(RuntimeError, match="rollback budget"):
+        dssfn.train(
+            dssfn.TrainSpec(
+                cfg=_cfg(), backend="simulated", workers=4,
+                guard_divergence=True, max_rollbacks=0,
+            ),
+            xw, tw, jax.random.PRNGKey(7),
+        )
 
 
 def test_checkpoint_validation_errors():

@@ -476,6 +476,86 @@ def test_async_faults_and_elastic_resume_on_8_devices():
     assert "ELASTIC8_OK" in out
 
 
+def test_byzantine_robust_consensus_on_8_devices():
+    """The robustness acceptance test on a real M=8 ``workers`` mesh:
+    one signflip attacker on a 2x4 torus — ``trimmed:f=1`` converges to
+    the honest-data solution while the non-robust gossip path fails the
+    same bound (and a nanbomb attacker NaNs it outright); the attack
+    schedule is deterministic inside ONE cached lowering; zero-attacker
+    trimmed stays bit-identical to plain serial gossip on the mesh."""
+    out = run_subprocess("""
+    from repro.core import admm
+    from repro.core.backend import MeshBackend, SimulatedBackend
+    from repro.core.policy import AsyncGossip, Gossip, parse_policy
+    from repro.core.topology import Torus
+    from repro.launch.mesh import make_worker_mesh
+
+    m, n, q, j = 8, 16, 3, 160
+    wmesh = make_worker_mesh(m)
+    ky, kt = jax.random.split(jax.random.PRNGKey(4))
+    y = jax.random.normal(ky, (n, j))
+    t = jax.random.normal(kt, (q, j))
+    yw = y.reshape(n, m, j // m).transpose(1, 0, 2)
+    tw = t.reshape(q, m, j // m).transpose(1, 0, 2)
+    kw = dict(mu=1e-2, eps_radius=6.0, num_iters=40)
+
+    # Honest-data reference: the attacker's shard is unlearnable (every
+    # payload it emits is corrupted), so worker 3's data leaves the pool.
+    keep = np.array([i for i in range(m) if i != 3])
+    oh = admm.admm_ridge_consensus(
+        yw[keep], tw[keep], backend=SimulatedBackend(m - 1), **kw)
+    def rel(res):
+        return float(jnp.linalg.norm(res.o_star - oh.o_star)
+                     / jnp.linalg.norm(oh.o_star))
+
+    pol = parse_policy("trimmed:f=1:rounds=3:byz=3:attack=signflip@torus:2x4")
+    mesh_be = MeshBackend(wmesh, policy=pol)
+    rob = admm.admm_ridge_consensus(yw, tw, backend=mesh_be, **kw)
+    rob2 = admm.admm_ridge_consensus(yw, tw, backend=mesh_be, **kw)
+    # Deterministic attack schedule, one lowering for the (policy,
+    # fault-model) pair even across repeat solves.
+    assert jnp.array_equal(rob.o_star, rob2.o_star)
+    assert mesh_be.lowerings == 1, mesh_be.cache_info()
+    # Sim-vs-mesh parity under attack (same seeded draws both paths).
+    sim = admm.admm_ridge_consensus(
+        yw, tw, backend=SimulatedBackend(m, policy=pol), **kw)
+    rel_pair = float(jnp.linalg.norm(sim.o_star - rob.o_star)
+                     / jnp.linalg.norm(sim.o_star))
+    assert rel_pair < 1e-4, rel_pair
+
+    # Robust converges; the non-robust path fails the same bound.
+    r_rob = rel(rob)
+    vuln = AsyncGossip(rounds=3, topology=Torus(2, 4), faults=pol.faults)
+    r_vul = rel(admm.admm_ridge_consensus(
+        yw, tw, backend=MeshBackend(wmesh, policy=vuln), **kw))
+    assert np.isfinite(r_rob) and r_rob < 0.15, r_rob
+    assert (not np.isfinite(r_vul)) or r_vul > 4 * r_rob, (r_rob, r_vul)
+
+    # nanbomb: robust screens the NaN payloads out entirely; the
+    # non-robust mix is destroyed by them.
+    nb = parse_policy("trimmed:f=1:rounds=3:byz=3:attack=nanbomb@torus:2x4")
+    rob_nb = admm.admm_ridge_consensus(
+        yw, tw, backend=MeshBackend(wmesh, policy=nb), **kw)
+    assert np.isfinite(rel(rob_nb)) and rel(rob_nb) < 0.15, rel(rob_nb)
+    vuln_nb = AsyncGossip(rounds=3, topology=Torus(2, 4), faults=nb.faults)
+    r_vnb = rel(admm.admm_ridge_consensus(
+        yw, tw, backend=MeshBackend(wmesh, policy=vuln_nb), **kw))
+    assert not np.isfinite(r_vnb), r_vnb
+
+    # Zero attackers: trimmed == plain serial gossip, bit for bit.
+    clean = parse_policy("trimmed:f=1:rounds=3@torus:2x4")
+    a = admm.admm_ridge_consensus(
+        yw, tw, backend=MeshBackend(wmesh, policy=clean), **kw)
+    b = admm.admm_ridge_consensus(
+        yw, tw, backend=MeshBackend(
+            wmesh, policy=Gossip(rounds=3, topology=Torus(2, 4),
+                                 compress=False)), **kw)
+    assert jnp.array_equal(a.o_star, b.o_star)
+    print("BYZ8_OK", r_rob, r_vul)
+    """)
+    assert "BYZ8_OK" in out
+
+
 def test_distributed_admm_on_8_devices():
     out = run_subprocess("""
     from functools import partial

@@ -4,11 +4,15 @@ consensus), running through the same backend + compile-once engine as
 the ideal-network path.  Includes the centralized-proximity guarantees:
 each policy's final solution stays within a stated tolerance of the
 exact-consensus run on the synthetic task."""
+import importlib
+import sys
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import admm, robust, topology
+from repro.core import admm, topology
 from repro.core.backend import SimulatedBackend
 from repro.core.policy import (
     ExactMean,
@@ -16,6 +20,7 @@ from repro.core.policy import (
     QuantizedGossip,
     RingGossip,
     StaleMixing,
+    quantize_stochastic,
 )
 
 
@@ -32,13 +37,22 @@ def _rel_to_oracle(res, oracle):
     return float(jnp.linalg.norm(res.o_star - oracle) / jnp.linalg.norm(oracle))
 
 
-def test_robust_module_reexports_policies():
-    """core/robust.py is a shim now: the batched simulations are gone,
-    the policy objects are the API."""
+def test_robust_module_is_deprecated_shim():
+    """core/robust.py warns on import and re-exports the canonical
+    policy-module names — repro.core.policy is the API."""
+    sys.modules.pop("repro.core.robust", None)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        robust = importlib.import_module("repro.core.robust")
+    assert any(
+        issubclass(w.category, DeprecationWarning)
+        and "repro.core.policy" in str(w.message)
+        for w in caught
+    )
     assert robust.QuantizedGossip is QuantizedGossip
     assert robust.LossyGossip is LossyGossip
     assert robust.StaleMixing is StaleMixing
-    assert robust.quantize_stochastic is not None
+    assert robust.quantize_stochastic is quantize_stochastic
 
 
 # --------------------------------------------------------- stale (async)
