@@ -83,7 +83,6 @@ exist (the CI multi-device job exports XLA_FLAGS for 8).
 """
 from __future__ import annotations
 
-import json
 import os
 
 
@@ -115,30 +114,20 @@ def _torus_shape(m: int) -> tuple[int, int] | None:
     return None
 
 
+#: The sections the regression gate walks (benchmarks.common holds the
+#: shared check_regression/gate_and_write implementation).
+GATE_SECTIONS = ("backends", "byzantine")
+
+
 def check_regression(
     baseline: dict, fresh: dict, threshold: float = 0.25
 ) -> list[str]:
-    """Per-backend iter_ms regressions beyond ``threshold`` (fractional).
+    """Per-backend iter_ms regressions beyond ``threshold`` (fractional);
+    the shared ``benchmarks.common.check_regression`` over this bench's
+    sections."""
+    from benchmarks.common import check_regression as shared
 
-    Compares every backend name present in BOTH reports; new backends
-    and removed backends never fail the gate.  Returns human-readable
-    regression descriptions (empty = pass).
-    """
-    problems = []
-    for section in ("backends", "byzantine"):
-        for name, base_row in baseline.get(section, {}).items():
-            fresh_row = fresh.get(section, {}).get(name)
-            if not isinstance(base_row, dict) or not isinstance(fresh_row, dict):
-                continue
-            base, new = base_row.get("iter_ms"), fresh_row.get("iter_ms")
-            if not base or not new:
-                continue
-            if new > base * (1.0 + threshold):
-                problems.append(
-                    f"{section}/{name}: iter_ms {base:.4f} -> {new:.4f} "
-                    f"(+{(new / base - 1) * 100:.0f}% > +{threshold * 100:.0f}%)"
-                )
-    return problems
+    return shared(baseline, fresh, threshold, sections=GATE_SECTIONS)
 
 
 def run(
@@ -659,43 +648,12 @@ def run(
     report["legacy_iter_ms"] = headline["legacy_iter_ms"]
     report["bytes_per_worker"] = headline["bytes_per_worker"]
 
-    if check is None:
-        check = os.environ.get("BENCH_CHECK_REGRESSION", "") not in ("", "0")
-    baseline = None
-    if check and json_path and os.path.exists(json_path):
-        with open(json_path) as f:
-            baseline = json.load(f)
+    from benchmarks.common import gate_and_write
 
-    if baseline is not None:
-        # Gate BEFORE overwriting: a failed run must leave the committed
-        # baseline intact (else an immediate re-run would compare against
-        # the regressed numbers and pass silently).  The fresh report
-        # still lands next to it for inspection.
-        threshold = float(os.environ.get("BENCH_REGRESSION_FACTOR", "0.25"))
-        problems = check_regression(baseline, report, threshold)
-        if problems:
-            rejected = json_path + ".rejected"
-            with open(rejected, "w") as f:
-                json.dump(report, f, indent=2)
-            raise SystemExit(
-                f"benchmark regression vs committed {json_path} "
-                f"(fresh results written to {rejected}, baseline kept):\n  "
-                + "\n  ".join(problems)
-            )
-        if verbose:
-            print(
-                f"# regression gate OK (no backend iter_ms regressed "
-                f">{threshold * 100:.0f}% vs committed {json_path})",
-                flush=True,
-            )
-    elif check and verbose:
-        print("# regression gate skipped: no committed baseline", flush=True)
-
-    if json_path:
-        with open(json_path, "w") as f:
-            json.dump(report, f, indent=2)
-        if verbose:
-            print(f"# wrote {json_path}", flush=True)
+    gate_and_write(
+        report, json_path, check,
+        gates=tuple((s, "iter_ms") for s in GATE_SECTIONS), verbose=verbose,
+    )
     return rows
 
 

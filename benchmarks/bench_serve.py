@@ -1,0 +1,267 @@
+"""dSSFN serving engine: latency, throughput vs batch size, compile counts.
+
+The serving tentpole measurement: a stack is trained (small, fast),
+exported through ``repro.serve.export_artifact``, and served through
+:class:`repro.serve.ServeEngine` + :class:`repro.serve.MicroBatcher` —
+the same path ``launch/serve_dssfn.py`` drives.  Three sections land in
+``BENCH_serve.json``:
+
+  engine       per-bucket steady-state forward latency through the
+               cached executable — ``iter_ms`` is per-REQUEST wall time
+               at that batch size (the regression-gated metric),
+               ``us_per_sample`` the amortized per-sample cost, plus the
+               one-time ``compile_s`` and the bucket's lowering count
+               (asserted == 1: the compile-once contract);
+  batcher      open-loop single-sample request streams through the
+               micro-batcher at several max-batch admission settings —
+               p50/p99 per-request latency and samples/s throughput,
+               the latency/throughput trade the max-wait knob buys;
+  compile      whole-run lowering accounting: total lowerings vs
+               distinct (bucket, dtype) pairs touched (asserted equal).
+
+Regression gate: shares ``benchmarks.common.check_regression`` /
+``gate_and_write`` with bench_mesh — ``--check-regression`` (or
+``BENCH_CHECK_REGRESSION=1``) loads the committed JSON before
+overwriting and fails if any ``engine`` row's ``iter_ms`` or any
+``batcher`` row's ``p50_ms`` regressed more than
+``BENCH_REGRESSION_FACTOR`` (default +100% — sub-ms CPU timings drift
+tens of percent between back-to-back runs from burst-credit throttling
+alone, and the gate exists to catch order-of-magnitude breakage such as
+a recompile on the hot path).  p99 is reported but not
+gated: a single scheduler pause on a shared runner lands straight in a
+200-sample tail.
+
+Standalone::
+
+    python -m benchmarks.bench_serve [--json BENCH_serve.json]
+        [--check-regression]
+"""
+from __future__ import annotations
+
+import os
+
+#: Engine-section batch sizes == the bucket ladder (each row is one
+#: cached executable).
+BUCKETS = (1, 8, 32, 128)
+#: Batcher-section admission sweep: max samples coalesced per batch.
+COALESCE = (1, 8, 32)
+REQUESTS = 200
+STEADY_REPEATS = 20
+#: Forward calls per timed block — single ~0.1 ms calls are dispatch
+#: noise; the gate should compare program time, not scheduler luck.
+INNER_CALLS = 10
+#: Full request streams per coalesce setting; best-of keeps the p50
+#: regression gate from tripping on scheduler noise.
+STREAM_REPEATS = 3
+
+DEFAULT_JSON = "BENCH_serve.json"
+GATE = (("engine", "iter_ms"), ("batcher", "p50_ms"))
+
+
+def _train_artifact(tmpdir: str):
+    """Train a small-but-real stack and export it; returns the path.
+
+    Shapes are 128-aligned (input 128, hidden 256) so the engine rows
+    measure the same matmul regime the kernels target, while staying
+    inside the CI smoke budget.
+    """
+    import jax
+
+    from repro import dssfn
+    from repro.core import ssfn
+    from repro.data import make_classification, partition_by_spec
+    from repro.serve import export_artifact
+
+    m, q = 4, 8
+    data = make_classification(
+        jax.random.PRNGKey(0),
+        num_train=512, num_test=128, input_dim=128, num_classes=q,
+    )
+    xw, tw = partition_by_spec(data.x_train, data.t_train, m, "iid")
+    cfg = ssfn.SSFNConfig(
+        input_dim=128, num_classes=q, num_layers=2, hidden=256,
+        admm_iters=30,
+    )
+    result = dssfn.train(
+        dssfn.TrainSpec(cfg=cfg, backend="simulated", workers=m),
+        xw, tw, jax.random.PRNGKey(1),
+    )
+    path = os.path.join(tmpdir, "stack")
+    export_artifact(path, result, source="benchmarks.bench_serve")
+    return path
+
+
+def _percentile(sorted_vals, p):
+    if not sorted_vals:
+        return 0.0
+    idx = min(
+        len(sorted_vals) - 1, int(round(p / 100.0 * (len(sorted_vals) - 1)))
+    )
+    return sorted_vals[idx]
+
+
+def run(
+    verbose: bool = True,
+    json_path: str | None = DEFAULT_JSON,
+    check: bool | None = None,
+) -> list[str]:
+    import tempfile
+    import time
+
+    import jax
+    import numpy as np
+
+    from benchmarks.common import csv_row, timed
+    from repro.serve import MicroBatcher, ServeEngine
+
+    rows: list[str] = []
+    report: dict = {
+        "buckets": list(BUCKETS),
+        "requests": REQUESTS,
+        "engine": {},
+        "batcher": {},
+    }
+
+    with tempfile.TemporaryDirectory() as tmp:
+        artifact = _train_artifact(tmp)
+        engine = ServeEngine(artifact, buckets=BUCKETS)
+        rng = np.random.default_rng(0)
+        p_dim = engine.request_dim
+
+        # ---- engine: per-bucket steady-state forward latency ----------
+        for bucket in BUCKETS:
+            x = rng.standard_normal((p_dim, bucket)).astype(np.float32)
+            lower_before = engine.lowerings
+            _, compile_s = timed(engine.forward, x)  # trace + compile + run
+            # Per-call timing of a ~0.1 ms program is dominated by
+            # dispatch jitter; amortize over a block per repeat so the
+            # regression gate sees the program, not the scheduler.
+            best = float("inf")
+            for _ in range(STEADY_REPEATS):
+                t0 = time.perf_counter()
+                for _ in range(INNER_CALLS):
+                    out = engine.forward(x)
+                jax.block_until_ready(out)
+                best = min(best, (time.perf_counter() - t0) / INNER_CALLS)
+            lowered = engine.lowerings - lower_before
+            assert lowered == 1, (
+                f"bucket {bucket}: {lowered} lowerings for one shape "
+                f"(compile-once contract broken)"
+            )
+            report["engine"][f"bucket_{bucket}"] = {
+                "batch": bucket,
+                "compile_s": round(compile_s, 4),
+                "iter_ms": round(best * 1e3, 4),
+                "us_per_sample": round(best / bucket * 1e6, 2),
+                "lowerings": lowered,
+            }
+            rows.append(csv_row(
+                f"serve_engine_b{bucket}", best * 1e6,
+                f"batch={bucket};us_per_sample={best / bucket * 1e6:.1f};"
+                f"compile_s={compile_s:.3f}",
+            ))
+            if verbose:
+                print(rows[-1], flush=True)
+
+        # ---- batcher: open-loop request streams, latency/throughput ---
+        xs = [
+            rng.standard_normal((p_dim, 1)).astype(np.float32)
+            for _ in range(REQUESTS)
+        ]
+        for max_batch in COALESCE:
+            # Warm start: every bucket is already compiled above. A
+            # single 200-request stream still jitters tens of percent
+            # run-over-run (queue-position latency rides on dispatch
+            # noise), so take the best of a few streams — same
+            # rationale as the engine section's block timing.
+            best = None
+            for _ in range(STREAM_REPEATS):
+                batcher = MicroBatcher(
+                    engine, max_batch=max_batch, max_wait_us=1e9
+                )
+                t0 = time.perf_counter()
+                handles = [batcher.submit(x) for x in xs]
+                batcher.flush()
+                wall = time.perf_counter() - t0
+                assert all(h.done() for h in handles)
+                lats = sorted(h.latency_s for h in handles)
+                p50, p99 = _percentile(lats, 50), _percentile(lats, 99)
+                thru = REQUESTS / max(wall, 1e-12)
+                if best is None or p50 < best[0]:
+                    best = (p50, p99, thru, batcher)
+            p50, p99, thru, batcher = best
+            report["batcher"][f"coalesce_{max_batch}"] = {
+                "max_batch": max_batch,
+                "p50_ms": round(p50 * 1e3, 4),
+                "p99_ms": round(p99 * 1e3, 4),
+                "throughput_rps": round(thru, 1),
+                "batches": batcher.stats["batches"],
+                "mean_batch_size": round(
+                    float(np.mean(batcher.stats["batch_sizes"])), 2
+                ),
+            }
+            rows.append(csv_row(
+                f"serve_batcher_c{max_batch}", p50 * 1e6,
+                f"p99_us={p99 * 1e6:.1f};rps={thru:.0f};"
+                f"batches={batcher.stats['batches']}",
+            ))
+            if verbose:
+                print(rows[-1], flush=True)
+
+        # ---- compile accounting: the whole run's lowering budget ------
+        info = engine.cache_info()
+        distinct = len(info["buckets"])
+        assert info["lowerings"] == distinct, info
+        report["compile"] = {
+            "lowerings": info["lowerings"],
+            "distinct_executables": distinct,
+            "cache_hits": info["cache_hits"],
+        }
+        rows.append(csv_row(
+            "serve_compile_counts", 0.0,
+            f"lowerings={info['lowerings']};distinct={distinct};"
+            f"cache_hits={info['cache_hits']}",
+        ))
+        if verbose:
+            print(rows[-1], flush=True)
+
+        # Headline keys (CI schema check): the single-sample hot path.
+        report["p50_ms"] = report["batcher"][f"coalesce_{COALESCE[0]}"]["p50_ms"]
+        report["p99_ms"] = report["batcher"][f"coalesce_{COALESCE[0]}"]["p99_ms"]
+        report["throughput_rps"] = max(
+            r["throughput_rps"] for r in report["batcher"].values()
+        )
+        report["lowerings"] = info["lowerings"]
+
+    from benchmarks.common import gate_and_write
+
+    # Sub-ms CPU timings drift tens of percent between back-to-back
+    # runs (burst-credit throttling); the gate is for order-of-magnitude
+    # breakage, so default to 2x headroom (BENCH_REGRESSION_FACTOR
+    # still overrides).
+    gate_and_write(
+        report, json_path, check,
+        gates=GATE, default_threshold=1.0, verbose=verbose,
+    )
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=DEFAULT_JSON, help="output JSON path")
+    ap.add_argument(
+        "--check-regression",
+        action="store_true",
+        help="compare fresh results against the committed JSON (read "
+        "before overwriting) and exit non-zero if any engine iter_ms or "
+        "batcher p50_ms regressed more than BENCH_REGRESSION_FACTOR "
+        "(default +100%%)",
+    )
+    args = ap.parse_args()
+    run(json_path=args.json, check=args.check_regression or None)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,8 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -25,3 +27,109 @@ def timed(fn, *args, **kwargs):
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def check_regression(
+    baseline: dict,
+    fresh: dict,
+    threshold: float = 0.25,
+    *,
+    sections: tuple[str, ...] = ("backends",),
+    metric: str = "iter_ms",
+) -> list[str]:
+    """Per-row ``metric`` regressions beyond ``threshold`` (fractional).
+
+    The shared gate behind every BENCH_*.json: for each ``sections``
+    entry (a dict of name -> row), compares every row name present in
+    BOTH reports on ``metric``; new rows and removed rows never fail the
+    gate.  Returns human-readable regression descriptions (empty = pass).
+    """
+    problems = []
+    for section in sections:
+        for name, base_row in baseline.get(section, {}).items():
+            fresh_row = fresh.get(section, {}).get(name)
+            if not isinstance(base_row, dict) or not isinstance(fresh_row, dict):
+                continue
+            base, new = base_row.get(metric), fresh_row.get(metric)
+            if not base or not new:
+                continue
+            if new > base * (1.0 + threshold):
+                problems.append(
+                    f"{section}/{name}: {metric} {base:.4f} -> {new:.4f} "
+                    f"(+{(new / base - 1) * 100:.0f}% > +{threshold * 100:.0f}%)"
+                )
+    return problems
+
+
+def gate_and_write(
+    report: dict,
+    json_path: str | None,
+    check: bool | None,
+    *,
+    gates: tuple[tuple[str, str], ...],
+    default_threshold: float = 0.25,
+    verbose: bool = True,
+) -> None:
+    """The BENCH_*.json commit protocol shared by the bench modules.
+
+    ``gates`` is a tuple of ``(section, metric)`` pairs — each section's
+    rows are gated on its own metric (bench_mesh gates "backends" and
+    "byzantine" on iter_ms; bench_serve gates "engine" on iter_ms and
+    "batcher" on p50_ms).
+
+    Loads the committed baseline BEFORE overwriting it, gates ``report``
+    against it with :func:`check_regression`, and only then writes
+    ``json_path``.  A failed gate leaves the committed baseline intact
+    (else an immediate re-run would compare against the regressed
+    numbers and pass silently) and lands the fresh report at
+    ``<json_path>.rejected`` for inspection.
+
+    ``check=None`` defers to ``BENCH_CHECK_REGRESSION`` (the CI smoke
+    jobs' switch); the threshold comes from ``BENCH_REGRESSION_FACTOR``,
+    falling back to ``default_threshold`` (0.25 = +25%).  Benches whose
+    gated metrics sit in the sub-millisecond range (bench_serve) pass a
+    looser default: back-to-back CPU runs drift tens of percent from
+    burst-credit throttling alone, and the gate is there to catch
+    order-of-magnitude breakage (a recompile on the hot path), not
+    scheduler luck.
+    """
+    if check is None:
+        check = os.environ.get("BENCH_CHECK_REGRESSION", "") not in ("", "0")
+    baseline = None
+    if check and json_path and os.path.exists(json_path):
+        with open(json_path) as f:
+            baseline = json.load(f)
+
+    if baseline is not None:
+        threshold = float(
+            os.environ.get("BENCH_REGRESSION_FACTOR", str(default_threshold))
+        )
+        problems = []
+        for section, metric in gates:
+            problems += check_regression(
+                baseline, report, threshold, sections=(section,), metric=metric
+            )
+        if problems:
+            rejected = json_path + ".rejected"
+            with open(rejected, "w") as f:
+                json.dump(report, f, indent=2)
+            raise SystemExit(
+                f"benchmark regression vs committed {json_path} "
+                f"(fresh results written to {rejected}, baseline kept):\n  "
+                + "\n  ".join(problems)
+            )
+        if verbose:
+            gated = ", ".join(f"{s}.{m}" for s, m in gates)
+            print(
+                f"# regression gate OK (no {gated} regressed "
+                f">{threshold * 100:.0f}% vs committed {json_path})",
+                flush=True,
+            )
+    elif check and verbose:
+        print("# regression gate skipped: no committed baseline", flush=True)
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        if verbose:
+            print(f"# wrote {json_path}", flush=True)

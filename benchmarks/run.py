@@ -17,6 +17,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   - bench_mesh        : simulated-vs-mesh ConsensusBackend cost + parity;
                         also writes BENCH_mesh.json (compile-once engine
                         vs legacy re-trace perf trajectory)
+  - bench_serve       : dSSFN serving engine latency/throughput/compile
+                        counts; also writes BENCH_serve.json
   - roofline          : aggregates the dry-run §Roofline table
 """
 from __future__ import annotations
@@ -34,6 +36,7 @@ def main() -> None:
         bench_kernels,
         bench_mesh,
         bench_robust,
+        bench_serve,
         roofline,
     )
 
@@ -41,6 +44,7 @@ def main() -> None:
         "commload": bench_commload,
         "kernels": bench_kernels,
         "mesh": bench_mesh,
+        "serve": bench_serve,
         "equivalence": bench_equivalence,
         "convergence": bench_convergence,
         "degree": bench_degree,

@@ -205,6 +205,23 @@ def parse_args(argv=None) -> argparse.Namespace:
         help="divergence-rollback budget before the run raises "
         "(with --guard-divergence)",
     )
+    ap.add_argument(
+        "--export-artifact",
+        default=None,
+        metavar="PATH",
+        help="after training, export the trained stack as a serving "
+        "artifact directory (repro.serve.export_artifact); with "
+        "--backend both the simulated run is exported (centralized "
+        "equivalence makes the choice immaterial)",
+    )
+    ap.add_argument(
+        "--export-features",
+        default=None,
+        help="frozen feature-extractor spec recorded in the exported "
+        "artifact (identity | rff:D[:seed] | relu:D[:seed]); the engine "
+        "applies it to raw requests before the stack — only meaningful "
+        "when training ran on pre-extracted features",
+    )
     ap.add_argument("--out", default=None, help="optional JSON results path")
     ap.add_argument(
         "--no-host-mesh",
@@ -414,6 +431,34 @@ def main(argv=None) -> dict:
         print(
             f"parity simulated-vs-mesh: max readout gap={max(gaps):.2e}, "
             f"objective gap={obj_str}",
+            flush=True,
+        )
+
+    if args.export_artifact:
+        from repro.serve import export_artifact
+
+        source_kind = kinds[0]
+        params = params_by_kind[source_kind]
+        export_artifact(
+            args.export_artifact,
+            params,
+            features=args.export_features,
+            source={
+                "trained_by": "repro.launch.train_dssfn",
+                "backend": source_kind,
+                "consensus": args.consensus,
+                "workers": args.workers,
+                "seed": args.seed,
+            },
+        )
+        results["export"] = {
+            "path": args.export_artifact,
+            "source_kind": source_kind,
+            "num_layers": len(params.o) - 1,
+        }
+        print(
+            f"exported serving artifact -> {args.export_artifact} "
+            f"(from {source_kind} run, {len(params.o) - 1} layers)",
             flush=True,
         )
 

@@ -1,0 +1,52 @@
+"""dSSFN serving: export trained stacks, serve them compile-once.
+
+The paper's centralized-equivalence property means a stack trained
+across M workers *is* a single deployable model — the layer readouts
+O_0..O_L plus the shared random matrices R_1..R_L reassemble into one
+feed-forward network whose output is bit-identical to the training-time
+propagate path.  This package is the train→deploy story built on that:
+
+- :mod:`repro.serve.export` — convert a training result or checkpoint
+  directory into a versioned, self-describing, corruption-checked
+  artifact directory (``export_artifact`` / ``load_artifact`` /
+  ``is_valid_artifact``);
+- :mod:`repro.serve.engine` — :class:`~repro.serve.engine.ServeEngine`,
+  device-resident weights + ONE cached forward executable per
+  (shape bucket, dtype), so arbitrary request sizes hit a small fixed
+  set of lowerings;
+- :mod:`repro.serve.batcher` — :class:`~repro.serve.batcher.MicroBatcher`,
+  a continuous micro-batching admission queue (``submit``/``flush``,
+  max-batch + max-wait-µs) that coalesces concurrent requests into
+  bucketed batches and scatters results back per request;
+- :mod:`repro.serve.features` — optional frozen feature extractors
+  (seeded random maps) recorded in the artifact and applied at serve
+  admission, so non-dSSFN featurizations deploy with the stack.
+
+``launch/serve_dssfn.py`` is the CLI; ``benchmarks/bench_serve.py``
+tracks p50/p99 latency and throughput in ``BENCH_serve.json``.
+"""
+from repro.serve.batcher import MicroBatcher, PendingResult
+from repro.serve.engine import ServeEngine
+from repro.serve.export import (
+    ArtifactCorruptError,
+    ServeArtifact,
+    export_artifact,
+    export_from_checkpoint,
+    is_valid_artifact,
+    load_artifact,
+)
+from repro.serve.features import FeatureExtractor, parse_features
+
+__all__ = [
+    "ArtifactCorruptError",
+    "FeatureExtractor",
+    "MicroBatcher",
+    "PendingResult",
+    "ServeArtifact",
+    "ServeEngine",
+    "export_artifact",
+    "export_from_checkpoint",
+    "is_valid_artifact",
+    "load_artifact",
+    "parse_features",
+]

@@ -1,0 +1,179 @@
+"""Continuous micro-batching for the dSSFN serving engine.
+
+Serving traffic arrives as many small concurrent requests; the engine is
+fastest on few large bucketed batches.  :class:`MicroBatcher` sits in
+between: ``submit()`` enqueues a request and returns a
+:class:`PendingResult` immediately, and the queue drains into coalesced
+engine batches under two admission rules —
+
+- **max-batch**: the moment the queued sample count reaches
+  ``max_batch``, the queue flushes (a full bucket is ready);
+- **max-wait**: a non-empty queue older than ``max_wait_us`` flushes on
+  the next ``submit`` — the latency bound a half-full bucket is allowed
+  to cost the oldest request.  ``max_wait_us=0`` means "never hold":
+  every submit flushes immediately (the lowest-latency, lowest-
+  throughput corner).
+
+``flush()`` drains unconditionally (end of stream, or a service loop's
+timer tick — the driver owns the clock, which keeps this layer
+deterministic and synchronous: no threads to make the bit-exactness
+tests racy).
+
+Coalescing is FIFO: queued requests are packed in arrival order into
+batches of at most ``max_batch`` samples, each batch runs through the
+engine ONCE (padded to its shape bucket), and the result columns scatter
+back to their requests.  Because the engine's forward is column-wise,
+a coalesced request's results are bit-identical to serving it alone —
+batching is a pure throughput/latency trade, never an accuracy one.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.serve.engine import ServeEngine
+
+
+class PendingResult:
+    """A submitted request's future: ``done()`` / ``result()`` /
+    ``latency_s`` (submit -> results materialized)."""
+
+    __slots__ = ("num_samples", "submitted_at", "completed_at", "_value")
+
+    def __init__(self, num_samples: int):
+        self.num_samples = num_samples
+        self.submitted_at = time.perf_counter()
+        self.completed_at: float | None = None
+        self._value = None
+
+    def done(self) -> bool:
+        return self.completed_at is not None
+
+    def result(self):
+        """The (Q, j) logits for this request's samples."""
+        if not self.done():
+            raise RuntimeError(
+                "request not served yet: flush() the batcher (or submit "
+                "enough traffic to trip its admission rules)"
+            )
+        return self._value
+
+    @property
+    def latency_s(self) -> float:
+        if not self.done():
+            raise RuntimeError("request not served yet")
+        return self.completed_at - self.submitted_at
+
+    def _complete(self, value) -> None:
+        self._value = value
+        self.completed_at = time.perf_counter()
+
+
+class MicroBatcher:
+    """Coalesce concurrent requests into bucketed engine batches.
+
+    batcher = MicroBatcher(engine, max_batch=32, max_wait_us=200.0)
+    handles = [batcher.submit(x) for x in requests]
+    batcher.flush()                      # drain the tail
+    outs = [h.result() for h in handles]
+    """
+
+    def __init__(
+        self,
+        engine: ServeEngine,
+        *,
+        max_batch: int | None = None,
+        max_wait_us: float = 0.0,
+    ):
+        if max_batch is None:
+            max_batch = engine.max_batch
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_wait_us < 0:
+            raise ValueError(f"max_wait_us must be >= 0, got {max_wait_us}")
+        self.engine = engine
+        self.max_batch = int(max_batch)
+        self.max_wait_us = float(max_wait_us)
+        self._queue: list[tuple[np.ndarray, PendingResult]] = []
+        self._queued_samples = 0
+        self._oldest_at: float | None = None
+        # Admission telemetry: what the bench reports.
+        self.stats = {
+            "requests": 0,
+            "samples": 0,
+            "batches": 0,
+            "flushes": 0,
+            "batch_sizes": [],
+        }
+
+    # ------------------------------------------------------------------
+    def pending(self) -> int:
+        """Queued-but-unserved sample count."""
+        return self._queued_samples
+
+    def submit(self, x) -> PendingResult:
+        """Enqueue one request (column-stacked ``(P, j)``, or ``(P,)``
+        for a single sample) and return its handle.  May flush the
+        queue if an admission rule trips — including the queue this
+        request just joined."""
+        x = np.asarray(x)
+        if x.ndim == 1:
+            x = x[:, None]
+        if x.ndim != 2:
+            raise ValueError(
+                f"requests are column-stacked (P, j) arrays, got shape "
+                f"{tuple(x.shape)}"
+            )
+        handle = PendingResult(x.shape[1])
+        if not self._queue:
+            self._oldest_at = handle.submitted_at
+        self._queue.append((x, handle))
+        self._queued_samples += x.shape[1]
+        self.stats["requests"] += 1
+        self.stats["samples"] += x.shape[1]
+        if self._queued_samples >= self.max_batch:
+            self.flush()
+        elif (
+            self._oldest_at is not None
+            and (time.perf_counter() - self._oldest_at) * 1e6
+            >= self.max_wait_us
+        ):
+            self.flush()
+        return handle
+
+    def flush(self) -> int:
+        """Drain the queue: FIFO-pack into <= ``max_batch``-sample
+        batches, run each through the engine once, scatter the result
+        columns back.  Returns the number of requests served."""
+        if not self._queue:
+            return 0
+        queue, self._queue = self._queue, []
+        self._queued_samples = 0
+        self._oldest_at = None
+        self.stats["flushes"] += 1
+
+        batches: list[list[tuple[np.ndarray, PendingResult]]] = [[]]
+        size = 0
+        for item in queue:
+            j = item[0].shape[1]
+            if batches[-1] and size + j > self.max_batch:
+                batches.append([])
+                size = 0
+            batches[-1].append(item)
+            size += j
+
+        for batch in batches:
+            xs = [x for x, _ in batch]
+            xcat = xs[0] if len(xs) == 1 else np.concatenate(xs, axis=1)
+            out = self.engine.forward(xcat)
+            jax.block_until_ready(out)
+            self.stats["batches"] += 1
+            self.stats["batch_sizes"].append(xcat.shape[1])
+            start = 0
+            for x, handle in batch:
+                j = x.shape[1]
+                handle._complete(out[:, start:start + j])
+                start += j
+        return len(queue)

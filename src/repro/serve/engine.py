@@ -1,0 +1,286 @@
+"""ServeEngine: device-resident dSSFN weights, compile-once batched forward.
+
+The serving hot path is the training-time propagate path run forward —
+``y_{l+1} = relu(W_{l+1} y_l)`` over the assembled weights, then the
+final readout ``O_L y_L`` — executed as ONE jitted program per
+*(shape bucket, input dtype)*:
+
+- **Shape bucketing.**  Request batch sizes are arbitrary; compiling a
+  lowering per size would re-trace on every novel request.  The engine
+  pads each batch out to the smallest configured bucket that fits (and
+  chunks batches larger than the biggest bucket), so the whole request
+  distribution hits a small fixed set of lowerings — ``lowerings`` /
+  ``cache_info()`` mirror the ``ConsensusBackend`` executable cache and
+  the compile-count tests assert exactly one lowering per bucket
+  actually used.
+- **Bit-exact padding.**  Every op in the forward is column-wise (each
+  output column is a function of its input column only), so the padded
+  columns cannot perturb the real ones: bucketed, padded, and
+  micro-batched execution return bit-identical results for the real
+  columns — the serving half of the paper's centralized equivalence,
+  asserted by ``tests/test_serve.py``.
+- **Weights as operands.**  Device-resident weights ride into the jitted
+  program as operands (never baked jit constants — the backend cache's
+  rule), so :meth:`reload` hot-swaps a newer same-shape artifact without
+  a single recompile.
+- **Kernel routing.**  ``use_kernels=True`` routes each propagation
+  through the ``matmul_relu`` Pallas kernel on 128-aligned shapes — the
+  propagate half of the training engine's fused ``propagate_gram``
+  kernel (serving needs no Gram, so the plain fused matmul+relu is the
+  right kernel); misaligned shapes fall back to the einsum path, exactly
+  like training.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable, Hashable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ssfn as ssfn_lib
+from repro.serve.export import ServeArtifact, load_artifact
+from repro.serve.features import parse_features
+
+Array = jax.Array
+
+#: Default shape-bucket ladder: powers of two.  Only buckets a request
+#: size actually lands in are ever lowered.
+DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128)
+
+#: Bound on cached executables (one per (bucket, dtype) in practice —
+#: far below this; FIFO eviction keeps pathological dtype churn correct).
+_EXEC_CACHE_SIZE = 64
+
+
+def _aligned(*dims: int) -> bool:
+    return all(d % 128 == 0 for d in dims)
+
+
+class ServeEngine:
+    """Serve a trained dSSFN stack with compile-once batched inference.
+
+    engine = ServeEngine("artifact_dir", buckets=(1, 8, 32))
+    logits = engine.forward(x)          # x: (P_raw, J) column-stacked
+    """
+
+    def __init__(
+        self,
+        artifact: ServeArtifact | str,
+        *,
+        buckets: tuple[int, ...] | None = None,
+        use_kernels: bool = False,
+        dtype=jnp.float32,
+    ):
+        if isinstance(artifact, str):
+            artifact = load_artifact(artifact)
+        if not isinstance(artifact, ServeArtifact):
+            raise TypeError(
+                f"expected a ServeArtifact or artifact path, got "
+                f"{type(artifact).__name__}"
+            )
+        self.artifact = artifact
+        self.num_classes = artifact.num_classes
+        self.dtype = jnp.dtype(dtype)
+        self.use_kernels = bool(use_kernels)
+
+        buckets = tuple(sorted(set(buckets or DEFAULT_BUCKETS)))
+        if not buckets or buckets[0] < 1:
+            raise ValueError(f"buckets must be positive ints, got {buckets}")
+        self.buckets = buckets
+        self.max_batch = buckets[-1]
+
+        self.extractor = parse_features(artifact.features)
+        #: Batch dimension requests arrive with (the extractor's input
+        #: when one is configured, else the stack's own input dim).
+        self.request_dim: int | None = (
+            artifact.input_dim if self.extractor is None else None
+        )
+        self._feat_params: tuple = ()
+
+        self._device_weights = None
+        self._load_weights(artifact.params)
+
+        # Executable cache, ConsensusBackend-style: one jitted forward
+        # per (bucket, dtype); ``lowerings`` counts actual traces.
+        self._exec_cache: OrderedDict[Hashable, Callable] = OrderedDict()
+        self.lowerings = 0
+        self.cache_hits = 0
+
+    # ------------------------------------------------------------------
+    # Weights
+    # ------------------------------------------------------------------
+    def _load_weights(self, params: ssfn_lib.SSFNParams) -> None:
+        q = self.num_classes
+        ws = ssfn_lib.assemble_weights(params, q)
+        self._device_weights = (
+            tuple(jax.device_put(jnp.asarray(w, self.dtype)) for w in ws),
+            jax.device_put(jnp.asarray(params.o[-1], self.dtype)),
+        )
+
+    def reload(self, artifact: ServeArtifact | str) -> None:
+        """Hot-swap a newer artifact.  Weights are program *operands*,
+        so a same-shape reload reuses every cached executable (zero
+        recompiles); a shape change is rejected — deploy shape changes
+        as a new engine."""
+        if isinstance(artifact, str):
+            artifact = load_artifact(artifact)
+        old_w, old_o = self._device_weights
+        new_w = ssfn_lib.assemble_weights(artifact.params, artifact.num_classes)
+        old_shapes = [tuple(w.shape) for w in old_w] + [tuple(old_o.shape)]
+        new_shapes = [tuple(w.shape) for w in new_w] + [
+            tuple(artifact.params.o[-1].shape)
+        ]
+        if old_shapes != new_shapes or artifact.features != self.artifact.features:
+            raise ValueError(
+                f"reload shape/feature mismatch: engine serves {old_shapes} "
+                f"(features={self.artifact.features!r}), artifact has "
+                f"{new_shapes} (features={artifact.features!r})"
+            )
+        self.artifact = artifact
+        self._load_weights(artifact.params)
+
+    # ------------------------------------------------------------------
+    # Bucketing
+    # ------------------------------------------------------------------
+    def bucket_for(self, batch: int) -> int:
+        """Smallest configured bucket that fits ``batch`` (the largest
+        bucket for anything bigger — ``forward`` chunks those)."""
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        for b in self.buckets:
+            if batch <= b:
+                return b
+        return self.max_batch
+
+    def _chunks(self, j: int) -> list[int]:
+        """Split a batch of ``j`` columns into per-executable chunk sizes."""
+        out, left = [], j
+        while left > self.max_batch:
+            out.append(self.max_batch)
+            left -= self.max_batch
+        out.append(left)
+        return out
+
+    # ------------------------------------------------------------------
+    # Executable cache
+    # ------------------------------------------------------------------
+    def _executable(self, bucket: int, dtype) -> Callable:
+        key = (int(bucket), jnp.dtype(dtype).name)
+        jitted = self._exec_cache.get(key)
+        if jitted is not None:
+            self.cache_hits += 1
+            return jitted
+
+        def forward_program(weights, o_last, feat_params, x):
+            # Trace-time only: dispatch-cache hits never re-enter here.
+            self.lowerings += 1
+            x = x.astype(self.dtype)
+            if self.extractor is not None:
+                x = self._apply_features(feat_params, x)
+            y = x
+            for w in weights:
+                y = self._propagate(w, y)
+            return o_last @ y
+
+        jitted = jax.jit(forward_program)
+        self._exec_cache[key] = jitted
+        while len(self._exec_cache) > _EXEC_CACHE_SIZE:
+            self._exec_cache.popitem(last=False)
+        return jitted
+
+    def _propagate(self, w: Array, y: Array) -> Array:
+        if self.use_kernels and _aligned(w.shape[0], w.shape[1], y.shape[1]):
+            from repro.kernels.matmul_relu import matmul_relu
+
+            return matmul_relu(w, y).astype(y.dtype)
+        return jax.nn.relu(w @ y)
+
+    def _apply_features(self, feat_params, x):
+        ex = self.extractor
+        if ex.kind == "rff":
+            w, b = feat_params
+            return jnp.sqrt(2.0 / ex.dim) * jnp.cos(w @ x + b)
+        (w,) = feat_params
+        return jax.nn.relu(w @ x)
+
+    def cache_info(self) -> dict:
+        return {
+            "entries": len(self._exec_cache),
+            "buckets": [k[0] for k in self._exec_cache],
+            "lowerings": self.lowerings,
+            "cache_hits": self.cache_hits,
+        }
+
+    def describe(self) -> str:
+        return (
+            f"ServeEngine({self.artifact.describe()}, buckets="
+            f"{list(self.buckets)}, use_kernels={self.use_kernels})"
+        )
+
+    # ------------------------------------------------------------------
+    # Inference
+    # ------------------------------------------------------------------
+    def _materialize_features(self, request_dim: int) -> None:
+        if self.extractor is None:
+            return
+        if self._feat_params:
+            return
+        self.extractor.materialize(request_dim)
+        if self.extractor.output_dim(request_dim) != self.artifact.input_dim:
+            raise ValueError(
+                f"feature extractor {self.extractor.describe()} emits "
+                f"{self.extractor.output_dim(request_dim)}-dim features, "
+                f"stack expects {self.artifact.input_dim}"
+            )
+        self._feat_params = tuple(
+            jax.device_put(p) for p in self.extractor.params
+        )
+        self.request_dim = request_dim
+
+    def _forward_bucket(self, x: Array) -> Array:
+        """One padded bucket through the cached executable.
+        x: (P, j) with j <= max_batch; returns (Q, j)."""
+        j = x.shape[1]
+        bucket = self.bucket_for(j)
+        if j < bucket:
+            pad = jnp.zeros((x.shape[0], bucket - j), x.dtype)
+            x = jnp.concatenate([x, pad], axis=1)
+        weights, o_last = self._device_weights
+        out = self._executable(bucket, x.dtype)(
+            weights, o_last, self._feat_params, x
+        )
+        return out[:, :j] if j < bucket else out
+
+    def forward(self, x) -> Array:
+        """Logits ``O_L y_L`` for column-stacked requests ``x``:
+        (P, J) -> (Q, J); a single sample may arrive as (P,)."""
+        x = jnp.asarray(x)
+        if x.ndim == 1:
+            x = x[:, None]
+        if x.ndim != 2:
+            raise ValueError(
+                f"requests are column-stacked (P, J) arrays, got shape "
+                f"{tuple(x.shape)}"
+            )
+        self._materialize_features(x.shape[0])
+        expect = self.request_dim
+        if expect is not None and x.shape[0] != expect:
+            raise ValueError(
+                f"request has {x.shape[0]} feature rows, engine serves "
+                f"{expect} ({self.artifact.describe()})"
+            )
+        j = x.shape[1]
+        if j <= self.max_batch:
+            return self._forward_bucket(x)
+        outs, start = [], 0
+        for size in self._chunks(j):
+            outs.append(self._forward_bucket(x[:, start:start + size]))
+            start += size
+        return jnp.concatenate(outs, axis=1)
+
+    __call__ = forward
+
+    def classify(self, x) -> Array:
+        """argmax labels for column-stacked requests."""
+        return jnp.argmax(self.forward(x), axis=0)

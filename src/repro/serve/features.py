@@ -1,0 +1,130 @@
+"""Frozen feature extractors for the serving path.
+
+The dSSFN readout is a convex problem over *whatever features it is
+given* — the paper trains on raw inputs, but any frozen map phi(x) works
+and the centralized-equivalence argument is unchanged (phi is applied
+worker-locally before the solve).  At serve time the artifact records
+the extractor SPEC (a string, fully deterministic given its seed), so a
+request carries raw inputs and the engine reproduces the exact training
+featurization in front of the stack.
+
+Spec grammar (``parse_features``)::
+
+    identity              raw inputs straight through (the default; also
+                          spelled None)
+    rff:D[:seed]          D random Fourier features
+                          sqrt(2/D) * cos(W x + b), W ~ N(0, 1),
+                          b ~ U[0, 2*pi), seeded
+    relu:D[:seed]         D-dim frozen random ReLU projection
+                          relu(W x), W ~ N(0, 1/sqrt(P))
+
+Extractors are column-wise maps on column-stacked ``(P, J)`` inputs —
+each output column depends only on its input column, which is what makes
+the serving engine's shape-bucketed padding bit-exact through them.
+
+Weights are materialized lazily once the input dimension is known
+(:meth:`FeatureExtractor.materialize`) and are pure functions of
+``(spec, input_dim)``, so train-side and serve-side materializations are
+bit-identical.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_KINDS = ("identity", "rff", "relu")
+
+
+@dataclass
+class FeatureExtractor:
+    """A frozen, seeded, column-wise feature map ``(P, J) -> (D, J)``."""
+
+    kind: str            # one of _KINDS
+    dim: int = 0         # D; 0 for identity
+    seed: int = 0
+    #: Materialized parameters (None until the input dim is known; the
+    #: identity extractor never materializes anything).
+    params: tuple[Array, ...] | None = field(default=None, repr=False)
+    input_dim: int | None = field(default=None, repr=False)
+
+    def describe(self) -> str:
+        if self.kind == "identity":
+            return "identity"
+        return f"{self.kind}:{self.dim}:{self.seed}"
+
+    def output_dim(self, input_dim: int) -> int:
+        return input_dim if self.kind == "identity" else self.dim
+
+    def materialize(self, input_dim: int) -> "FeatureExtractor":
+        """Bind this extractor to an input dimension, drawing its frozen
+        weights.  Deterministic in (kind, dim, seed, input_dim)."""
+        if self.kind == "identity":
+            self.input_dim = input_dim
+            return self
+        if self.input_dim is not None and self.input_dim != input_dim:
+            raise ValueError(
+                f"extractor {self.describe()} materialized for input_dim="
+                f"{self.input_dim}, got {input_dim}"
+            )
+        if self.params is None:
+            key = jax.random.PRNGKey(self.seed)
+            kw, kb = jax.random.split(key)
+            if self.kind == "rff":
+                w = jax.random.normal(kw, (self.dim, input_dim), jnp.float32)
+                b = jax.random.uniform(
+                    kb, (self.dim, 1), jnp.float32, 0.0, 2.0 * jnp.pi
+                )
+                self.params = (w, b)
+            else:  # relu
+                w = jax.random.normal(
+                    kw, (self.dim, input_dim), jnp.float32
+                ) / jnp.sqrt(jnp.float32(input_dim))
+                self.params = (w,)
+            self.input_dim = input_dim
+        return self
+
+    def __call__(self, x: Array) -> Array:
+        """Apply to column-stacked ``(P, J)`` inputs (trace-safe: pure
+        jnp ops over the materialized frozen weights)."""
+        if self.kind == "identity":
+            return x
+        if self.params is None:
+            self.materialize(x.shape[0])
+        if self.kind == "rff":
+            w, b = self.params
+            return jnp.sqrt(2.0 / self.dim) * jnp.cos(w @ x + b)
+        (w,) = self.params
+        return jax.nn.relu(w @ x)
+
+
+def parse_features(spec: str | None) -> FeatureExtractor | None:
+    """``identity | rff:D[:seed] | relu:D[:seed]`` -> extractor.
+
+    None and ``"identity"`` both mean raw inputs (returned as None so
+    callers can treat "no extractor" uniformly).
+    """
+    if spec is None or spec == "identity":
+        return None
+    head, _, rest = spec.partition(":")
+    if head not in _KINDS:
+        raise ValueError(
+            f"unknown feature spec {spec!r}; grammar: identity | "
+            "rff:D[:seed] | relu:D[:seed]"
+        )
+    parts = rest.split(":") if rest else []
+    if not parts or not parts[0]:
+        raise ValueError(f"feature spec {spec!r} is missing its dimension D")
+    try:
+        dim = int(parts[0])
+        seed = int(parts[1]) if len(parts) > 1 else 0
+    except ValueError as e:
+        raise ValueError(f"bad feature spec {spec!r}: {e}") from e
+    if dim < 1:
+        raise ValueError(f"feature spec {spec!r}: D must be >= 1")
+    if len(parts) > 2:
+        raise ValueError(f"feature spec {spec!r} has trailing segments")
+    return FeatureExtractor(kind=head, dim=dim, seed=seed)

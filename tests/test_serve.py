@@ -1,0 +1,528 @@
+"""dSSFN serving: export/load round-trips, corruption rejection,
+centralized-equivalence serving parity, batching invariance, and
+compile-count contracts.
+
+The serving PR's acceptance criteria as tests:
+
+- an exported artifact loads back bit-exactly and survives the same
+  corruption drills the checkpoint store does (``is_valid_artifact``);
+- ``ServeEngine`` forward is BIT-IDENTICAL (f32) to the training-time
+  propagate path (``ssfn.predict``) on the same inputs, for stacks
+  trained on both the vmap ``SimulatedBackend`` and the shard_map
+  ``MeshBackend`` — the serving half of the paper's centralized
+  equivalence;
+- padded, bucketed, and micro-batched execution return the unbatched
+  forward bit for bit (every op is column-wise, so pad columns cannot
+  perturb real ones);
+- N requests across 2 buckets cost exactly 2 lowerings; repeats are
+  cache hits (the ConsensusBackend executable-cache contract, ported).
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import dssfn
+from repro.core import ssfn
+from repro.serve import (
+    ArtifactCorruptError,
+    MicroBatcher,
+    ServeEngine,
+    export_artifact,
+    export_from_checkpoint,
+    is_valid_artifact,
+    load_artifact,
+    parse_features,
+)
+from repro.serve.export import MANIFEST_NAME, WEIGHTS_NAME
+
+
+def _data(key, m=4, p=8, q=3, jm=16):
+    kx, kt = jax.random.split(key)
+    xw = jax.random.normal(kx, (m, p, jm))
+    labels = jax.random.randint(kt, (m, jm), 0, q)
+    tw = jax.nn.one_hot(labels, q).transpose(0, 2, 1)
+    return xw, tw
+
+
+def _cfg(**kw):
+    defaults = dict(
+        input_dim=8, num_classes=3, num_layers=2, hidden=20, admm_iters=30
+    )
+    defaults.update(kw)
+    return ssfn.SSFNConfig(**defaults)
+
+
+def _train(backend="simulated", *, seed=0, **cfg_kw):
+    xw, tw = _data(jax.random.PRNGKey(seed))
+    spec = dssfn.TrainSpec(cfg=_cfg(**cfg_kw), backend=backend, workers=4)
+    return dssfn.train(spec, xw, tw, jax.random.PRNGKey(seed + 1))
+
+
+@pytest.fixture(scope="module")
+def trained():
+    return _train()
+
+
+@pytest.fixture(scope="module")
+def artifact_dir(trained, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("serve") / "stack")
+    export_artifact(path, trained)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Export / load round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_export_load_roundtrip_bit_exact(trained, artifact_dir):
+    art = load_artifact(artifact_dir)
+    assert art.num_classes == 3
+    assert art.input_dim == 8
+    assert art.num_layers == 2
+    assert art.features is None
+    for a, b in zip(art.params.o, trained.params.o):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(art.params.r, trained.params.r):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_export_accepts_params_and_result(trained, tmp_path):
+    p1, p2 = str(tmp_path / "a"), str(tmp_path / "b")
+    export_artifact(p1, trained)          # TrainResult (has .params)
+    export_artifact(p2, trained.params)   # bare SSFNParams
+    a1, a2 = load_artifact(p1), load_artifact(p2)
+    for x, y in zip(a1.params.o, a2.params.o):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_export_rejects_non_params(tmp_path):
+    with pytest.raises(TypeError, match="SSFNParams"):
+        export_artifact(str(tmp_path / "bad"), {"o": [], "r": []})
+
+
+def test_export_validates_feature_spec_eagerly(trained, tmp_path):
+    with pytest.raises(ValueError, match="feature spec"):
+        export_artifact(str(tmp_path / "bad"), trained, features="rff")
+    assert not os.path.exists(str(tmp_path / "bad"))
+
+
+def test_export_from_checkpoint_matches_direct_export(tmp_path):
+    ck = str(tmp_path / "ckpt")
+    result = _train()
+    xw, tw = _data(jax.random.PRNGKey(0))
+    spec = dssfn.TrainSpec(
+        cfg=_cfg(), backend="simulated", workers=4,
+        checkpoint_dir=ck, checkpoint_every=1,
+    )
+    result = dssfn.train(spec, xw, tw, jax.random.PRNGKey(1))
+    path = str(tmp_path / "art")
+    export_from_checkpoint(ck, path)
+    art = load_artifact(path)
+    for a, b in zip(art.params.o, result.params.o):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(art.params.r, result.params.r):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_export_from_missing_checkpoint_raises(tmp_path):
+    with pytest.raises(ArtifactCorruptError):
+        export_from_checkpoint(str(tmp_path / "nope"), str(tmp_path / "art"))
+
+
+# ---------------------------------------------------------------------------
+# Corruption drills (mirrors the PR-7 checkpoint hardening)
+# ---------------------------------------------------------------------------
+
+
+def _copy_artifact(src, dst):
+    os.makedirs(dst, exist_ok=True)
+    for name in (MANIFEST_NAME, WEIGHTS_NAME):
+        with open(os.path.join(src, name), "rb") as f:
+            blob = f.read()
+        with open(os.path.join(dst, name), "wb") as f:
+            f.write(blob)
+    return dst
+
+
+def test_valid_artifact_is_valid(artifact_dir):
+    assert is_valid_artifact(artifact_dir)
+
+
+def test_missing_dir_invalid(tmp_path):
+    assert not is_valid_artifact(str(tmp_path / "nothing"))
+    with pytest.raises(ArtifactCorruptError):
+        load_artifact(str(tmp_path / "nothing"))
+
+
+def test_missing_manifest_invalid(artifact_dir, tmp_path):
+    bad = _copy_artifact(artifact_dir, str(tmp_path / "no_manifest"))
+    os.remove(os.path.join(bad, MANIFEST_NAME))
+    assert not is_valid_artifact(bad)
+
+
+def test_missing_weights_invalid(artifact_dir, tmp_path):
+    bad = _copy_artifact(artifact_dir, str(tmp_path / "no_weights"))
+    os.remove(os.path.join(bad, WEIGHTS_NAME))
+    assert not is_valid_artifact(bad)
+    with pytest.raises(ArtifactCorruptError):
+        load_artifact(bad)
+
+
+def test_truncated_weights_invalid(artifact_dir, tmp_path):
+    bad = _copy_artifact(artifact_dir, str(tmp_path / "truncated"))
+    wpath = os.path.join(bad, WEIGHTS_NAME)
+    blob = open(wpath, "rb").read()
+    with open(wpath, "wb") as f:
+        f.write(blob[: len(blob) // 2])
+    assert not is_valid_artifact(bad)
+
+
+def test_garbage_manifest_invalid(artifact_dir, tmp_path):
+    bad = _copy_artifact(artifact_dir, str(tmp_path / "garbage"))
+    with open(os.path.join(bad, MANIFEST_NAME), "w") as f:
+        f.write("{not json")
+    assert not is_valid_artifact(bad)
+
+
+def test_future_version_invalid(artifact_dir, tmp_path):
+    bad = _copy_artifact(artifact_dir, str(tmp_path / "future"))
+    mpath = os.path.join(bad, MANIFEST_NAME)
+    manifest = json.load(open(mpath))
+    manifest["version"] = 999
+    json.dump(manifest, open(mpath, "w"))
+    assert not is_valid_artifact(bad)
+    with pytest.raises(ArtifactCorruptError, match="version"):
+        load_artifact(bad)
+
+
+def test_manifest_weights_mismatch_invalid(artifact_dir, tmp_path):
+    bad = _copy_artifact(artifact_dir, str(tmp_path / "mismatch"))
+    mpath = os.path.join(bad, MANIFEST_NAME)
+    manifest = json.load(open(mpath))
+    manifest["num_classes"] = manifest["num_classes"] + 1
+    json.dump(manifest, open(mpath, "w"))
+    assert not is_valid_artifact(bad)
+
+
+def test_engine_refuses_corrupt_artifact(artifact_dir, tmp_path):
+    bad = _copy_artifact(artifact_dir, str(tmp_path / "engine_corrupt"))
+    os.remove(os.path.join(bad, WEIGHTS_NAME))
+    with pytest.raises(ArtifactCorruptError):
+        ServeEngine(bad)
+
+
+# ---------------------------------------------------------------------------
+# Centralized-equivalence serving parity (both backends)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["simulated", "mesh"])
+def test_engine_bit_exact_vs_training_propagate(backend, tmp_path):
+    """ServeEngine forward == ssfn.predict bit for bit (f32), for stacks
+    trained on both consensus backends.  J == bucket size, so no padding
+    is involved and the comparison is strict.  The mesh run uses a
+    1-worker mesh (tests are single-device; the shard_map program is the
+    same one an M-device mesh lowers)."""
+    if backend == "mesh":
+        from repro.core.backend import MeshBackend
+        from repro.launch.mesh import make_worker_mesh
+
+        xw, tw = _data(jax.random.PRNGKey(0), m=1, jm=64)
+        spec = dssfn.TrainSpec(
+            cfg=_cfg(), backend=MeshBackend(make_worker_mesh(1))
+        )
+        result = dssfn.train(spec, xw, tw, jax.random.PRNGKey(1))
+    else:
+        result = _train(backend)
+    path = str(tmp_path / "stack")
+    export_artifact(path, result)
+    engine = ServeEngine(path, buckets=(16,))
+    x = _data(jax.random.PRNGKey(0))[0]          # (m, p, jm)
+    x = np.asarray(x.transpose(1, 0, 2).reshape(8, -1))[:, :16]
+    ref = ssfn.predict(result.params, jnp.asarray(x), 3)
+    out = engine.forward(x)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+    assert np.array_equal(
+        np.asarray(engine.classify(x)), np.asarray(jnp.argmax(ref, axis=0))
+    )
+
+
+def test_reload_hot_swap_no_recompile(artifact_dir, tmp_path):
+    engine = ServeEngine(artifact_dir, buckets=(4, 16))
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(5), (8, 16)))
+    _ = engine.forward(x)
+    lowerings = engine.lowerings
+
+    other = _train(seed=7)
+    path = str(tmp_path / "newer")
+    export_artifact(path, other)
+    engine.reload(path)
+    out = engine.forward(x)
+    assert engine.lowerings == lowerings, "reload must not recompile"
+    ref = ssfn.predict(other.params, jnp.asarray(x), 3)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_reload_rejects_shape_change(artifact_dir, tmp_path):
+    engine = ServeEngine(artifact_dir)
+    other = _train(hidden=24)
+    path = str(tmp_path / "wider")
+    export_artifact(path, other)
+    with pytest.raises(ValueError, match="mismatch"):
+        engine.reload(path)
+
+
+def test_engine_rejects_wrong_input_dim(artifact_dir):
+    engine = ServeEngine(artifact_dir)
+    with pytest.raises(ValueError, match="feature rows"):
+        engine.forward(np.zeros((9, 4), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Batching invariance + compile counts
+# ---------------------------------------------------------------------------
+
+
+def test_padded_bucketed_execution_bit_exact(artifact_dir):
+    """A J=5 request padded into the 8-bucket returns exactly the first
+    5 columns of the same data served as a full 8-batch: zero pad
+    columns cannot perturb real ones (column-wise forward)."""
+    engine = ServeEngine(artifact_dir, buckets=(8,))
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (8, 8)))
+    full = np.asarray(engine.forward(x))
+    padded = np.asarray(engine.forward(x[:, :5]))
+    assert np.array_equal(padded, full[:, :5])
+    assert engine.lowerings == 1  # both sizes share the one 8-bucket
+
+
+def test_single_sample_vs_batch_bit_exact(artifact_dir):
+    engine = ServeEngine(artifact_dir, buckets=(8,))
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(3), (8, 8)))
+    full = np.asarray(engine.forward(x))
+    for i in range(8):
+        one = np.asarray(engine.forward(x[:, i]))  # (P,) single sample
+        assert np.array_equal(one[:, 0], full[:, i])
+    assert engine.lowerings == 1
+
+
+def test_chunked_oversize_batch_bit_exact(artifact_dir):
+    """J > max bucket chunks into max-bucket pieces; the concatenated
+    result equals serving each chunk alone."""
+    engine = ServeEngine(artifact_dir, buckets=(4,))
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(4), (8, 10)))
+    out = np.asarray(engine.forward(x))
+    assert out.shape == (3, 10)
+    by_hand = np.concatenate(
+        [
+            np.asarray(engine.forward(x[:, 0:4])),
+            np.asarray(engine.forward(x[:, 4:8])),
+            np.asarray(engine.forward(x[:, 8:10])),
+        ],
+        axis=1,
+    )
+    assert np.array_equal(out, by_hand)
+    assert engine.lowerings == 1  # every chunk pads into the one bucket
+
+
+def test_two_buckets_cost_exactly_two_lowerings(artifact_dir):
+    """N requests spread over 2 buckets lower exactly twice; repeats are
+    dispatch-cache hits, never re-traces."""
+    engine = ServeEngine(artifact_dir, buckets=(2, 16))
+    rng = np.random.default_rng(0)
+    for j in (1, 2, 1, 5, 16, 3, 2, 9, 16, 1):
+        engine.forward(rng.standard_normal((8, j)).astype(np.float32))
+    info = engine.cache_info()
+    assert info["lowerings"] == 2, info
+    assert sorted(info["buckets"]) == [2, 16]
+    assert info["cache_hits"] == 8, info
+
+
+def test_distinct_dtypes_get_distinct_executables(artifact_dir):
+    engine = ServeEngine(artifact_dir, buckets=(8,))
+    x32 = np.zeros((8, 8), np.float32)
+    engine.forward(x32)
+    engine.forward(x32.astype(np.float16))
+    assert engine.lowerings == 2  # same bucket, two wire dtypes
+
+
+def test_micro_batched_results_bit_exact(artifact_dir):
+    """Requests coalesced by the batcher scatter back the same bits as
+    serving the concatenated batch directly."""
+    engine = ServeEngine(artifact_dir, buckets=(8,))
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(6), (8, 8)))
+    full = np.asarray(engine.forward(x))
+    batcher = MicroBatcher(engine, max_batch=8, max_wait_us=1e9)
+    handles = [batcher.submit(x[:, i:i + 1]) for i in range(8)]
+    assert all(h.done() for h in handles)  # 8 samples == max_batch: flushed
+    got = np.concatenate([np.asarray(h.result()) for h in handles], axis=1)
+    assert np.array_equal(got, full)
+    assert engine.lowerings == 1
+
+
+# ---------------------------------------------------------------------------
+# Micro-batcher admission
+# ---------------------------------------------------------------------------
+
+
+def test_batcher_max_batch_admission(artifact_dir):
+    engine = ServeEngine(artifact_dir, buckets=(4,))
+    batcher = MicroBatcher(engine, max_batch=4, max_wait_us=1e9)
+    hs = [batcher.submit(np.zeros((8, 1), np.float32)) for _ in range(3)]
+    assert not any(h.done() for h in hs)
+    assert batcher.pending() == 3
+    h4 = batcher.submit(np.zeros((8, 1), np.float32))  # 4th sample: flush
+    assert all(h.done() for h in hs) and h4.done()
+    assert batcher.pending() == 0
+    assert batcher.stats["batches"] == 1
+
+
+def test_batcher_zero_wait_flushes_every_submit(artifact_dir):
+    engine = ServeEngine(artifact_dir, buckets=(4,))
+    batcher = MicroBatcher(engine, max_batch=4, max_wait_us=0.0)
+    for _ in range(3):
+        h = batcher.submit(np.zeros((8, 1), np.float32))
+        assert h.done()
+    assert batcher.stats["batches"] == 3
+
+
+def test_batcher_flush_drains_tail(artifact_dir):
+    engine = ServeEngine(artifact_dir, buckets=(4,))
+    batcher = MicroBatcher(engine, max_batch=4, max_wait_us=1e9)
+    h = batcher.submit(np.zeros((8, 1), np.float32))
+    assert not h.done()
+    with pytest.raises(RuntimeError, match="not served"):
+        h.result()
+    assert batcher.flush() == 1
+    assert h.done() and h.latency_s >= 0.0
+    assert batcher.flush() == 0  # empty queue is a no-op
+
+
+def test_batcher_packs_fifo_and_splits_oversize_queue(artifact_dir):
+    engine = ServeEngine(artifact_dir, buckets=(4,))
+    batcher = MicroBatcher(engine, max_batch=4, max_wait_us=1e9)
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(8), (8, 3)))
+    h3 = batcher.submit(x)                              # 3 samples queued
+    h2 = batcher.submit(x[:, :2])                       # 5 >= 4: flush
+    assert h3.done() and h2.done()
+    # 3+2 does not fit one 4-sample batch: FIFO split into [3], [2].
+    assert batcher.stats["batches"] == 2
+    ref = np.asarray(engine.forward(x))
+    assert np.array_equal(np.asarray(h3.result()), ref)
+    assert np.array_equal(np.asarray(h2.result()), ref[:, :2])
+
+
+def test_batcher_rejects_bad_config(artifact_dir):
+    engine = ServeEngine(artifact_dir)
+    with pytest.raises(ValueError, match="max_batch"):
+        MicroBatcher(engine, max_batch=0)
+    with pytest.raises(ValueError, match="max_wait_us"):
+        MicroBatcher(engine, max_wait_us=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# Feature extractors
+# ---------------------------------------------------------------------------
+
+
+def test_feature_spec_grammar():
+    assert parse_features(None) is None
+    assert parse_features("identity") is None
+    ex = parse_features("rff:64:3")
+    assert (ex.kind, ex.dim, ex.seed) == ("rff", 64, 3)
+    assert parse_features("relu:32").seed == 0
+    for bad in ("rff", "rff:", "rff:0", "rff:8:1:2", "fourier:8"):
+        with pytest.raises(ValueError):
+            parse_features(bad)
+
+
+def test_feature_extractor_deterministic_and_column_wise():
+    ex1 = parse_features("rff:16:5").materialize(8)
+    ex2 = parse_features("rff:16:5").materialize(8)
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 6))
+    a, b = np.asarray(ex1(x)), np.asarray(ex2(x))
+    assert np.array_equal(a, b)
+    # Column-wise AT THE SAME PROGRAM SHAPE (the engine's padding
+    # invariant): replacing the other columns with zeros cannot perturb
+    # column 2.  (A different-shape program may reassociate the matmul,
+    # so cross-shape bitwise identity is deliberately NOT claimed.)
+    padded = np.zeros_like(np.asarray(x))
+    padded[:, 2] = np.asarray(x)[:, 2]
+    assert np.array_equal(np.asarray(ex1(jnp.asarray(padded)))[:, 2], a[:, 2])
+
+
+def test_artifact_with_features_served_on_raw_inputs(tmp_path):
+    """Train on frozen rff features, export with the spec recorded, and
+    serve RAW inputs — the engine reproduces the featurization, bit-
+    identical to applying it by hand before the training-time predict."""
+    q, p_raw, d = 3, 8, 12
+    ex = parse_features(f"rff:{d}:9").materialize(p_raw)
+    xw_raw, tw = _data(jax.random.PRNGKey(11))
+    phi = ex(xw_raw.transpose(1, 0, 2).reshape(p_raw, -1))     # (d, m*jm)
+    phi_w = phi.reshape(d, 4, 16).transpose(1, 0, 2)
+    spec = dssfn.TrainSpec(
+        cfg=_cfg(input_dim=d, hidden=2 * q + 20),
+        backend="simulated", workers=4,
+    )
+    result = dssfn.train(spec, phi_w, tw, jax.random.PRNGKey(12))
+
+    path = str(tmp_path / "feat_stack")
+    export_artifact(path, result, features=f"rff:{d}:9")
+    art = load_artifact(path)
+    assert art.features == f"rff:{d}:9"
+
+    engine = ServeEngine(path, buckets=(16,))
+    x_raw = np.asarray(xw_raw.transpose(1, 0, 2).reshape(p_raw, -1))[:, :16]
+    out = engine.forward(x_raw)
+    ref = ssfn.predict(result.params, ex(jnp.asarray(x_raw)), q)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_feature_dim_mismatch_rejected(trained, tmp_path):
+    """An extractor whose output dim disagrees with the stack input dim
+    fails at first request, not silently."""
+    path = str(tmp_path / "bad_feat")
+    export_artifact(path, trained, features="rff:9")  # stack expects 8
+    engine = ServeEngine(path)
+    with pytest.raises(ValueError, match="features"):
+        engine.forward(np.zeros((8, 2), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# CLI round-trip (in-process)
+# ---------------------------------------------------------------------------
+
+
+def test_train_export_serve_cli_roundtrip(tmp_path):
+    from repro.launch import serve_dssfn, train_dssfn
+
+    art = str(tmp_path / "cli_stack")
+    out = train_dssfn.main([
+        "--workers", "4", "--backend", "simulated", "--layers", "1",
+        "--hidden", "20", "--admm-iters", "20", "--classes", "3",
+        "--input-dim", "8", "--train", "64", "--test", "32",
+        "--export-artifact", art, "--no-host-mesh",
+    ])
+    assert out["export"]["path"] == art
+    assert is_valid_artifact(art)
+
+    res = serve_dssfn.main([
+        "--artifact", art, "--requests", "12", "--request-size", "1",
+        "--batch-bucket", "1,4", "--max-wait-us", "0",
+    ])
+    assert res["requests"] == 12
+    assert res["compile"]["lowerings"] <= 2
+    assert res["latency_ms"]["p99"] >= res["latency_ms"]["p50"] >= 0.0
+
+
+def test_serve_cli_refuses_feature_mismatch(tmp_path, trained):
+    from repro.launch import serve_dssfn
+
+    path = str(tmp_path / "stack")
+    export_artifact(path, trained)
+    with pytest.raises(SystemExit, match="refusing to serve"):
+        serve_dssfn.main(["--artifact", path, "--features", "rff:8"])

@@ -207,7 +207,7 @@ def test_lowering_stats_reports_compiled_program():
     z0 = jnp.zeros((3, 16))
 
     def worker(y_m, t_m, z0r):
-        a, chol = admm._worker_stats_local(y_m, t_m, 1e-2, False)
+        a, chol, _ = admm._worker_stats_local(y_m, t_m, 1e-2, False)
         return admm.worker_admm_iterations(
             backend, a, chol, y_m, t_m, z0r,
             mu=1e-2, eps_radius=6.0, num_iters=10, trace_every=0,
