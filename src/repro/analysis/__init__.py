@@ -1,0 +1,57 @@
+"""repro.analysis — the static SPMD contract checker (spmdlint).
+
+Lowers (never executes) consensus programs and checks them against the
+contracts the code declares: eq.-15 wire budgets (``wire``), executable
+cache-key completeness (``retrace``), accumulation dtypes and cholesky
+guarding (``numerics``), exchange-schedule algebra (``schedule``), and
+trace-safety source rules (``source``).  Every violation is a
+structured :class:`LintFinding`; ``repro.launch.lint_dssfn`` is the CLI
+and CI entry point, ``grammar.ALL_GRAMMAR`` the spec table it sweeps.
+"""
+from .findings import LintFinding, findings_to_json, render_report
+from .grammar import ALL_GRAMMAR, MALFORMED_SPECS, GrammarEntry, grammar_specs
+from .numerics import (
+    lint_backend_program,
+    lint_jax_callable,
+    lint_stablehlo_text,
+)
+from .retrace import (
+    CACHE_INFO_KEYS,
+    check_backend_retrace,
+    check_cache_info_schema,
+    check_policy_cache_key,
+    perturb_policy,
+)
+from .schedule import check_policy_schedules, check_schedule, schedule_matrix
+from .source import lint_source_text, lint_source_tree
+from .wire import (
+    check_wire_contract,
+    expected_mix_collectives,
+    hot_program_texts,
+)
+
+__all__ = [
+    "ALL_GRAMMAR",
+    "CACHE_INFO_KEYS",
+    "GrammarEntry",
+    "LintFinding",
+    "MALFORMED_SPECS",
+    "check_backend_retrace",
+    "check_cache_info_schema",
+    "check_policy_cache_key",
+    "check_policy_schedules",
+    "check_schedule",
+    "check_wire_contract",
+    "expected_mix_collectives",
+    "findings_to_json",
+    "grammar_specs",
+    "hot_program_texts",
+    "lint_backend_program",
+    "lint_jax_callable",
+    "lint_stablehlo_text",
+    "lint_source_text",
+    "lint_source_tree",
+    "perturb_policy",
+    "render_report",
+    "schedule_matrix",
+]

@@ -1,0 +1,133 @@
+"""Numerics lint over pre-optimization StableHLO text.
+
+Why StableHLO and not compiled HLO: the CPU backend auto-upcasts bf16 /
+f16 ``dot`` and ``add`` to f32 during optimization (converts inserted
+around every op), so a program that genuinely accumulates in half
+precision is invisible in ``compiled.as_text()`` on the host — the
+defect would only surface on accelerators.  The pre-optimization
+StableHLO (``jitted.lower(...).as_text()``) preserves the traced dtypes
+verbatim, which makes it the right surface for a static dtype check.
+
+Two rules:
+
+- **low-precision accumulation** (``numerics-accum``): an ``add`` /
+  ``dot_general`` / additive ``reduce`` whose RESULT is bf16/f16.  The
+  wire-format contract (PR 5) is "cast once onto the wire, accumulate in
+  f32" — a half-precision accumulate means a missing f32 convert on the
+  receive path.
+- **unguarded cholesky** (``numerics-cholesky``): the repo's sanctioned
+  factorization is ``admm.guarded_cholesky`` (escalating-jitter retry
+  loop), whose signature in StableHLO is a cholesky call INSIDE a
+  ``stablehlo.while`` region (the retry) next to the initial top-level
+  try.  A module that calls cholesky but never inside a while skipped
+  the guard and will propagate NaN factors on ill-conditioned Grams.
+"""
+from __future__ import annotations
+
+import re
+
+from .findings import LintFinding
+
+_TENSOR_RE = re.compile(r"tensor<([^>]*)>")
+_LOW_PRECISION = {"bf16", "f16"}
+
+#: StableHLO ops that ACCUMULATE (reassociate sums); pure data movement
+#: (convert, transpose, collective_permute, ...) may be any width.
+_ACCUM_OPS = ("stablehlo.add", "stablehlo.dot_general", "stablehlo.dot",
+              "stablehlo.convolution")
+
+_CHOLESKY_RE = re.compile(
+    r"call @cholesky|stablehlo\.cholesky|lapack_\w*potrf"
+)
+
+
+def _result_dtype(line: str) -> str | None:
+    """Element dtype of the line's result type — the LAST ``tensor<...>``
+    on a StableHLO op line (after ``->`` for function-typed ops)."""
+    types = _TENSOR_RE.findall(line)
+    if not types:
+        return None
+    return types[-1].rsplit("x", 1)[-1]
+
+
+def _is_accum_line(line: str) -> bool:
+    if any(op + " " in line or op + "(" in line for op in _ACCUM_OPS):
+        return True
+    # reduce is an accumulation only when its reducer is an add.
+    return "stablehlo.reduce" in line and "applies stablehlo.add" in line
+
+
+def lint_stablehlo_text(text: str, *, subject: str) -> list[LintFinding]:
+    findings: list[LintFinding] = []
+
+    # ---- region tracking: which lines sit inside a while body --------
+    # ``stablehlo.while`` is followed by its two regions (`cond { ... }
+    # do { ... }`); arm the next two opened braces as while regions.
+    region_stack: list[bool] = []
+    armed = 0
+    cholesky_sites: list[tuple[int, bool]] = []  # (lineno, in_while)
+
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        in_while = any(region_stack)
+        if _CHOLESKY_RE.search(line):
+            cholesky_sites.append((lineno, in_while))
+        if _is_accum_line(line):
+            dtype = _result_dtype(line)
+            if dtype in _LOW_PRECISION:
+                op = next(
+                    (o for o in _ACCUM_OPS if o in line), "stablehlo.reduce"
+                )
+                findings.append(LintFinding(
+                    check="numerics-accum",
+                    subject=subject,
+                    message=(
+                        f"{op} accumulates in {dtype} (line {lineno}); "
+                        "wire payloads must be accumulated in f32 — cast "
+                        "on the wire only, convert back before the add"
+                    ),
+                    details={"line": lineno, "op": op, "dtype": dtype,
+                             "text": line.strip()[:200]},
+                ))
+        if "stablehlo.while" in line:
+            armed = 2
+        for ch in line:
+            if ch == "{":
+                region_stack.append(armed > 0)
+                if armed > 0:
+                    armed -= 1
+            elif ch == "}" and region_stack:
+                region_stack.pop()
+
+    if cholesky_sites and not any(w for _, w in cholesky_sites):
+        findings.append(LintFinding(
+            check="numerics-cholesky",
+            subject=subject,
+            message=(
+                "cholesky factorization outside the guarded path: no "
+                "cholesky call sits inside a while region, so this is "
+                "not admm.guarded_cholesky's escalating-jitter retry — "
+                "a non-PD Gram returns NaN factors unchecked"
+            ),
+            details={"sites": [ln for ln, _ in cholesky_sites]},
+        ))
+    return findings
+
+
+def lint_jax_callable(fn, *example_args, subject: str) -> list[LintFinding]:
+    """Trace ``fn`` (never execute it) and lint its StableHLO."""
+    import jax
+
+    text = jax.jit(fn).lower(*example_args).as_text()
+    return lint_stablehlo_text(text, subject=subject)
+
+
+def lint_backend_program(
+    backend, fn, *stacked_args, replicated=(), key=None, policy=None,
+    subject: str,
+) -> list[LintFinding]:
+    """Lint a worker program exactly as the backend would lower it
+    (vmap or shard_map wrapping included); shares the executable cache."""
+    texts = backend.lowering_texts(
+        fn, *stacked_args, replicated=replicated, key=key, policy=policy,
+    )
+    return lint_stablehlo_text(texts["stablehlo"], subject=subject)

@@ -1,0 +1,141 @@
+"""AST-level repo lint: trace-safety rules the type system can't see.
+
+Two rules, both aimed at "the cached SPMD program must be a pure
+function of the policy value":
+
+- **source-prng-seed**: ``jax.random.PRNGKey`` / ``jax.random.key``
+  must be seeded with a deterministic expression.  A seed drawn from
+  wall-clock time, ``os.urandom``, or the stateful ``random`` /
+  ``np.random`` generators makes the traced program (and with it the
+  paper's bit-reproducibility story) run-dependent.
+- **source-traced-branch**: inside a ``ConsensusPolicy.mix`` body, a
+  Python ``if``/``while`` on the traced arguments (``x``, ``state``)
+  is a trace-time branch on runtime data — it either crashes under
+  ``jit`` (ConcretizationTypeError) or silently bakes one branch into
+  the cached executable.  Branching on static config (``self.*``,
+  ``ctx.num_workers``) is fine; ``x is None`` identity checks are
+  structural, not value branches, and are exempt.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .findings import LintFinding
+
+#: Callables whose result must never seed a PRNG key.
+_NONDET_CALLS = {
+    "time", "time_ns", "monotonic", "perf_counter", "urandom",
+    "getrandbits", "randint", "random", "rand", "token_bytes",
+}
+
+
+def _call_name(node: ast.Call) -> str:
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def _is_prng_key_call(node: ast.Call) -> bool:
+    f = node.func
+    return (
+        isinstance(f, ast.Attribute)
+        and f.attr in ("PRNGKey", "key")
+        and isinstance(f.value, ast.Attribute)
+        and f.value.attr == "random"
+    )
+
+
+def _nondeterministic_seed(node: ast.Call) -> str | None:
+    if not node.args and not node.keywords:
+        return "no seed argument"
+    seed = node.args[0] if node.args else node.keywords[0].value
+    for sub in ast.walk(seed):
+        if isinstance(sub, ast.Call) and _call_name(sub) in _NONDET_CALLS:
+            return f"seed derives from {_call_name(sub)}()"
+    return None
+
+
+def _exempt_names(test: ast.expr) -> set[int]:
+    """ids of Name nodes used only in `X is None` / `X is not None`."""
+    exempt: set[int] = set()
+    for node in ast.walk(test):
+        if not isinstance(node, ast.Compare):
+            continue
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops) and all(
+            isinstance(c, ast.Constant) and c.value is None
+            for c in node.comparators
+        ):
+            for sub in [node.left, *node.comparators]:
+                if isinstance(sub, ast.Name):
+                    exempt.add(id(sub))
+    return exempt
+
+
+def _traced_branches(fn: ast.FunctionDef) -> list[tuple[int, str]]:
+    """(lineno, name) for every if/while on a traced mix argument."""
+    params = [a.arg for a in fn.args.args]
+    # def mix(self, x, state, ctx): positions 1 and 2 are traced data.
+    traced = set(params[1:3]) - {"self"}
+    out = []
+    for node in ast.walk(fn):
+        if not isinstance(node, (ast.If, ast.While)):
+            continue
+        exempt = _exempt_names(node.test)
+        for sub in ast.walk(node.test):
+            if (
+                isinstance(sub, ast.Name)
+                and sub.id in traced
+                and id(sub) not in exempt
+            ):
+                out.append((node.lineno, sub.id))
+    return out
+
+
+def lint_source_text(
+    text: str, *, filename: str
+) -> list[LintFinding]:
+    findings: list[LintFinding] = []
+    try:
+        tree = ast.parse(text, filename=filename)
+    except SyntaxError as e:
+        return [LintFinding(
+            check="source-syntax",
+            subject=f"{filename}:{e.lineno or 0}",
+            message=f"file does not parse: {e.msg}",
+        )]
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_prng_key_call(node):
+            why = _nondeterministic_seed(node)
+            if why:
+                findings.append(LintFinding(
+                    check="source-prng-seed",
+                    subject=f"{filename}:{node.lineno}",
+                    message=f"non-deterministic PRNG key: {why}",
+                ))
+        if isinstance(node, ast.FunctionDef) and node.name == "mix":
+            for lineno, name in _traced_branches(node):
+                findings.append(LintFinding(
+                    check="source-traced-branch",
+                    subject=f"{filename}:{lineno}",
+                    message=(
+                        f"Python branch on traced mix argument {name!r}: "
+                        "use lax.cond/jnp.where — a trace-time branch "
+                        "bakes one side into the cached executable"
+                    ),
+                ))
+    return findings
+
+
+def lint_source_tree(root: str | Path) -> list[LintFinding]:
+    root = Path(root)
+    findings: list[LintFinding] = []
+    for path in sorted(root.rglob("*.py")):
+        rel = str(path.relative_to(root.parent if root.is_dir() else root))
+        findings.extend(
+            lint_source_text(path.read_text(), filename=rel)
+        )
+    return findings

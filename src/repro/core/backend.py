@@ -311,7 +311,39 @@ class ConsensusBackend(abc.ABC):
         return {
             "collective_counts": analysis.collective_counts(),
             "collective_wire_bytes": analysis.collective_wire_bytes,
+            "collective_by_type": analysis.collective_by_type(),
             "flops": analysis.flops,
+        }
+
+    def lowering_texts(
+        self,
+        fn: Callable[..., Any],
+        *stacked_args: Array,
+        replicated: tuple = (),
+        key: Hashable | None = None,
+        donate: tuple[int, ...] = (),
+        policy: ConsensusPolicy | None = None,
+    ) -> dict:
+        """Lower the worker program WITHOUT running it and return both
+        program texts: ``{"stablehlo": ..., "hlo": ...}``.
+
+        ``stablehlo`` is the pre-optimization trace — traced dtypes
+        survive verbatim, which is what ``repro.analysis.numerics``
+        lints (the CPU compiler upcasts bf16/f16 arithmetic to f32, so
+        the compiled text cannot show a half-precision accumulate).
+        ``hlo`` is the compiled (post-SPMD) module the wire-budget
+        checker counts collectives in.  Shares the executable cache
+        with :meth:`run`/:meth:`lowering_stats`.
+        """
+        jitted = self._lookup_executable(
+            fn, stacked_args, replicated, key, donate, collective=True,
+            policy=policy,
+        )
+        args = tuple(self.shard_workers(a) for a in stacked_args)
+        lowered = jitted.lower(*args, *self._place_replicated(replicated))
+        return {
+            "stablehlo": lowered.as_text(),
+            "hlo": lowered.compile().as_text(),
         }
 
     def _count_trace(self) -> None:
@@ -320,10 +352,17 @@ class ConsensusBackend(abc.ABC):
         self.lowerings += 1
 
     def cache_info(self) -> dict:
+        """Executable-cache counters, in the normalized schema shared
+        with ``ServeEngine.cache_info`` (``repro.analysis.retrace``
+        drives both): ``entries``/``lowerings``/``cache_hits`` plus
+        ``keys``, the cache keys as repr strings (backend keys contain
+        functions and policy objects, so reprs are the JSON-safe form).
+        """
         return {
             "entries": len(self._exec_cache),
             "lowerings": self.lowerings,
             "cache_hits": self.cache_hits,
+            "keys": [repr(k) for k in self._exec_cache],
         }
 
     def _place_replicated(self, replicated: tuple) -> tuple:

@@ -77,6 +77,25 @@ def _type_bytes(type_str: str) -> int:
     return total
 
 
+def _max_shape_bytes(type_str: str) -> int:
+    """Largest single shape in a (possibly tuple) type.
+
+    Async collective ``*-start`` ops return a tuple carrying the operand
+    alias, the result buffer, and (on some backends) u32 context scalars
+    — summing the tuple double-counts the payload, so the payload is the
+    largest member."""
+    best = 0
+    for dtype, dims in _shapes_in(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        best = max(best, n * DTYPE_BYTES[dtype])
+    return best
+
+
 def _dims(type_str: str) -> list[int]:
     m = _SHAPE_RE.search(type_str)
     if not m:
@@ -253,12 +272,21 @@ def analyze_module(text: str) -> ModuleAnalysis:
                 out.flops += 2.0 * r * k * m_comp
             if comp in callee_set:
                 continue  # traffic/collectives counted at the call site
-            if opcode in _COLLECTIVES and "-done(" not in line:
-                rb = _type_bytes(type_str)
+            # Async collectives lower as `<op>-start` / `<op>-done`
+            # pairs; count the start (it names the payload) under the
+            # base opcode so overlapped collectives are never missed,
+            # and skip the matching done (it would double-count).
+            base_op = opcode[: -len("-start")] if opcode.endswith("-start") else opcode
+            if base_op in _COLLECTIVES and not opcode.endswith("-done"):
+                rb = (
+                    _max_shape_bytes(type_str)
+                    if opcode.endswith("-start")
+                    else _type_bytes(type_str)
+                )
                 if rb:
                     out.collectives.append(
                         CollectiveOp(
-                            op=opcode, computation=comp, result_bytes=rb,
+                            op=base_op, computation=comp, result_bytes=rb,
                             group_size=_group_size(line), multiplier=m_comp,
                         )
                     )

@@ -205,11 +205,16 @@ class ServeEngine:
         return jax.nn.relu(w @ x)
 
     def cache_info(self) -> dict:
+        """Executable-cache counters in the schema shared with
+        ``ConsensusBackend.cache_info`` (``entries``/``lowerings``/
+        ``cache_hits``/``keys`` — ``repro.analysis.retrace`` drives
+        both), plus the serve-specific ``buckets`` view."""
         return {
             "entries": len(self._exec_cache),
             "buckets": [k[0] for k in self._exec_cache],
             "lowerings": self.lowerings,
             "cache_hits": self.cache_hits,
+            "keys": [repr(k) for k in self._exec_cache],
         }
 
     def describe(self) -> str:

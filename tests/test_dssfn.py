@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro import dssfn
+from repro import analysis, dssfn
 from repro.core import layerwise, ssfn
 from repro.core.backend import SimulatedBackend
 from repro.core.policy import (
@@ -245,6 +245,42 @@ def test_parse_spec_round_trip(spec):
     assert clone == pol and hash(clone) == hash(pol)
     # The same string drives the facade.
     assert dssfn.TrainSpec(cfg=_cfg(), policy=spec).resolve_policy() == pol
+
+
+# Satellite: the linter's grammar table and the parser must agree in
+# BOTH directions — every ALL_GRAMMAR entry parses+validates, and every
+# MALFORMED_SPECS entry is rejected with its documented hint.  (The
+# `--all-grammar` sweep in repro.launch.lint_dssfn runs off the same
+# table, so drift here is drift in what CI statically checks.)
+
+@pytest.mark.parametrize(
+    "bad,fragment",
+    [pytest.param(s, f, id=s) for s, f in analysis.MALFORMED_SPECS],
+)
+def test_malformed_spec_rejected_with_hint(bad, fragment):
+    import re
+
+    # Some rejections (e.g. time-varying StaleMixing) fire in
+    # validate(M), not at parse time — round-trip both stages.
+    with pytest.raises((ValueError, TypeError), match=re.escape(fragment)):
+        dssfn.parse_spec(bad).validate(8)
+
+
+def test_all_grammar_entries_resolve_through_facade():
+    for entry in analysis.ALL_GRAMMAR:
+        pol = dssfn.parse_spec(entry.spec)
+        pol.validate(8)
+        spec = dssfn.TrainSpec(cfg=_cfg(), workers=8, policy=entry.spec)
+        assert spec.resolve_policy() == pol, entry.spec
+
+
+def test_unknown_mode_error_quotes_grammar():
+    with pytest.raises(ValueError) as ei:
+        dssfn.parse_spec("bogus")
+    msg = str(ei.value)
+    # The rejection quotes the supported grammar, not just the bad name.
+    for mode in ("gossip", "quantized", "stale", "async"):
+        assert mode in msg
 
 
 def test_parse_spec_error_paths():

@@ -136,6 +136,35 @@ def test_hlo_analysis_shape_parsing():
     assert _type_bytes("pred[]") == 1
 
 
+def test_hlo_analysis_async_collective_forms():
+    """`*-start` ops count under the base opcode with the payload (not
+    the whole alias+context tuple); the matching `*-done` is skipped so
+    an overlapped collective is counted exactly once."""
+    from repro.launch.hlo_analysis import analyze_module
+
+    text = """\
+HloModule async_probe
+
+ENTRY %main (p0: f32[4,8]) -> f32[4,8] {
+  %p0 = f32[4,8]{1,0} parameter(0)
+  %ars = (f32[4,8], f32[4,8]) all-reduce-start(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ard = f32[4,8]{1,0} all-reduce-done(%ars)
+  %cps = (f32[4,8], f32[4,8], u32[], u32[]) collective-permute-start(%ard), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  %cpd = f32[4,8]{1,0} collective-permute-done(%cps)
+  ROOT %sync = f32[4,8]{1,0} all-reduce(%cpd), replica_groups={{0,1,2,3}}, to_apply=%add
+}
+"""
+    a = analyze_module(text)
+    assert a.collective_counts() == {"all-reduce": 2, "collective-permute": 1}
+    payload = 4 * 8 * 4
+    # Start tuples carry operand alias + u32 context scalars: the payload
+    # is the largest member, never the tuple sum.
+    assert [o.result_bytes for o in a.collectives] == [payload] * 3
+    by_type = a.collective_by_type()
+    assert by_type["collective-permute"] == payload
+    assert by_type["all-reduce"] == 2 * (2.0 * payload * 3 / 4)
+
+
 # -------------------------------------------------------------- sharding
 
 def test_shard_noop_without_mesh():

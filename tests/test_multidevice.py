@@ -290,13 +290,17 @@ def test_compressed_gossip_and_hot_path_on_8_devices():
                     / jnp.linalg.norm(serial.o_star))
         assert rel < 1e-5, (topo, rel)
 
-    # Hot path: bit-identical o_star, collective-free lowering.
+    # Hot path: bit-identical o_star, collective-free lowering.  The
+    # expected counts come from the spmdlint wire model (repro.analysis)
+    # — the same model `lint_dssfn --all-grammar` checks in CI.
+    from repro import analysis
+
     K = 10
     z0 = jnp.zeros((q, n))
     def probe(policy, trace_every):
         backend = MeshBackend(wmesh, policy=policy)
         def worker(y_m, t_m, z0r):
-            a, chol = admm._worker_stats_local(y_m, t_m, 1e-2, False)
+            a, chol, _ = admm._worker_stats_local(y_m, t_m, 1e-2, False)
             return admm.worker_admm_iterations(
                 backend, a, chol, y_m, t_m, z0r, mu=1e-2, eps_radius=6.0,
                 num_iters=K, policy=policy, trace_every=trace_every)
@@ -304,19 +308,28 @@ def test_compressed_gossip_and_hot_path_on_8_devices():
             worker, yw, tw, replicated=(z0,),
             key=("probe", trace_every), policy=policy)
 
+    def expect_hot(policy):
+        per_mix = analysis.expected_mix_collectives(policy, m)
+        return {op: K * c for op, c in per_mix.items()}
+
     pol = RingGossip(rounds=4, degree=2)
     hot = probe(pol, 0)["collective_counts"]
     traced = probe(pol, 1)["collective_counts"]
     # trace_every=0: ONLY the policy's ppermutes — K mixes x hops each,
     # and not a single reduction collective.
-    assert set(hot) == {"collective-permute"}, hot
-    assert hot["collective-permute"] == K * pol.hops_for(m), (
-        hot, pol.hops_for(m))
+    assert hot == expect_hot(pol), (hot, expect_hot(pol))
     # trace_every=1 adds the psum obj + psum primal + cerr pmean/pmax.
     assert traced.get("all-reduce", 0) == 4 * K, traced
 
     ex_hot = probe(ExactMean(), 0)["collective_counts"]
-    assert ex_hot == {"all-reduce": K}, ex_hot  # the mix itself, nothing else
+    assert ex_hot == expect_hot(ExactMean()), ex_hot
+
+    # The full wire contract (counts, payload widths, eq.-15 declaration
+    # arithmetic) holds for both policies on this mesh.
+    for p in (pol, ExactMean()):
+        found = analysis.check_wire_contract(
+            p, MeshBackend(wmesh, policy=p), num_iters=K, subject=str(p))
+        assert found == [], [f.render() for f in found]
 
     # And the final iterate is bit-identical with traces off.
     be = MeshBackend(wmesh)
@@ -414,7 +427,7 @@ def test_async_faults_and_elastic_resume_on_8_devices():
     def probe(policy):
         backend = MeshBackend(wmesh, policy=policy)
         def worker(y_m, t_m, z0r):
-            a, chol = admm._worker_stats_local(y_m, t_m, 1e-2, False)
+            a, chol, _ = admm._worker_stats_local(y_m, t_m, 1e-2, False)
             return admm.worker_admm_iterations(
                 backend, a, chol, y_m, t_m, z0r, mu=1e-2, eps_radius=6.0,
                 num_iters=K, policy=policy, trace_every=0)
@@ -426,6 +439,11 @@ def test_async_faults_and_elastic_resume_on_8_devices():
     ca = probe(anull)["collective_counts"]
     cg = probe(gser)["collective_counts"]
     assert ca == cg, (ca, cg)
+    # Both equal the spmdlint wire model's per-mix expectation x K.
+    from repro import analysis
+    want = {op: K * c
+            for op, c in analysis.expected_mix_collectives(anull, m).items()}
+    assert ca == want, (ca, want)
     ra = admm.admm_ridge_consensus(
         yw, tw, backend=MeshBackend(wmesh, policy=anull), **kw)
     rg = admm.admm_ridge_consensus(
@@ -583,3 +601,60 @@ def test_distributed_admm_on_8_devices():
     print("ADMM8_OK", rel)
     """)
     assert "ADMM8_OK" in out
+
+
+def test_spmdlint_wire_mutations_on_8_devices():
+    """The wire checker's acceptance mutations on a real M=8 mesh: a
+    policy that lies about its wire width trips ``wire-payload``, one
+    that misdeclares its eq.-15 scalar count trips ``wire-declaration``,
+    and the corresponding honest policies stay clean."""
+    out = run_subprocess("""
+    import dataclasses
+    from repro import analysis
+    from repro.core.backend import MeshBackend
+    from repro.core.policy import Gossip, parse_policy
+    from repro.launch.mesh import make_worker_mesh
+
+    m = 8
+    wmesh = make_worker_mesh(m)
+    backend = MeshBackend(wmesh)
+
+    # Clean tree first: representative grammar entries honor the
+    # declared budget end to end.
+    for spec in ("exact", "gossip:3:2", "gossip:2:wire=bf16", "quantized:8"):
+        pol = parse_policy(spec)
+        found = analysis.check_wire_contract(
+            pol, backend, num_iters=4, subject=spec)
+        assert found == [], (spec, [f.render() for f in found])
+
+    # Mutation 1: declare a 16-bit wire while shipping f32 payloads.
+    @dataclasses.dataclass(frozen=True)
+    class LyingGossip(Gossip):
+        mode_name = "lying-gossip"
+
+        @property
+        def wire_bits(self):
+            return 16
+
+    found = analysis.check_wire_contract(
+        LyingGossip(rounds=2), backend, num_iters=4, subject="lying")
+    assert "wire-payload" in {f.check for f in found}, [
+        f.render() for f in found]
+
+    # Mutation 2: comm_scalars drifts off the closed form.
+    @dataclasses.dataclass(frozen=True)
+    class Misdeclared(Gossip):
+        mode_name = "misdeclared-gossip"
+
+        def comm_scalars(self, *, scalars, num_consensus, num_workers=None):
+            return super().comm_scalars(
+                scalars=scalars, num_consensus=num_consensus,
+                num_workers=num_workers) + scalars
+
+    found = analysis.check_wire_contract(
+        Misdeclared(rounds=2), backend, num_iters=4, subject="misdeclared")
+    assert "wire-declaration" in {f.check for f in found}, [
+        f.render() for f in found]
+    print("SPMDLINT8_OK")
+    """)
+    assert "SPMDLINT8_OK" in out

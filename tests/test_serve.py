@@ -340,6 +340,13 @@ def test_two_buckets_cost_exactly_two_lowerings(artifact_dir):
     assert info["lowerings"] == 2, info
     assert sorted(info["buckets"]) == [2, 16]
     assert info["cache_hits"] == 8, info
+    # ServeEngine and ConsensusBackend share one normalized cache_info
+    # schema — the spmdlint retrace checker reads either.
+    from repro.analysis import CACHE_INFO_KEYS, check_cache_info_schema
+
+    assert set(CACHE_INFO_KEYS) <= set(info)
+    assert check_cache_info_schema(info, subject="serve-engine") == []
+    assert info["entries"] == len(info["keys"]) == 2
 
 
 def test_distinct_dtypes_get_distinct_executables(artifact_dir):

@@ -216,10 +216,26 @@ def test_lowering_stats_reports_compiled_program():
     stats = backend.lowering_stats(
         worker, yw, tw, replicated=(z0,), key="stats-probe"
     )
-    assert set(stats) == {"collective_counts", "collective_wire_bytes", "flops"}
+    assert set(stats) == {
+        "collective_counts", "collective_wire_bytes", "collective_by_type",
+        "flops",
+    }
     assert stats["flops"] > 0
-    # Shares the executable cache with run().
+    # Shares the executable cache with run() — and with lowering_texts,
+    # whose StableHLO is what repro.analysis.numerics lints.
     assert ("stats-probe", 2, 1, (), True, None) in backend._exec_cache
+    texts = backend.lowering_texts(
+        worker, yw, tw, replicated=(z0,), key="stats-probe"
+    )
+    assert set(texts) == {"stablehlo", "hlo"}
+    assert "stablehlo." in texts["stablehlo"]
+    assert len(backend._exec_cache) == 1  # same entry, no new executable
+
+    info = backend.cache_info()
+    from repro.analysis import check_cache_info_schema
+
+    assert not check_cache_info_schema(info, subject="backend")
+    assert info["entries"] == len(info["keys"]) == 1
 
 
 # ------------------------------------------------------------------
