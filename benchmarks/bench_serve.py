@@ -17,19 +17,25 @@ the same path ``launch/serve_dssfn.py`` drives.  Three sections land in
                p50/p99 per-request latency and samples/s throughput,
                the latency/throughput trade the max-wait knob buys;
   compile      whole-run lowering accounting: total lowerings vs
-               distinct (bucket, dtype) pairs touched (asserted equal).
+               distinct (bucket, dtype) pairs touched (asserted equal);
+  runtime      the hardened ServeRuntime on a ManualClock — virtual-time
+               drills, so every number is DETERMINISTIC (no scheduler
+               noise): a steady stream (gated virtual p99_ms) and a
+               seeded chaos+overload drill (shed rate, deadline-hit
+               rate, breaker open/close counts, p99 under overload).
 
 Regression gate: shares ``benchmarks.common.check_regression`` /
 ``gate_and_write`` with bench_mesh — ``--check-regression`` (or
 ``BENCH_CHECK_REGRESSION=1``) loads the committed JSON before
-overwriting and fails if any ``engine`` row's ``iter_ms`` or any
-``batcher`` row's ``p50_ms`` regressed more than
-``BENCH_REGRESSION_FACTOR`` (default +100% — sub-ms CPU timings drift
-tens of percent between back-to-back runs from burst-credit throttling
-alone, and the gate exists to catch order-of-magnitude breakage such as
-a recompile on the hot path).  p99 is reported but not
-gated: a single scheduler pause on a shared runner lands straight in a
-200-sample tail.
+overwriting and fails if any ``engine`` row's ``iter_ms``, any
+``batcher`` row's ``p50_ms``, or any ``runtime`` row's ``p99_ms``
+regressed more than ``BENCH_REGRESSION_FACTOR`` (default +100% —
+sub-ms CPU timings drift tens of percent between back-to-back runs from
+burst-credit throttling alone, and the gate exists to catch
+order-of-magnitude breakage such as a recompile on the hot path; the
+``runtime`` rows ride a virtual clock and only move when scheduling
+BEHAVIOR changes).  Wall-clock p99 is reported but not gated: a single
+scheduler pause on a shared runner lands straight in a 200-sample tail.
 
 Standalone::
 
@@ -55,7 +61,11 @@ INNER_CALLS = 10
 STREAM_REPEATS = 3
 
 DEFAULT_JSON = "BENCH_serve.json"
-GATE = (("engine", "iter_ms"), ("batcher", "p50_ms"))
+GATE = (
+    ("engine", "iter_ms"),
+    ("batcher", "p50_ms"),
+    ("runtime", "p99_ms"),
+)
 
 
 def _train_artifact(tmpdir: str):
@@ -89,6 +99,85 @@ def _train_artifact(tmpdir: str):
     path = os.path.join(tmpdir, "stack")
     export_artifact(path, result, source="benchmarks.bench_serve")
     return path
+
+
+def _runtime_section(artifact_path: str) -> dict:
+    """Two deterministic ManualClock drills through ServeRuntime.
+
+    ``steady``: a paced healthy stream — every request completes; the
+    virtual p50/p99 only move when scheduling behavior changes, which is
+    exactly what the gate should catch.  ``chaos``: seeded engine faults
+    + poison + a tight deadline + a small admission bound — shed rate,
+    deadline-hit rate, breaker transitions, and p99 under overload, all
+    bit-reproducible.  Both scenarios assert every handle terminal.
+    """
+    import numpy as np
+
+    from repro.serve import ChaosInjector, ManualClock, ServeEngine, ServeRuntime
+
+    def drill(*, requests, arrival_ms, deadline_ms, max_pending,
+              chaos=None, poison_every=0, seed=1):
+        engine = ServeEngine(artifact_path, buckets=(1, 8, 32))
+        clock = ManualClock()
+        runtime = ServeRuntime(
+            engine,
+            clock=clock,
+            max_batch=32,
+            max_pending_samples=max_pending,
+            default_deadline_s=deadline_ms * 1e-3,
+            max_retries=1,
+            backoff_base_s=1e-3,
+            breaker_threshold=2,
+            breaker_cooldown_s=0.05,
+            drain_timeout_s=10.0,
+            chaos=chaos,
+        ).start()
+        rng = np.random.default_rng(seed)
+        p_dim = engine.request_dim
+        handles = []
+        for i in range(requests):
+            x = rng.standard_normal((p_dim, 1)).astype(np.float32)
+            if poison_every and i % poison_every == poison_every // 2:
+                x[0, 0] = np.nan
+            handles.append(runtime.submit(x))
+            clock.advance(arrival_ms * 1e-3)
+            if (i + 1) % 4 == 0:
+                runtime.tick()
+        runtime.drain()
+        assert all(h.done() for h in handles), "non-terminal handle"
+        snap = runtime.snapshot()
+        lats = sorted(h.latency_s for h in handles if h.ok())
+        s = snap["stats"]
+        return {
+            "requests": requests,
+            "completed": s["completed"],
+            "p50_ms": round(_percentile(lats, 50) * 1e3, 4),
+            "p99_ms": round(_percentile(lats, 99) * 1e3, 4),
+            "shed_rate": round(snap["shed_rate"], 4),
+            "deadline_hit_rate": round(snap["deadline_hit_rate"], 4),
+            "breaker_opens": s["breaker_opens"],
+            "breaker_closes": s["breaker_closes"],
+            "quarantined": s["quarantined"],
+            "max_queue_depth": s["max_queue_depth"],
+        }
+
+    steady = drill(
+        requests=200, arrival_ms=0.5, deadline_ms=100.0, max_pending=256,
+    )
+    assert steady["completed"] == steady["requests"], steady
+    chaos = drill(
+        requests=400, arrival_ms=0.5, deadline_ms=20.0, max_pending=32,
+        chaos=ChaosInjector(seed=7, engine_fail=0.25, fail_burst=4),
+        poison_every=25,
+    )
+    # The drill must actually exercise the failure stack: faults opened
+    # (and re-closed) the breaker, overload shed, deadlines expired —
+    # deterministic under the fixed seeds, so assert, don't hope.
+    assert chaos["breaker_opens"] >= 1 and chaos["breaker_closes"] >= 1, chaos
+    assert 0.0 < chaos["shed_rate"] < 1.0, chaos
+    assert chaos["deadline_hit_rate"] > 0.0, chaos
+    assert chaos["completed"] > 0, chaos
+    return {"steady": steady, "chaos": chaos}
 
 
 def _percentile(sorted_vals, p):
@@ -196,9 +285,7 @@ def run(
                 "p99_ms": round(p99 * 1e3, 4),
                 "throughput_rps": round(thru, 1),
                 "batches": batcher.stats["batches"],
-                "mean_batch_size": round(
-                    float(np.mean(batcher.stats["batch_sizes"])), 2
-                ),
+                "mean_batch_size": round(batcher.mean_batch_size(), 2),
             }
             rows.append(csv_row(
                 f"serve_batcher_c{max_batch}", p50 * 1e6,
@@ -224,6 +311,19 @@ def run(
         ))
         if verbose:
             print(rows[-1], flush=True)
+
+        # ---- runtime: deterministic virtual-clock failure drills ------
+        report["runtime"] = {}
+        for name, row in _runtime_section(artifact).items():
+            report["runtime"][name] = row
+            rows.append(csv_row(
+                f"serve_runtime_{name}", row["p99_ms"] * 1e3,
+                f"p50_ms={row['p50_ms']};shed={row['shed_rate']};"
+                f"deadline={row['deadline_hit_rate']};"
+                f"opens={row['breaker_opens']}",
+            ))
+            if verbose:
+                print(rows[-1], flush=True)
 
         # Headline keys (CI schema check): the single-sample hot path.
         report["p50_ms"] = report["batcher"][f"coalesce_{COALESCE[0]}"]["p50_ms"]

@@ -3,8 +3,9 @@
 Lowers (never executes) consensus programs and checks them against the
 contracts the code declares: eq.-15 wire budgets (``wire``), executable
 cache-key completeness (``retrace``), accumulation dtypes and cholesky
-guarding (``numerics``), exchange-schedule algebra (``schedule``), and
-trace-safety source rules (``source``).  Every violation is a
+guarding (``numerics``), exchange-schedule algebra (``schedule``),
+trace-safety source rules (``source``), and serving bucket programs —
+zero collectives + dtype discipline (``serve``).  Every violation is a
 structured :class:`LintFinding`; ``repro.launch.lint_dssfn`` is the CLI
 and CI entry point, ``grammar.ALL_GRAMMAR`` the spec table it sweeps.
 """
@@ -23,6 +24,12 @@ from .retrace import (
     perturb_policy,
 )
 from .schedule import check_policy_schedules, check_schedule, schedule_matrix
+from .serve import (
+    check_serve_contract,
+    check_serve_surface,
+    check_serve_texts,
+    synthetic_serve_engine,
+)
 from .source import lint_source_text, lint_source_tree
 from .wire import (
     check_wire_contract,
@@ -41,6 +48,9 @@ __all__ = [
     "check_policy_cache_key",
     "check_policy_schedules",
     "check_schedule",
+    "check_serve_contract",
+    "check_serve_surface",
+    "check_serve_texts",
     "check_wire_contract",
     "expected_mix_collectives",
     "findings_to_json",
@@ -54,4 +64,5 @@ __all__ = [
     "perturb_policy",
     "render_report",
     "schedule_matrix",
+    "synthetic_serve_engine",
 ]

@@ -1,0 +1,163 @@
+"""Static contracts for the serving surface (ROADMAP open item).
+
+The serving engine promises two things spmdlint can check without ever
+executing a request:
+
+- **zero collectives** (``serve-collective``): a bucket program is a
+  single-device forward — features -> propagate stack -> readout.  Any
+  collective in its compiled HLO means training-side SPMD machinery
+  leaked into the serving path (a replicated mean, a stray psum from a
+  shared helper), which would deadlock or garbage on a 1-device server.
+- **dtype discipline** (``numerics-accum`` via the shared numerics
+  lint): the forward must accumulate in f32 even when weights ride in
+  half precision — the same cast-on-the-wire-only rule the consensus
+  wire formats follow, applied through the feature extractors and the
+  propagate dots.
+
+:func:`check_serve_contract` lowers every configured bucket via
+``ServeEngine.lowering_texts`` (compile-only — the probe must leave the
+executable cache and ``lowerings`` counter untouched, and that purity
+is itself checked), and verifies the engine's normalized
+``cache_info()`` schema.  :func:`synthetic_serve_engine` builds a tiny
+valid in-memory artifact so the lint needs no training run and no
+disk — ``lint_dssfn --checks serve`` finishes in seconds.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ssfn as ssfn_lib
+from repro.launch.hlo_analysis import analyze_module
+from repro.serve.engine import ServeEngine
+from repro.serve.export import ARTIFACT_VERSION, ServeArtifact
+
+from .findings import LintFinding
+from .numerics import lint_stablehlo_text
+from .retrace import check_cache_info_schema
+
+#: Feature specs the default serve lint sweeps: the identity path plus
+#: one of each extractor kind, covering every `_apply_features` branch.
+DEFAULT_FEATURE_SPECS = (None, "rff:24", "relu:24")
+
+
+def synthetic_serve_engine(
+    *,
+    num_classes: int = 4,
+    input_dim: int = 6,
+    num_layers: int = 2,
+    extra_nodes: int = 8,
+    features: str | None = None,
+    dtype=jnp.float32,
+    use_kernels: bool = False,
+    buckets: tuple[int, ...] = (1, 4),
+    seed: int = 0,
+) -> ServeEngine:
+    """A ServeEngine over a small synthetic (valid shape-chain) artifact:
+    O_0 (Q,P), R_l ((n-2Q), fan_in), O_l (Q,n) with n = 2Q + extra."""
+    rng = np.random.default_rng(seed)
+    q, p = num_classes, input_dim
+    n = 2 * q + extra_nodes
+    if features is not None:
+        from repro.serve.features import parse_features
+
+        p = parse_features(features).output_dim(input_dim)
+    o = [jnp.asarray(rng.standard_normal((q, p)), jnp.float32)]
+    r = []
+    fan_in = p
+    for _ in range(num_layers):
+        r.append(
+            jnp.asarray(rng.standard_normal((extra_nodes, fan_in)), jnp.float32)
+        )
+        fan_in = n
+        o.append(jnp.asarray(rng.standard_normal((q, n)), jnp.float32))
+    artifact = ServeArtifact(
+        params=ssfn_lib.SSFNParams(o=tuple(o), r=tuple(r)),
+        num_classes=q,
+        input_dim=p,
+        activation="relu",
+        features=features,
+        version=ARTIFACT_VERSION,
+        manifest={"source": "repro.analysis.serve synthetic"},
+    )
+    return ServeEngine(
+        artifact, buckets=buckets, use_kernels=use_kernels, dtype=dtype
+    )
+
+
+def check_serve_texts(
+    texts: dict[str, str], *, subject: str
+) -> list[LintFinding]:
+    """Lint one bucket program's lowering texts: zero collectives in the
+    compiled HLO, dtype discipline in the StableHLO."""
+    findings = lint_stablehlo_text(texts["stablehlo"], subject=subject)
+    counts = analyze_module(texts["hlo"]).collective_counts()
+    if counts:
+        findings.append(LintFinding(
+            check="serve-collective",
+            subject=subject,
+            message=(
+                f"serving bucket program contains collectives {counts} — "
+                "the serve forward is single-device; SPMD machinery "
+                "leaked into the request path"
+            ),
+            details={"collective_counts": counts},
+        ))
+    return findings
+
+
+def check_serve_contract(
+    engine: ServeEngine,
+    *,
+    subject: str,
+    buckets: tuple[int, ...] | None = None,
+    request_dim: int | None = None,
+) -> list[LintFinding]:
+    """Lower every requested bucket of ``engine`` and check the serving
+    contracts; also verifies the probe left the executable cache
+    untouched and the normalized ``cache_info()`` schema holds."""
+    findings: list[LintFinding] = []
+    lowerings_before = engine.lowerings
+    entries_before = engine.cache_info()["entries"]
+    for bucket in buckets or engine.buckets:
+        texts = engine.lowering_texts(bucket=bucket, request_dim=request_dim)
+        findings.extend(
+            check_serve_texts(texts, subject=f"{subject}[bucket={bucket}]")
+        )
+    info = engine.cache_info()
+    if (
+        engine.lowerings != lowerings_before
+        or info["entries"] != entries_before
+    ):
+        findings.append(LintFinding(
+            check="serve-probe-purity",
+            subject=subject,
+            message=(
+                "lowering_texts() polluted the engine's executable cache "
+                "— static probes must be compile-only and side-effect "
+                "free on the serving hot path"
+            ),
+            details={
+                "lowerings": (lowerings_before, engine.lowerings),
+                "entries": (entries_before, info["entries"]),
+            },
+        ))
+    findings.extend(check_cache_info_schema(info, subject=subject))
+    return findings
+
+
+def check_serve_surface(
+    *,
+    feature_specs: tuple[str | None, ...] = DEFAULT_FEATURE_SPECS,
+    buckets: tuple[int, ...] = (1, 4),
+) -> list[LintFinding]:
+    """The ``lint_dssfn --checks serve`` entry point: sweep synthetic
+    engines across the feature-extractor grammar and lint every bucket
+    program."""
+    findings: list[LintFinding] = []
+    for spec in feature_specs:
+        engine = synthetic_serve_engine(features=spec, buckets=buckets)
+        findings.extend(check_serve_contract(
+            engine, subject=f"serve:{spec or 'identity'}",
+        ))
+    return findings

@@ -18,6 +18,9 @@ Per spec the linter runs (lowering only — nothing executes):
 - ``numerics``  StableHLO accumulation-dtype + guarded-cholesky lint of
                 the lowered hot program
 - ``source``    AST rules over ``src/repro`` (once, not per spec)
+- ``serve``     ServeEngine bucket programs: zero collectives + dtype
+                discipline through the feature extractors (once, not
+                per spec; single-device — no mesh needed)
 
 Exit status is the number of findings (0 = clean), capped at 125.
 """
@@ -28,7 +31,7 @@ import os
 import sys
 from pathlib import Path
 
-CHECKS = ("schedule", "retrace", "wire", "numerics", "source")
+CHECKS = ("schedule", "retrace", "wire", "numerics", "source", "serve")
 
 
 def parse_args(argv=None):
@@ -152,6 +155,8 @@ def lint(args) -> list:
     if "source" in checks:
         src_root = Path(__file__).resolve().parents[2] / "repro"
         findings.extend(analysis.lint_source_tree(src_root))
+    if "serve" in checks:
+        findings.extend(analysis.check_serve_surface())
     return findings
 
 

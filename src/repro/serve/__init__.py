@@ -18,14 +18,35 @@ propagate path.  This package is the train→deploy story built on that:
   a continuous micro-batching admission queue (``submit``/``flush``,
   max-batch + max-wait-µs) that coalesces concurrent requests into
   bucketed batches and scatters results back per request;
+- :mod:`repro.serve.runtime` — :class:`~repro.serve.runtime.ServeRuntime`,
+  the clock-owning, failure-aware serving loop: bounded admission with
+  load shedding, per-request deadlines, poison isolation with bisect
+  quarantine, retry + circuit breaker with graceful degradation, a
+  lifecycle state machine with ``drain()``, and an injectable
+  :class:`~repro.serve.runtime.ManualClock` for deterministic drills;
+- :mod:`repro.serve.chaos` — :class:`~repro.serve.chaos.ChaosInjector`,
+  seeded fault injection (engine raises, latency spikes, clock skew,
+  artifact corruption) for CI chaos drills;
 - :mod:`repro.serve.features` — optional frozen feature extractors
   (seeded random maps) recorded in the artifact and applied at serve
   admission, so non-dSSFN featurizations deploy with the stack.
 
 ``launch/serve_dssfn.py`` is the CLI; ``benchmarks/bench_serve.py``
-tracks p50/p99 latency and throughput in ``BENCH_serve.json``.
+tracks p50/p99 latency, throughput, and failure-handling metrics in
+``BENCH_serve.json``.
 """
-from repro.serve.batcher import MicroBatcher, PendingResult
+from repro.serve.batcher import (
+    COMPLETED,
+    EXPIRED,
+    FAILED,
+    PENDING,
+    REJECTED,
+    TERMINAL_STATES,
+    MicroBatcher,
+    PendingResult,
+    RequestError,
+)
+from repro.serve.chaos import ChaosError, ChaosInjector, corrupt_artifact, parse_chaos
 from repro.serve.engine import ServeEngine
 from repro.serve.export import (
     ArtifactCorruptError,
@@ -36,17 +57,48 @@ from repro.serve.export import (
     load_artifact,
 )
 from repro.serve.features import FeatureExtractor, parse_features
+from repro.serve.runtime import (
+    DEGRADED,
+    DRAINING,
+    READY,
+    STARTING,
+    STOPPED,
+    ManualClock,
+    ServeRuntime,
+    TransientEngineError,
+    WallClock,
+)
 
 __all__ = [
     "ArtifactCorruptError",
+    "COMPLETED",
+    "ChaosError",
+    "ChaosInjector",
+    "DEGRADED",
+    "DRAINING",
+    "EXPIRED",
+    "FAILED",
     "FeatureExtractor",
+    "ManualClock",
     "MicroBatcher",
+    "PENDING",
     "PendingResult",
+    "READY",
+    "REJECTED",
+    "RequestError",
+    "STARTING",
+    "STOPPED",
     "ServeArtifact",
     "ServeEngine",
+    "ServeRuntime",
+    "TERMINAL_STATES",
+    "TransientEngineError",
+    "WallClock",
+    "corrupt_artifact",
     "export_artifact",
     "export_from_checkpoint",
     "is_valid_artifact",
     "load_artifact",
+    "parse_chaos",
     "parse_features",
 ]

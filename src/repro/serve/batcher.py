@@ -17,7 +17,8 @@ engine batches under two admission rules —
 ``flush()`` drains unconditionally (end of stream, or a service loop's
 timer tick — the driver owns the clock, which keeps this layer
 deterministic and synchronous: no threads to make the bit-exactness
-tests racy).
+tests racy).  :class:`repro.serve.runtime.ServeRuntime` is the layer
+that owns a clock, bounds the queue, and survives failures.
 
 Coalescing is FIFO: queued requests are packed in arrival order into
 batches of at most ``max_batch`` samples, each batch runs through the
@@ -35,30 +36,81 @@ import numpy as np
 
 from repro.serve.engine import ServeEngine
 
+#: Request lifecycle: one non-terminal state and four terminal ones.
+PENDING = "pending"
+COMPLETED = "completed"
+FAILED = "failed"
+REJECTED = "rejected"
+EXPIRED = "expired"
+TERMINAL_STATES = (COMPLETED, FAILED, REJECTED, EXPIRED)
+
+
+class RequestError(RuntimeError):
+    """A request reached a non-``completed`` terminal state; ``status``
+    says which, ``reason`` carries the error payload (an admission
+    reason string, or the engine exception's rendering)."""
+
+    def __init__(self, status: str, reason: str):
+        self.status = status
+        self.reason = reason
+        super().__init__(f"request {status}: {reason}")
+
+
+def size_bucket(n: int) -> int:
+    """Power-of-two histogram bucket for a batch size (smallest power of
+    two >= n) — a batch-size distribution in O(log max_batch) counters
+    instead of one float per batch forever."""
+    return 1 << max(0, int(n) - 1).bit_length()
+
 
 class PendingResult:
-    """A submitted request's future: ``done()`` / ``result()`` /
-    ``latency_s`` (submit -> results materialized)."""
+    """A submitted request's future.
 
-    __slots__ = ("num_samples", "submitted_at", "completed_at", "_value")
+    ``status`` is one of ``pending | completed | failed | rejected |
+    expired``; ``done()`` means terminal, ``ok()`` means completed.
+    ``result()`` returns the (Q, j) logits when completed and raises
+    :class:`RequestError` carrying the error payload for the failure
+    states.  ``latency_s`` is submit -> terminal, measured on whatever
+    clock the owning layer passes in (wall by default, a
+    ``ManualClock`` under the deterministic runtime tests).
+    """
 
-    def __init__(self, num_samples: int):
+    __slots__ = (
+        "num_samples", "submitted_at", "completed_at", "deadline",
+        "status", "error", "_value",
+    )
+
+    def __init__(self, num_samples: int, *, now: float | None = None):
         self.num_samples = num_samples
-        self.submitted_at = time.perf_counter()
+        self.submitted_at = time.perf_counter() if now is None else now
         self.completed_at: float | None = None
+        #: Absolute clock time this request must be served by (runtime-
+        #: managed; None = no deadline).
+        self.deadline: float | None = None
+        self.status = PENDING
+        #: Error payload for the failed/rejected/expired states.
+        self.error: str | None = None
         self._value = None
 
     def done(self) -> bool:
-        return self.completed_at is not None
+        """True once the request reached ANY terminal state."""
+        return self.status != PENDING
+
+    def ok(self) -> bool:
+        return self.status == COMPLETED
 
     def result(self):
-        """The (Q, j) logits for this request's samples."""
-        if not self.done():
+        """The (Q, j) logits for this request's samples.  Raises
+        :class:`RequestError` if the request failed / was rejected /
+        expired, and ``RuntimeError`` while still pending."""
+        if self.status == COMPLETED:
+            return self._value
+        if self.status == PENDING:
             raise RuntimeError(
                 "request not served yet: flush() the batcher (or submit "
                 "enough traffic to trip its admission rules)"
             )
-        return self._value
+        raise RequestError(self.status, self.error or "")
 
     @property
     def latency_s(self) -> float:
@@ -66,9 +118,31 @@ class PendingResult:
             raise RuntimeError("request not served yet")
         return self.completed_at - self.submitted_at
 
-    def _complete(self, value) -> None:
+    # -- terminal transitions (owning layer only) ----------------------
+    def _terminal(self, status: str, *, now: float | None = None) -> None:
+        if self.done():
+            raise RuntimeError(
+                f"request already terminal ({self.status}), cannot "
+                f"transition to {status}"
+            )
+        self.status = status
+        self.completed_at = time.perf_counter() if now is None else now
+
+    def _complete(self, value, *, now: float | None = None) -> None:
         self._value = value
-        self.completed_at = time.perf_counter()
+        self._terminal(COMPLETED, now=now)
+
+    def _fail(self, reason: str, *, now: float | None = None) -> None:
+        self.error = str(reason)
+        self._terminal(FAILED, now=now)
+
+    def _reject(self, reason: str, *, now: float | None = None) -> None:
+        self.error = str(reason)
+        self._terminal(REJECTED, now=now)
+
+    def _expire(self, reason: str, *, now: float | None = None) -> None:
+        self.error = str(reason)
+        self._terminal(EXPIRED, now=now)
 
 
 class MicroBatcher:
@@ -99,19 +173,43 @@ class MicroBatcher:
         self._queue: list[tuple[np.ndarray, PendingResult]] = []
         self._queued_samples = 0
         self._oldest_at: float | None = None
-        # Admission telemetry: what the bench reports.
+        # Admission telemetry: what the bench reports.  All counters are
+        # O(1) or O(log max_batch) in a service's lifetime — a
+        # long-running process must never accumulate per-batch state
+        # (the pre-runtime ``batch_sizes`` list grew one float per batch
+        # forever).  ``batch_samples`` / ``batches`` recover the mean
+        # batch size; ``batch_size_hist`` is the power-of-two histogram.
         self.stats = {
             "requests": 0,
             "samples": 0,
             "batches": 0,
             "flushes": 0,
-            "batch_sizes": [],
+            "batch_samples": 0,
+            "batch_size_hist": {},
         }
 
     # ------------------------------------------------------------------
     def pending(self) -> int:
         """Queued-but-unserved sample count."""
         return self._queued_samples
+
+    def mean_batch_size(self, *, since: dict | None = None) -> float:
+        """Mean coalesced batch size, optionally relative to an earlier
+        ``dict(batcher.stats)`` snapshot (the launchers' post-warmup
+        window)."""
+        batches = self.stats["batches"]
+        samples = self.stats["batch_samples"]
+        if since is not None:
+            batches -= since.get("batches", 0)
+            samples -= since.get("batch_samples", 0)
+        return samples / batches if batches else 0.0
+
+    def _record_batch(self, size: int) -> None:
+        self.stats["batches"] += 1
+        self.stats["batch_samples"] += size
+        bucket = size_bucket(size)
+        hist = self.stats["batch_size_hist"]
+        hist[bucket] = hist.get(bucket, 0) + 1
 
     def submit(self, x) -> PendingResult:
         """Enqueue one request (column-stacked ``(P, j)``, or ``(P,)``
@@ -154,26 +252,41 @@ class MicroBatcher:
         self._oldest_at = None
         self.stats["flushes"] += 1
 
-        batches: list[list[tuple[np.ndarray, PendingResult]]] = [[]]
-        size = 0
-        for item in queue:
-            j = item[0].shape[1]
-            if batches[-1] and size + j > self.max_batch:
-                batches.append([])
-                size = 0
-            batches[-1].append(item)
-            size += j
-
-        for batch in batches:
+        for batch in pack_fifo(queue, self.max_batch):
             xs = [x for x, _ in batch]
             xcat = xs[0] if len(xs) == 1 else np.concatenate(xs, axis=1)
             out = self.engine.forward(xcat)
             jax.block_until_ready(out)
-            self.stats["batches"] += 1
-            self.stats["batch_sizes"].append(xcat.shape[1])
-            start = 0
-            for x, handle in batch:
-                j = x.shape[1]
-                handle._complete(out[:, start:start + j])
-                start += j
+            self._record_batch(xcat.shape[1])
+            scatter_results(batch, out)
         return len(queue)
+
+
+def pack_fifo(
+    queue: list[tuple[np.ndarray, PendingResult]], max_batch: int
+) -> list[list[tuple[np.ndarray, PendingResult]]]:
+    """FIFO-pack queued requests into batches of <= ``max_batch``
+    samples (a request larger than ``max_batch`` gets its own batch;
+    the engine chunks it).  Shared by the batcher and the runtime."""
+    batches: list[list[tuple[np.ndarray, PendingResult]]] = [[]]
+    size = 0
+    for item in queue:
+        j = item[0].shape[1]
+        if batches[-1] and size + j > max_batch:
+            batches.append([])
+            size = 0
+        batches[-1].append(item)
+        size += j
+    return batches if batches[0] else []
+
+
+def scatter_results(
+    batch: list[tuple[np.ndarray, PendingResult]], out,
+    *, now: float | None = None,
+) -> None:
+    """Scatter a coalesced batch's result columns back to its handles."""
+    start = 0
+    for x, handle in batch:
+        j = x.shape[1]
+        handle._complete(out[:, start:start + j], now=now)
+        start += j

@@ -175,19 +175,61 @@ class ServeEngine:
         def forward_program(weights, o_last, feat_params, x):
             # Trace-time only: dispatch-cache hits never re-enter here.
             self.lowerings += 1
-            x = x.astype(self.dtype)
-            if self.extractor is not None:
-                x = self._apply_features(feat_params, x)
-            y = x
-            for w in weights:
-                y = self._propagate(w, y)
-            return o_last @ y
+            return self._forward_program(weights, o_last, feat_params, x)
 
         jitted = jax.jit(forward_program)
         self._exec_cache[key] = jitted
         while len(self._exec_cache) > _EXEC_CACHE_SIZE:
             self._exec_cache.popitem(last=False)
         return jitted
+
+    def _forward_program(self, weights, o_last, feat_params, x):
+        """The bucket program body (traceable, counter-free): features ->
+        propagate stack -> readout.  ``_executable`` jits it with a
+        lowering counter; ``lowering_texts`` lowers it standalone."""
+        x = x.astype(self.dtype)
+        if self.extractor is not None:
+            x = self._apply_features(feat_params, x)
+        y = x
+        for w in weights:
+            y = self._propagate(w, y)
+        return o_last @ y
+
+    def lowering_texts(
+        self,
+        *,
+        bucket: int | None = None,
+        dtype=None,
+        request_dim: int | None = None,
+    ) -> dict[str, str]:
+        """Lower (never execute) one bucket program and return its
+        ``{"stablehlo": ..., "hlo": ...}`` texts — the
+        ``repro.analysis`` probe surface, mirroring
+        ``ConsensusBackend.lowering_texts``.  Uses a standalone jit so
+        the executable cache and ``lowerings`` counter stay untouched."""
+        if bucket is None:
+            bucket = self.buckets[0]
+        if bucket not in self.buckets:
+            raise ValueError(
+                f"bucket {bucket} not in configured buckets {self.buckets}"
+            )
+        dtype = self.dtype if dtype is None else jnp.dtype(dtype)
+        if request_dim is None:
+            request_dim = (
+                self.request_dim
+                if self.request_dim is not None
+                else self.artifact.input_dim
+            )
+        self._materialize_features(request_dim)
+        weights, o_last = self._device_weights
+        x_spec = jax.ShapeDtypeStruct((request_dim, int(bucket)), dtype)
+        lowered = jax.jit(self._forward_program).lower(
+            weights, o_last, self._feat_params, x_spec
+        )
+        return {
+            "stablehlo": lowered.as_text(),
+            "hlo": lowered.compile().as_text(),
+        }
 
     def _propagate(self, w: Array, y: Array) -> Array:
         if self.use_kernels and _aligned(w.shape[0], w.shape[1], y.shape[1]):

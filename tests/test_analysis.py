@@ -377,3 +377,59 @@ def test_dssfn_exports_analysis_surface():
     assert dssfn.parse_spec("exact") == ExactMean()
     for name in ("ALL_GRAMMAR", "check_wire_contract", "LintFinding"):
         assert hasattr(analysis, name)
+
+
+# ---------------------------------------------------------------- serve
+
+def test_serve_surface_clean():
+    """The serve lint over the real engine across the feature grammar:
+    zero findings on a healthy tree (no collectives leak into the
+    single-device bucket programs, f32 accumulation throughout)."""
+    assert analysis.check_serve_surface(buckets=(1, 4)) == []
+
+
+def test_serve_lint_fires_on_bf16_engine():
+    """Mutation: a half-precision engine accumulates its propagate dots
+    in bf16 — the dtype-discipline rule must fire."""
+    engine = analysis.synthetic_serve_engine(
+        dtype=jnp.bfloat16, buckets=(1,)
+    )
+    findings = analysis.check_serve_contract(engine, subject="serve:bf16")
+    assert "numerics-accum" in {f.check for f in findings}
+
+
+def test_serve_lint_fires_on_collective():
+    """Mutation: a bucket program whose compiled HLO carries a
+    collective means SPMD machinery leaked into the request path."""
+    hlo = "\n".join([
+        "ENTRY %main (p: f32[8]) -> f32[8] {",
+        "  %p = f32[8]{0} parameter(0)",
+        "  ROOT %ar = f32[8]{0} all-reduce(f32[8]{0} %p), "
+        "replica_groups={{0,1,2,3}}, to_apply=%add",
+        "}",
+    ])
+    findings = analysis.check_serve_texts(
+        {"stablehlo": "", "hlo": hlo}, subject="serve:mutated"
+    )
+    assert [f.check for f in findings] == ["serve-collective"]
+    assert findings[0].details["collective_counts"] == {"all-reduce": 1}
+
+
+def test_serve_lint_probe_is_compile_only():
+    """The lint must not touch the serving executable cache: lowerings
+    and entries are unchanged after a full contract check."""
+    engine = analysis.synthetic_serve_engine(buckets=(1, 4))
+    x = jnp.zeros((engine.request_dim, 1))
+    engine.forward(x)                       # one real lowering
+    before = engine.cache_info()
+    findings = analysis.check_serve_contract(engine, subject="serve:purity")
+    assert findings == []
+    assert engine.cache_info() == before
+
+
+def test_serve_check_registered_in_cli():
+    from repro.launch import lint_dssfn
+
+    assert "serve" in lint_dssfn.CHECKS
+    args = lint_dssfn.parse_args(["--checks", "serve", "--spec", "exact"])
+    assert lint_dssfn.lint(args) == []

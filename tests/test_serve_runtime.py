@@ -1,0 +1,689 @@
+"""ServeRuntime: the failure-handling stack, deterministically drilled.
+
+Every behavior the hardened runtime claims is asserted here on a
+ManualClock (virtual time, bit-reproducible): bounded admission sheds
+overload with a reason; deadlines expire at admission or pre-flush and
+never burn engine time; poison is rejected at admission, and a
+data-dependent engine fault is bisected down to the single offending
+request while its coalesced neighbors still complete bit-exactly;
+transient faults retry with exponential backoff; consecutive failures
+open the circuit breaker (no engine calls while open, kernel path
+degraded to einsum) and a half-open probe re-closes it; ``reload()``
+of a corrupt artifact keeps serving last-good weights bit-identically;
+``drain()`` finishes the queue and stops clean.  The wall-clock timer
+thread is raced against concurrent submitters, and a full seeded chaos
+drill (faults + poison + overload) runs against stacks trained on both
+consensus backends, checking healthy results bit-for-bit against the
+unbatched ``ssfn.predict`` reference.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import dssfn
+from repro.analysis import synthetic_serve_engine
+from repro.core import ssfn
+from repro.serve import (
+    ChaosInjector,
+    ManualClock,
+    MicroBatcher,
+    PendingResult,
+    RequestError,
+    ServeEngine,
+    ServeRuntime,
+    TransientEngineError,
+    WallClock,
+    corrupt_artifact,
+    export_artifact,
+    parse_chaos,
+)
+
+P = 6          # synthetic engine input dim
+Q = 4          # synthetic engine classes
+
+
+def _engine(**kw):
+    kw.setdefault("buckets", (1, 4, 8))
+    return synthetic_serve_engine(**kw)
+
+
+def _runtime(engine=None, **kw):
+    engine = engine or _engine()
+    kw.setdefault("clock", ManualClock())
+    kw.setdefault("max_batch", 8)
+    kw.setdefault("max_pending_samples", 64)
+    kw.setdefault("backoff_base_s", 1e-3)
+    kw.setdefault("drain_timeout_s", 10.0)
+    return ServeRuntime(engine, **kw).start()
+
+
+def _req(rng, j=1):
+    return rng.standard_normal((P, j)).astype(np.float32)
+
+
+class WrappedEngine:
+    """Delegate-everything engine wrapper; subclasses override forward.
+
+    Attribute writes (e.g. the breaker's ``use_kernels = False``
+    degradation) land on the wrapper and shadow the inner engine — fine
+    for tests, which read back through the wrapper."""
+
+    def __init__(self, engine):
+        self._engine = engine
+
+    def __getattr__(self, name):
+        return getattr(self._engine, name)
+
+    def forward(self, x):
+        return self._engine.forward(x)
+
+
+class FlakyEngine(WrappedEngine):
+    """Fails the first ``fail_times`` forwards with a TRANSIENT error."""
+
+    def __init__(self, engine, fail_times):
+        super().__init__(engine)
+        self.fail_times = fail_times
+        self.calls = 0
+
+    def forward(self, x):
+        self.calls += 1
+        if self.calls <= self.fail_times:
+            raise TransientEngineError("injected transient fault")
+        return self._engine.forward(x)
+
+
+class TrapEngine(WrappedEngine):
+    """Raises a DATA-DEPENDENT error whenever a trap column (marked by
+    x[0] == TRAP) is present — the poison-bisection target."""
+
+    TRAP = 777.0
+
+    def __init__(self, engine):
+        super().__init__(engine)
+        self.calls = 0
+
+    def forward(self, x):
+        self.calls += 1
+        if np.any(np.asarray(x)[0] == self.TRAP):
+            raise ValueError("trap column in batch")
+        return self._engine.forward(x)
+
+
+class DeadEngine(WrappedEngine):
+    """Every forward fails transiently until ``revive()`` is called."""
+
+    def __init__(self, engine):
+        super().__init__(engine)
+        self.dead = True
+        self.calls = 0
+
+    def revive(self):
+        self.dead = False
+
+    def forward(self, x):
+        self.calls += 1
+        if self.dead:
+            raise TransientEngineError("engine down")
+        return self._engine.forward(x)
+
+
+# ---------------------------------------------------------------------------
+# Clocks + PendingResult terminal states
+# ---------------------------------------------------------------------------
+
+
+def test_manual_clock():
+    clock = ManualClock()
+    assert clock.now() == 0.0
+    clock.advance(1.5)
+    clock.sleep(0.5)                 # sleep advances instead of blocking
+    assert clock.now() == 2.0
+    with pytest.raises(ValueError, match="backwards"):
+        clock.advance(-1.0)
+
+
+def test_wall_clock_monotonic():
+    clock = WallClock()
+    a = clock.now()
+    clock.sleep(0.0)                 # no-op, must not raise
+    assert clock.now() >= a
+
+
+def test_pending_result_terminal_states():
+    h = PendingResult(1, now=10.0)
+    assert not h.done() and not h.ok()
+    with pytest.raises(RuntimeError, match="not served"):
+        h.result()
+    h._fail("engine exploded", now=12.5)
+    assert h.done() and not h.ok() and h.status == "failed"
+    assert h.latency_s == 2.5
+    with pytest.raises(RequestError, match="failed: engine exploded"):
+        h.result()
+    # terminal is terminal: no second transition
+    with pytest.raises(RuntimeError, match="already terminal"):
+        h._complete(np.zeros((2, 1)))
+
+    for method, status in (("_reject", "rejected"), ("_expire", "expired")):
+        h2 = PendingResult(1, now=0.0)
+        getattr(h2, method)("why", now=1.0)
+        assert h2.status == status and h2.error == "why"
+        with pytest.raises(RequestError, match=status):
+            h2.result()
+
+
+# ---------------------------------------------------------------------------
+# Batcher stats: bounded, not a per-batch list
+# ---------------------------------------------------------------------------
+
+
+def test_batcher_stats_bounded():
+    engine = _engine()
+    batcher = MicroBatcher(engine, max_batch=4, max_wait_us=1e9)
+    rng = np.random.default_rng(0)
+    for _ in range(64):
+        batcher.submit(_req(rng))
+    batcher.flush()
+    assert "batch_sizes" not in batcher.stats        # the leak is gone
+    assert batcher.stats["batches"] == 16
+    assert batcher.stats["batch_samples"] == 64
+    assert batcher.stats["batch_size_hist"] == {4: 16}
+    assert batcher.mean_batch_size() == 4.0
+    snap = dict(batcher.stats)
+    batcher.submit(_req(rng, 2))
+    batcher.flush()
+    assert batcher.mean_batch_size(since=snap) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# Admission: overload, poison, lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_submit_completes_bit_exact_vs_direct_forward():
+    # One bucket, so the coalesced serve and the direct reference hit
+    # the SAME padded program — bit-exactness is within-bucket (pad
+    # columns can't perturb real ones; distinct gemm shapes may round
+    # differently, which is why buckets matter to the comparison).
+    engine = _engine(buckets=(8,))
+    rt = _runtime(engine)
+    rng = np.random.default_rng(1)
+    xs = [_req(rng, j) for j in (1, 3, 2)]
+    handles = [rt.submit(x) for x in xs]
+    rt.flush()
+    for x, h in zip(xs, handles):
+        assert h.ok()
+        assert np.array_equal(
+            np.asarray(h.result()), np.asarray(engine.forward(x))
+        )
+
+
+def test_overload_rejected_with_reason():
+    rt = _runtime(max_batch=8, max_pending_samples=8, max_pending_requests=2)
+    rng = np.random.default_rng(0)
+    h1, h2 = rt.submit(_req(rng)), rt.submit(_req(rng))
+    h3 = rt.submit(_req(rng))                  # 3rd queued request: shed
+    assert not h1.done() and not h2.done()
+    assert h3.status == "rejected" and "overloaded" in h3.error
+    assert rt.stats["rejected_overload"] == 1
+    # sample bound: a 7-column request on top of 2 queued singles
+    h4 = rt.submit(_req(rng, 7))
+    assert h4.status == "rejected" and "overloaded" in h4.error
+    rt.flush()
+    assert h1.ok() and h2.ok()
+
+
+def test_poison_rejected_at_admission():
+    engine = _engine()
+    rt = _runtime(engine)
+    bad_nan = np.zeros((P, 1), np.float32)
+    bad_nan[0, 0] = np.nan
+    h = rt.submit(bad_nan)
+    assert h.status == "rejected" and "non-finite" in h.error
+    h = rt.submit(np.zeros((P + 1, 2), np.float32))
+    assert h.status == "rejected" and "feature rows" in h.error
+    h = rt.submit(np.zeros((P, 1, 1), np.float32))
+    assert h.status == "rejected" and "column-stacked" in h.error
+    assert rt.stats["rejected_poison"] == 3
+    assert rt.stats["engine_calls"] == 0       # poison never reaches it
+
+
+def test_lifecycle_gates_admission():
+    rt = _runtime()
+    with pytest.raises(RuntimeError, match="cannot start"):
+        rt.start()                              # double-start
+    rt.drain()
+    assert rt.state == "STOPPED"
+    h = rt.submit(np.zeros((P, 1), np.float32))
+    assert h.status == "rejected" and "STOPPED" in h.error
+    assert rt.stats["rejected_state"] == 1
+
+
+def test_stop_fails_pending():
+    rt = _runtime(max_batch=8)
+    h = rt.submit(np.zeros((P, 1), np.float32))
+    rt.stop()
+    assert h.status == "failed" and "stopped" in h.error
+    assert rt.state == "STOPPED"
+
+
+# ---------------------------------------------------------------------------
+# Deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_expired_at_admission():
+    rt = _runtime()
+    h = rt.submit(np.zeros((P, 1), np.float32), deadline_s=0.0)
+    assert h.status == "expired" and "at admission" in h.error
+
+
+def test_deadline_shed_pre_flush_never_served():
+    engine = _engine()
+    clock = ManualClock()
+    rt = _runtime(engine, clock=clock, max_batch=8, default_deadline_s=0.01)
+    h_dead = rt.submit(np.zeros((P, 1), np.float32))
+    clock.advance(0.02)                        # past the 10 ms deadline
+    h_live = rt.submit(np.ones((P, 1), np.float32))
+    rt.tick()
+    assert h_dead.status == "expired" and "pre-flush" in h_dead.error
+    assert h_live.ok()
+    # exactly one engine call served the surviving request
+    assert rt.stats["engine_calls"] == 1
+    assert rt.stats["expired"] == 1
+    assert rt.snapshot()["deadline_hit_rate"] == 0.5
+
+
+def test_per_request_deadline_overrides_default():
+    clock = ManualClock()
+    rt = _runtime(clock=clock, default_deadline_s=1.0)
+    h = rt.submit(np.zeros((P, 1), np.float32), deadline_s=0.005)
+    clock.advance(0.01)
+    rt.tick()
+    assert h.status == "expired"
+
+
+# ---------------------------------------------------------------------------
+# Retry, bisect quarantine, circuit breaker
+# ---------------------------------------------------------------------------
+
+
+def test_transient_fault_retries_with_backoff():
+    engine = FlakyEngine(_engine(), fail_times=2)
+    clock = ManualClock()
+    rt = _runtime(
+        engine, clock=clock, max_retries=2,
+        backoff_base_s=0.001, backoff_factor=2.0,
+    )
+    h = rt.submit(np.zeros((P, 1), np.float32))
+    t0 = clock.now()
+    rt.flush()
+    assert h.ok()
+    assert engine.calls == 3
+    assert rt.stats["retries"] == 2
+    assert clock.now() - t0 == pytest.approx(0.001 + 0.002)  # 1ms + 2ms
+
+
+def test_transient_exhaustion_fails_batch_without_bisect():
+    engine = FlakyEngine(_engine(), fail_times=100)
+    rt = _runtime(engine, max_retries=1, breaker_threshold=10)
+    handles = [rt.submit(np.zeros((P, 1), np.float32)) for _ in range(4)]
+    rt.flush()
+    assert all(h.status == "failed" for h in handles)
+    # ONE top-level batch, 2 attempts — no per-request bisection burn
+    assert engine.calls == 2
+    assert rt.stats["quarantined"] == 0
+
+
+def test_bisect_quarantines_poison_neighbors_complete():
+    inner = _engine(buckets=(8,))    # one bucket: bisected sub-batches
+    engine = TrapEngine(inner)       # run the same padded program
+    rt = _runtime(engine, max_retries=0, breaker_threshold=10, max_batch=8)
+    rng = np.random.default_rng(3)
+    xs = [_req(rng) for _ in range(5)]
+    trap = np.zeros((P, 1), np.float32)
+    trap[0, 0] = TrapEngine.TRAP
+    xs.insert(2, trap)
+    handles = [rt.submit(x) for x in xs]
+    rt.flush()
+    statuses = [h.status for h in handles]
+    assert statuses.count("failed") == 1 and statuses[2] == "failed"
+    assert "trap column" in handles[2].error
+    assert rt.stats["quarantined"] == 1
+    # the quarantined request's coalesced neighbors are served
+    # BIT-IDENTICALLY to an unbatched forward — bisection re-batches,
+    # and column-wise execution makes that invisible
+    for i, (x, h) in enumerate(zip(xs, handles)):
+        if i == 2:
+            continue
+        assert h.ok()
+        assert np.array_equal(
+            np.asarray(h.result()), np.asarray(inner.forward(x))
+        )
+    # a single poison request must NOT open the breaker: bisection
+    # probes don't count as top-level failures
+    assert rt.breaker == "closed"
+    assert rt.stats["breaker_opens"] == 0
+
+
+def test_breaker_opens_blocks_engine_then_recloses():
+    engine = DeadEngine(_engine())
+    clock = ManualClock()
+    rt = _runtime(
+        engine, clock=clock, max_retries=0,
+        breaker_threshold=2, breaker_cooldown_s=0.1, max_batch=8,
+    )
+    dead = []
+    for _ in range(2):                          # 2 consecutive failures
+        dead.append(rt.submit(np.zeros((P, 1), np.float32)))
+        rt.flush()
+    assert all(h.status == "failed" for h in dead)
+    assert rt.breaker == "open" and rt.state == "DEGRADED"
+    assert rt.stats["breaker_opens"] == 1
+
+    # while open: no engine burn — queued requests just wait
+    calls = engine.calls
+    h_wait = rt.submit(np.zeros((P, 1), np.float32))
+    rt.flush()
+    assert engine.calls == calls and not h_wait.done()
+
+    # cooldown -> half-open probe; still dead -> re-open
+    clock.advance(0.11)
+    rt.tick()
+    assert rt.breaker == "open"
+    assert rt.stats["breaker_opens"] == 2
+    assert h_wait.status == "failed"            # the probe batch failed
+
+    # revive; next cooldown's probe succeeds -> closed, READY again
+    engine.revive()
+    h_ok = rt.submit(np.ones((P, 1), np.float32))
+    clock.advance(0.11)
+    rt.tick()
+    assert h_ok.ok()
+    assert rt.breaker == "closed"
+    assert rt.stats["breaker_closes"] == 1
+    assert rt.state == "READY" or "kernels-disabled" in rt.degraded_reasons
+
+
+def test_breaker_open_degrades_kernel_path():
+    engine = DeadEngine(_engine(use_kernels=True))
+    rt = _runtime(engine, max_retries=0, breaker_threshold=1)
+    h = rt.submit(np.zeros((P, 1), np.float32))
+    rt.flush()
+    assert h.status == "failed"
+    assert rt.breaker == "open"
+    assert engine.use_kernels is False          # einsum fallback
+    assert "kernels-disabled" in rt.degraded_reasons
+    assert rt.state == "DEGRADED"
+
+
+def test_engine_success_resets_consecutive_failures():
+    engine = TrapEngine(_engine())
+    rt = _runtime(engine, max_retries=0, breaker_threshold=2, max_batch=1)
+    trap = np.zeros((P, 1), np.float32)
+    trap[0, 0] = TrapEngine.TRAP
+    for _ in range(3):                          # fail, succeed, fail, ...
+        assert rt.submit(trap).status == "failed"
+        assert rt.submit(np.ones((P, 1), np.float32)).ok()
+    assert rt.breaker == "closed"               # never 2 in a row
+
+
+# ---------------------------------------------------------------------------
+# Reload under fire
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def trained_artifact(tmp_path_factory):
+    key = jax.random.PRNGKey(0)
+    kx, kt = jax.random.split(key)
+    xw = jax.random.normal(kx, (4, 8, 16))
+    labels = jax.random.randint(kt, (4, 16), 0, 3)
+    tw = jax.nn.one_hot(labels, 3).transpose(0, 2, 1)
+    cfg = ssfn.SSFNConfig(
+        input_dim=8, num_classes=3, num_layers=2, hidden=20, admm_iters=30
+    )
+    result = dssfn.train(
+        dssfn.TrainSpec(cfg=cfg, backend="simulated", workers=4),
+        xw, tw, jax.random.PRNGKey(1),
+    )
+    path = str(tmp_path_factory.mktemp("runtime") / "stack")
+    export_artifact(path, result)
+    return path, result
+
+
+def test_reload_corrupt_keeps_last_good_bit_exact(trained_artifact, tmp_path):
+    path, result = trained_artifact
+    engine = ServeEngine(path, buckets=(4,))
+    rt = _runtime(engine, max_batch=4)
+    x = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(5), (8, 4)), np.float32
+    )
+    ref = np.asarray(ssfn.predict(result.params, jnp.asarray(x), 3))
+
+    h0 = rt.submit(x)
+    assert np.array_equal(np.asarray(h0.result()), ref)
+
+    # corrupt a copy on disk, hot-swap mid-traffic: reload must refuse,
+    # keep last-good weights, and serving stays BIT-identical
+    import shutil
+
+    bad = str(tmp_path / "bad")
+    shutil.copytree(path, bad)
+    corrupt_artifact(bad)
+    assert rt.reload(bad) is False
+    assert rt.stats["reload_failed"] == 1
+    assert "stale-weights" in rt.degraded_reasons
+    assert rt.state == "DEGRADED"
+    h1 = rt.submit(x)
+    assert np.array_equal(np.asarray(h1.result()), ref)
+
+    # a good artifact then clears the degradation
+    assert rt.reload(path) is True
+    assert rt.state == "READY"
+    h2 = rt.submit(x)
+    assert np.array_equal(np.asarray(h2.result()), ref)
+
+
+def test_reload_shape_mismatch_keeps_serving(trained_artifact, tmp_path):
+    path, _ = trained_artifact
+    engine = ServeEngine(path, buckets=(1,))
+    rt = _runtime(engine, max_batch=1)
+    other = _engine()                           # incompatible synthetic
+    assert rt.reload(other.artifact) is False
+    assert rt.state == "DEGRADED"
+    assert rt.submit(np.zeros((8, 1), np.float32)).ok()
+
+
+# ---------------------------------------------------------------------------
+# Drain + timer-thread safety
+# ---------------------------------------------------------------------------
+
+
+def test_drain_serves_queue_then_stops():
+    rt = _runtime(max_batch=8)
+    rng = np.random.default_rng(0)
+    handles = [rt.submit(_req(rng)) for _ in range(5)]
+    assert rt.pending() == 5
+    assert rt.drain() == 5
+    assert all(h.ok() for h in handles)
+    assert rt.pending() == 0 and rt.state == "STOPPED"
+    assert rt.drain() == 0                      # idempotent
+
+
+def test_drain_timeout_fails_leftovers():
+    engine = DeadEngine(_engine())
+    clock = ManualClock()
+    rt = _runtime(
+        engine, clock=clock, max_retries=0, breaker_threshold=1,
+        breaker_cooldown_s=0.05, drain_timeout_s=0.5, max_batch=8,
+    )
+    h = rt.submit(np.zeros((P, 1), np.float32))
+    rt.drain()
+    assert h.done()                             # failed, not stuck
+    assert rt.state == "STOPPED"
+    assert clock.now() <= 1.0                   # bounded by the timeout
+
+
+def test_timer_thread_vs_concurrent_submits():
+    """submit() from many threads racing the wall-clock timer flush:
+    no lost updates, every handle terminal+completed, results right."""
+    engine = _engine(buckets=(8,))
+    rt = ServeRuntime(
+        engine, max_batch=8, max_pending_samples=4096,
+        max_pending_requests=4096, flush_interval_s=0.001,
+    ).start()
+    assert rt._timer is not None and rt._timer.is_alive()
+    rng = np.random.default_rng(0)
+    xs = [_req(rng) for _ in range(200)]
+    handles = [None] * len(xs)
+
+    def worker(idxs):
+        for i in idxs:
+            handles[i] = rt.submit(xs[i])
+
+    threads = [
+        threading.Thread(target=worker, args=(range(k, len(xs), 4),))
+        for k in range(4)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    rt.drain()
+    assert rt._timer is None                    # timer joined on drain
+    assert all(h is not None and h.ok() for h in handles)
+    assert rt.stats["completed"] == len(xs)
+    for x, h in zip(xs[:8], handles[:8]):
+        assert np.array_equal(
+            np.asarray(h.result()), np.asarray(engine.forward(x))
+        )
+
+
+# ---------------------------------------------------------------------------
+# The full chaos drill (both training backends)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["simulated", "mesh"])
+def test_chaos_drill_end_to_end(backend, tmp_path):
+    """Seeded engine faults + poison + overload beyond the admission
+    bound: every handle terminal, healthy results bit-identical to the
+    unbatched ``ssfn.predict`` reference, breaker observed open AND
+    re-close, zero crashes, clean drain.  The mesh variant serves a
+    stack trained under shard_map (1-worker mesh; the same program an
+    M-device mesh lowers)."""
+    cfg = ssfn.SSFNConfig(
+        input_dim=8, num_classes=3, num_layers=2, hidden=20, admm_iters=30
+    )
+    key = jax.random.PRNGKey(0)
+    kx, kt = jax.random.split(key)
+    if backend == "mesh":
+        from repro.core.backend import MeshBackend
+        from repro.launch.mesh import make_worker_mesh
+
+        xw = jax.random.normal(kx, (1, 8, 64))
+        labels = jax.random.randint(kt, (1, 64), 0, 3)
+        tw = jax.nn.one_hot(labels, 3).transpose(0, 2, 1)
+        spec = dssfn.TrainSpec(cfg=cfg, backend=MeshBackend(make_worker_mesh(1)))
+    else:
+        xw = jax.random.normal(kx, (4, 8, 16))
+        labels = jax.random.randint(kt, (4, 16), 0, 3)
+        tw = jax.nn.one_hot(labels, 3).transpose(0, 2, 1)
+        spec = dssfn.TrainSpec(cfg=cfg, backend="simulated", workers=4)
+    result = dssfn.train(spec, xw, tw, jax.random.PRNGKey(1))
+    path = str(tmp_path / "stack")
+    export_artifact(path, result)
+
+    # One bucket: the unbatched reference forward below runs the same
+    # padded program as every coalesced (or bisected) drill batch, so
+    # healthy results compare bit-for-bit.
+    engine = ServeEngine(path, buckets=(32,))
+    clock = ManualClock()
+    chaos = parse_chaos("fail=0.25:burst=4:seed=7")
+    rt = ServeRuntime(
+        engine, clock=clock, max_batch=32, max_pending_samples=32,
+        default_deadline_s=0.02, max_retries=1, backoff_base_s=1e-3,
+        breaker_threshold=2, breaker_cooldown_s=0.05, drain_timeout_s=10.0,
+        chaos=chaos,
+    ).start()
+
+    rng = np.random.default_rng(11)
+    entries = []
+    for i in range(400):
+        x = rng.standard_normal((8, 1)).astype(np.float32)
+        if i % 25 == 12:
+            x = x.copy()
+            x[0, 0] = np.nan
+        entries.append((x, rt.submit(x)))
+        clock.advance(5e-4)
+        if (i + 1) % 4 == 0:
+            rt.tick()
+    rt.drain()
+
+    # every handle terminal, runtime stopped clean
+    assert all(h.done() for _, h in entries)
+    snap = rt.snapshot()
+    assert snap["state"] == "STOPPED"
+    assert snap["pending_requests"] == 0
+
+    s = snap["stats"]
+    # the drill actually exercised every path (seeded => deterministic)
+    assert s["breaker_opens"] >= 1 and s["breaker_closes"] >= 1
+    assert s["rejected_poison"] == 16
+    assert s["rejected_overload"] > 0
+    assert s["expired"] > 0
+    assert s["completed"] > 0
+    assert s["max_queue_depth"] <= 32           # the admission bound held
+    assert chaos.injected_failures > 0
+
+    # healthy completed results are BIT-identical to an unbatched
+    # single-request reference forward — chaos changes when/whether a
+    # request is served, never what it computes.  (The engine itself is
+    # bit-exact vs ssfn.predict at matching shapes — test_serve.py —
+    # so spot-check that too at the bucket width.)
+    n_checked = 0
+    for x, h in entries:
+        if h.ok():
+            ref = engine.forward(x)
+            assert np.array_equal(np.asarray(h.result()), np.asarray(ref))
+            n_checked += 1
+    assert n_checked == s["completed"] > 0
+    healthy = [x for x, _ in entries if np.isfinite(x).all()]
+    xfull = np.concatenate(healthy[:32], axis=1).astype(np.float32)
+    assert np.array_equal(
+        np.asarray(engine.forward(xfull)),
+        np.asarray(ssfn.predict(result.params, jnp.asarray(xfull), 3)),
+    )
+
+
+def test_chaos_injector_deterministic():
+    a, b = ChaosInjector(seed=3, engine_fail=0.5), ChaosInjector(
+        seed=3, engine_fail=0.5
+    )
+    clock = ManualClock()
+    outcomes = []
+    for inj in (a, b):
+        seq = []
+        for _ in range(50):
+            try:
+                inj.on_engine_call(clock)
+                seq.append(0)
+            except TransientEngineError:
+                seq.append(1)
+        outcomes.append(seq)
+    assert outcomes[0] == outcomes[1]
+    assert sum(outcomes[0]) > 0
+
+
+def test_parse_chaos_spec():
+    c = parse_chaos("fail=0.2:burst=3:spike=0.1:spike_s=0.02:seed=9")
+    assert c.engine_fail == 0.2 and c.fail_burst == 3
+    assert c.latency_spike == 0.1 and c.spike_s == 0.02 and c.seed == 9
+    with pytest.raises(ValueError, match="unknown chaos key"):
+        parse_chaos("frequency=9")
+    with pytest.raises(ValueError, match="key=value"):
+        parse_chaos("fail")
